@@ -1,0 +1,121 @@
+"""Paper Figures 2–6: distance computations vs relative error Ê_M (Eq. 6).
+
+For each dataset × K, runs BWKM (tracing the trade-off at every iteration,
+like the paper's per-iteration curve) against FKM / KM++ / KM++-init /
+KMC2 / MB{100,500,1000} / grid-RPKM, over ``--reps`` seeds, and emits one
+CSV row per (dataset, K, method): the mean distance count and mean relative
+error vs the best solution found.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import baselines, bwkm, metrics
+
+from benchmarks import datasets
+
+
+def run_methods(x, k, seed, *, mb_iters=150):
+    """One repetition: every method's (error, distances, seconds)."""
+    out = {}
+
+    def record(name, fn):
+        t0 = time.time()
+        c, d = fn(jax.random.PRNGKey(seed))
+        e = float(metrics.kmeans_error(x, c))
+        out[name] = {"error": e, "distances": float(d), "s": time.time() - t0}
+
+    t0 = time.time()
+    res = bwkm.fit(
+        jax.random.PRNGKey(seed), x, bwkm.BWKMConfig(k=k, max_iters=20),
+        trace_centroids=True,
+    )
+    e = float(metrics.kmeans_error(x, res.centroids))
+    out["BWKM"] = {
+        "error": e, "distances": res.distances, "s": time.time() - t0,
+        "trace": [
+            {
+                "distances": t["distances"],
+                "error": float(metrics.kmeans_error(x, t["centroids"])),
+            }
+            for t in res.trace
+        ],
+    }
+    record("FKM", lambda key: baselines.forgy_kmeans(key, x, k))
+    record("KM++", lambda key: baselines.kmeanspp_kmeans(key, x, k))
+    record("KM++_init", lambda key: baselines.kmeanspp_kmeans(key, x, k, init_only=True))
+    record("KMC2", lambda key: baselines.kmc2_kmeans(key, x, k, chain_length=100))
+    for b in (100, 500, 1000):
+        record(f"MB{b}", lambda key, b=b: baselines.minibatch_kmeans(
+            key, x, k, batch=b, iters=mb_iters))
+    record("RPKM", lambda key: baselines.grid_rpkm(key, x, k))
+    return out
+
+
+def bench(datasets_list, ks, reps, *, full=False):
+    rows = []
+    for ds in datasets_list:
+        x, scale = datasets.load(ds, full=full)
+        for k in ks:
+            per_method: dict[str, list] = {}
+            traces = []
+            for rep in range(reps):
+                r = run_methods(x, k, seed=1000 * rep + k)
+                for m, v in r.items():
+                    per_method.setdefault(m, []).append(v)
+                traces.append(r["BWKM"].get("trace", []))
+            errs = {m: float(np.mean([v["error"] for v in vs]))
+                    for m, vs in per_method.items()}
+            rel = metrics.relative_errors(errs)
+            for m, vs in per_method.items():
+                rows.append({
+                    "dataset": ds, "scale": scale, "k": k, "method": m,
+                    "n": int(x.shape[0]), "d": int(x.shape[1]),
+                    "distances": float(np.mean([v["distances"] for v in vs])),
+                    "error": errs[m],
+                    "rel_error": rel[m],
+                    "seconds": float(np.mean([v["s"] for v in vs])),
+                })
+            # per-iteration BWKM curve (the paper plots this trajectory)
+            if traces and traces[0]:
+                n_pts = min(len(t) for t in traces)
+                for i in range(n_pts):
+                    derr = float(np.mean([t[i]["error"] for t in traces]))
+                    rows.append({
+                        "dataset": ds, "scale": scale, "k": k,
+                        "method": f"BWKM_iter{i+1}",
+                        "n": int(x.shape[0]), "d": int(x.shape[1]),
+                        "distances": float(np.mean([t[i]["distances"] for t in traces])),
+                        "error": derr,
+                        "rel_error": (derr - min(errs.values())) / min(errs.values()),
+                        "seconds": 0.0,
+                    })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--datasets", nargs="+", default=list(datasets.SCALES))
+    ap.add_argument("--ks", nargs="+", type=int, default=[3, 9, 27])
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+    rows = bench(args.datasets, args.ks, args.reps, full=args.full)
+    print("name,us_per_call,derived")
+    for r in rows:
+        name = f"tradeoff_{r['dataset']}_K{r['k']}_{r['method']}"
+        print(
+            f"{name},{r['seconds'] * 1e6:.0f},"
+            f"distances={r['distances']:.3e};rel_err={r['rel_error']:.4f};"
+            f"E={r['error']:.6e};n={r['n']};d={r['d']};scale={r['scale']}"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    main()

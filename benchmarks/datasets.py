@@ -1,0 +1,27 @@
+"""Benchmark dataset registry: paper Table-1 stand-ins at CPU-sized scales.
+
+Scales keep each dataset's (n, d) *ratio structure* while bounding CPU time;
+EXPERIMENTS.md §Benchmarks records the scale next to every number. Use
+``--full`` for larger scales.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.data import paper_dataset
+
+# dataset -> (default scale, full scale)
+SCALES = {
+    "CIF": (0.30, 1.0),
+    "3RN": (0.08, 0.5),
+    "GS": (0.008, 0.05),
+    "SUSY": (0.006, 0.04),
+    "WUY": (0.002, 0.01),
+}
+
+
+def load(name: str, *, full: bool = False, seed: int = 0):
+    scale = SCALES[name][1 if full else 0]
+    x = paper_dataset(name, scale=scale, seed=seed)
+    return jnp.asarray(x), scale

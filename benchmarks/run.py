@@ -1,0 +1,39 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # default (CPU-sized)
+  PYTHONPATH=src python -m benchmarks.run --quick    # smoke subset
+  PYTHONPATH=src python -m benchmarks.run --full     # larger scales
+
+Emits ``name,us_per_call,derived`` CSV:
+  * tradeoff_*  — Figures 2–6 (distances vs relative error, per dataset × K)
+  * assign_*    — the assignment-kernel micro-bench
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks import bench_kernels, bench_tradeoff
+
+    if args.quick:
+        bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "--reps", "1"])
+    elif args.full:
+        # the paper's full grid: 5 datasets x K in {3,9,27} x repetitions
+        bench_tradeoff.main(["--full", "--ks", "3", "9", "27", "--reps", "3"])
+    else:
+        # default CPU budget: every figure (all 5 datasets) at K=9 + the
+        # K-sweep on the smallest dataset
+        bench_tradeoff.main(["--ks", "9", "--reps", "1"])
+        bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "27", "--reps", "1"])
+    bench_kernels.main([])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro — a multi-pod JAX training/inference framework built around the
+Boundary Weighted K-means algorithm (Capó, Pérez, Lozano 2018)."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+"""BWKM core: the paper's contribution as composable JAX modules."""
+
+from repro.core.bwkm import BWKMConfig, BWKMResult, fit
+from repro.core.lloyd import LloydResult
+from repro.core.partition import Partition, create_partition, split_blocks
+
+__all__ = [
+    "BWKMConfig",
+    "BWKMResult",
+    "fit",
+    "LloydResult",
+    "Partition",
+    "create_partition",
+    "split_blocks",
+]

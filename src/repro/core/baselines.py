@@ -1,0 +1,106 @@
+"""Baselines the paper compares against (Section 3).
+
+* FKM    — Lloyd initialised by Forgy.
+* KM++   — Lloyd initialised by K-means++ (and ``KM++_init``: seeding only).
+* KMC2   — Lloyd initialised by AFK-MC² (paper reference [3]).
+* MB b   — Sculley's Mini-batch K-means, b ∈ {100, 500, 1000} like the paper.
+* grid-RPKM — the predecessor method (paper reference [8]): weighted Lloyd
+  over a 2^{i·d}-cell grid sequence (cells realised sparsely by hashing the
+  occupied integer coordinates — the dense grid is never materialised).
+
+Every routine returns ``(centroids, distance_computations)`` so the
+trade-off benchmark can reproduce the paper's cost axis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeanspp
+from repro.core.lloyd import lloyd, weighted_lloyd
+
+__all__ = ["forgy_kmeans", "kmeanspp_kmeans", "kmc2_kmeans", "minibatch_kmeans", "grid_rpkm"]
+
+
+def _run_lloyd(x, c0, max_iters, epsilon, extra_distances):
+    res = lloyd(x, c0, max_iters=max_iters, epsilon=epsilon)
+    return res.centroids, float(res.distances) + extra_distances
+
+
+def forgy_kmeans(key, x, k, *, max_iters=100, epsilon=1e-4):
+    c0 = kmeanspp.forgy(key, x, k)
+    return _run_lloyd(x, c0, max_iters, epsilon, 0.0)
+
+
+def kmeanspp_kmeans(key, x, k, *, max_iters=100, epsilon=1e-4, init_only=False):
+    c0 = kmeanspp.kmeanspp(key, x, k)
+    seed_cost = float(x.shape[0] * k)  # K scans of the dataset (Section 1.2.1)
+    if init_only:
+        return c0, seed_cost
+    return _run_lloyd(x, c0, max_iters, epsilon, seed_cost)
+
+
+def kmc2_kmeans(key, x, k, *, chain_length=200, max_iters=100, epsilon=1e-4):
+    c0 = kmeanspp.afkmc2(key, x, k, chain_length=chain_length)
+    seed_cost = float(x.shape[0] + (k - 1) * chain_length * k)  # q(·) + chains
+    return _run_lloyd(x, c0, max_iters, epsilon, seed_cost)
+
+
+def minibatch_kmeans(key, x, k, *, batch=100, iters=500):
+    """Sculley (2010): per-centre learning rates 1/count, Forgy init."""
+    n = x.shape[0]
+    key, k0 = jax.random.split(key)
+    c = kmeanspp.forgy(k0, x, k)
+    counts = jnp.zeros((k,), jnp.float32)
+
+    def body(carry, sub):
+        c, counts = carry
+        idx = jax.random.randint(sub, (batch,), 0, n)
+        xb = x[idx]
+        from repro.kernels import ops as kops
+
+        assign, _, _ = kops.assign_top2(xb, c)
+        add = jax.ops.segment_sum(jnp.ones((batch,), jnp.float32), assign, num_segments=k)
+        counts = counts + add
+        # Sequential SGD within a batch ≈ batched per-centre average step.
+        sums = jax.ops.segment_sum(xb, assign, num_segments=k)
+        eta = jnp.where(counts > 0, add / jnp.maximum(counts, 1.0), 0.0)
+        target = sums / jnp.maximum(add, 1.0)[:, None]
+        c = jnp.where(
+            (add > 0)[:, None], (1.0 - eta)[:, None] * c + eta[:, None] * target, c
+        )
+        return (c, counts), None
+
+    subs = jax.random.split(key, iters)
+    (c, _), _ = jax.lax.scan(body, (c, counts), subs)
+    return c, float(batch * k * iters)
+
+
+def grid_rpkm(key, x, k, *, max_level=6, max_cells=200_000, max_iters=100, epsilon=1e-4):
+    """Grid-based RPKM (paper ref [8]): weighted Lloyd over the 2^{i·d} grid
+    sequence, warm-started across levels. Stops when the number of occupied
+    cells approaches n (no reduction left) or ``max_cells``."""
+    xh = np.asarray(x)
+    n, d = xh.shape
+    lo, hi = xh.min(axis=0), xh.max(axis=0)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    key, k0 = jax.random.split(key)
+    c = kmeanspp.forgy(k0, x, k)
+    distances = 0.0
+    for level in range(1, max_level + 1):
+        bins = 1 << level
+        q = np.minimum(((xh - lo) / span * bins).astype(np.int64), bins - 1)
+        _, inv, cnt = np.unique(q, axis=0, return_inverse=True, return_counts=True)
+        m = cnt.shape[0]
+        if m > min(max_cells, n // 2) and level > 1:
+            break
+        sums = np.zeros((m, d), np.float64)
+        np.add.at(sums, inv, xh)
+        reps = jnp.asarray(sums / cnt[:, None], jnp.float32)
+        w = jnp.asarray(cnt, jnp.float32)
+        res = weighted_lloyd(reps, w, c, max_iters=max_iters, epsilon=epsilon)
+        c = res.centroids
+        distances += float(res.distances)
+    return c, distances

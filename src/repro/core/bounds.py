@@ -1,0 +1,43 @@
+"""Theorem-backed bounds used as stopping criteria / diagnostics.
+
+* Theorem 2:   |E^D(C) − E^P(C)| ≤ Σ_B 2·|P|·ε(B)·(2·l_B + ‖P̄−c_P̄‖) + (|P|−1)/2·l_B²
+* Theorem A.1: grid-RPKM iteration i is a (K, ε)-coreset with
+               ε = 2^{1−i}·(1 + (n−1)/(n·2^{i+2}))·n·l²/OPT
+* Theorem A.4: ‖C − C'‖_∞ ≤ ε_w = sqrt(l² + ε²/n²) − l  ⇒  |E^D(C) − E^D(C')| ≤ ε
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as part_mod
+from repro.core.partition import Partition
+
+__all__ = ["thm2_gap_bound", "coreset_epsilon", "displacement_threshold"]
+
+
+def thm2_gap_bound(part: Partition, eps: jax.Array, d1: jax.Array) -> jax.Array:
+    """The Theorem-2 upper bound on |E^D(C) − E^P(C)|.
+
+    ``eps`` is the misassignment per block, ``d1`` the squared distance of
+    each representative to its closest centroid. O(|P|) given Lloyd outputs —
+    the paper proposes it as a stopping criterion (Section 2.4.2).
+    """
+    occupied = (part.count > 0) & part.active
+    l_b = part_mod.diagonals(part)
+    dist_rep = jnp.sqrt(jnp.maximum(d1, 0.0))
+    per_block = 2.0 * part.count * eps * (2.0 * l_b + dist_rep) + jnp.maximum(
+        part.count - 1.0, 0.0
+    ) / 2.0 * l_b**2
+    return jnp.sum(jnp.where(occupied, per_block, 0.0))
+
+
+def coreset_epsilon(i: int, n: int, l: float, opt: float) -> float:
+    """Theorem A.1's (K, ε)-coreset ε for the i-th grid-RPKM iteration."""
+    return (1.0 / 2 ** (i - 1)) * (1.0 + (n - 1) / (n * 2 ** (i + 2))) * n * l * l / opt
+
+
+def displacement_threshold(l: float, n: int, epsilon: float) -> float:
+    """Theorem A.4's ε_w: centroid displacement that guarantees Eq.-2 stopping."""
+    return float(jnp.sqrt(l * l + (epsilon * epsilon) / (n * n)) - l)

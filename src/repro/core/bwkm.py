@@ -1,0 +1,181 @@
+"""BWKM — Boundary Weighted K-means (paper Algorithm 5).
+
+Host-level driver alternating (i) weighted Lloyd over the current partition's
+representatives with (ii) ε-proportional boundary splitting. All inner steps
+are jitted static-shape programs over the fixed-capacity ``Partition``.
+
+Stopping criteria implemented (paper Section 2.4.2):
+  * ``boundary-empty``  — F = ∅: every block is well assigned; by Theorem 3
+                           the weighted fixed point is a Lloyd fixed point on D.
+  * ``distance-budget`` — the practical computational criterion.
+  * ``displacement``    — ‖C − C'‖_∞ ≤ ε_w (Theorem A.4).
+  * ``gap-bound``       — Theorem-2 bound below threshold.
+  * ``capacity`` / ``max-iters`` — resource guards.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bounds, init_partition, lloyd, misassignment as mis
+from repro.core import partition as part_mod
+from repro.core.kmeanspp import weighted_kmeanspp
+from repro.core.partition import Partition
+
+__all__ = ["BWKMConfig", "BWKMResult", "fit"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BWKMConfig:
+    """Knobs for Algorithm 5. ``m/m_prime/s/r`` default to the paper's values
+    (Section 2.4.1) when left as ``None``."""
+
+    k: int
+    m: int | None = None
+    m_prime: int | None = None
+    s: int | None = None
+    r: int = 5
+    capacity: int | None = None  # max blocks; default 64·m
+    max_iters: int = 30  # BWKM outer iterations
+    lloyd_max_iters: int = 100
+    lloyd_epsilon: float = 1e-4
+    distance_budget: float | None = None
+    displacement_epsilon: float | None = None  # Thm A.4's ε (on E^D scale)
+    gap_bound_threshold: float | None = None  # Thm 2 stopping threshold
+
+    def resolve(self, n: int, d: int) -> dict[str, Any]:
+        p = init_partition.default_params(n, self.k, d)
+        m = self.m or p["m"]
+        return {
+            "m": m,
+            "m_prime": self.m_prime or max(self.k + 1, m // 10),
+            "s": self.s or p["s"],
+            "r": self.r,
+            "capacity": self.capacity or max(64 * m, 4 * self.k),
+        }
+
+
+@dataclasses.dataclass
+class BWKMResult:
+    centroids: jax.Array
+    partition: Partition
+    iterations: int
+    distances: float  # total distance computations (paper's cost unit)
+    weighted_errors: list[float]  # per outer iteration
+    n_blocks: list[int]
+    boundary_sizes: list[int]
+    stop_reason: str
+    trace: list[dict]  # per-iteration snapshots for the trade-off benchmark
+
+
+def fit(
+    key: jax.Array,
+    x: jax.Array,
+    config: BWKMConfig,
+    *,
+    trace_centroids: bool = False,
+) -> BWKMResult:
+    """Run BWKM on ``x [n, d]``. Returns centroids and the audit trail."""
+    n, d = x.shape
+    p = config.resolve(n, d)
+    k = config.k
+
+    key, k_init, k_pp = jax.random.split(key, 3)
+    part = init_partition.build_initial_partition(
+        k_init, x, k, m=p["m"], m_prime=p["m_prime"], s=p["s"], r=p["r"],
+        capacity=p["capacity"],
+    )
+    # Init cost (Alg 2): r·s·(K-means++ over ≤m reps) + routing; we charge the
+    # dominant distance term r · s_rounds · m · K the paper bounds in Thm A.3.
+    distances = float(p["r"] * p["s"] * k + p["m"] * k)
+
+    reps, w = part_mod.representatives(part)
+    c = weighted_kmeanspp(k_pp, reps, w, k)
+    distances += float(int(part.n_blocks)) * k  # seeding distance cost
+
+    weighted_errors: list[float] = []
+    n_blocks: list[int] = []
+    boundary_sizes: list[int] = []
+    trace: list[dict] = []
+    stop_reason = "max-iters"
+
+    displacement_eps_w = None
+    if config.displacement_epsilon is not None:
+        l = float(
+            jnp.linalg.norm(jnp.max(x, axis=0) - jnp.min(x, axis=0))
+        )
+        displacement_eps_w = bounds.displacement_threshold(
+            l, n, config.displacement_epsilon
+        )
+
+    it = 0
+    for it in range(1, config.max_iters + 1):
+        res = lloyd.weighted_lloyd(
+            reps, w, c,
+            max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
+        )
+        c = res.centroids
+        distances += float(res.distances)
+        weighted_errors.append(float(res.error))
+        n_blocks.append(int(part.n_blocks))
+
+        eps = mis.misassignment(part, res.d1, res.d2)
+        f_size = int(jnp.sum(eps > 0))
+        boundary_sizes.append(f_size)
+        if trace_centroids:
+            trace.append(
+                {
+                    "iteration": it,
+                    "distances": distances,
+                    "centroids": jax.device_get(c),
+                    "n_blocks": int(part.n_blocks),
+                    "boundary": f_size,
+                }
+            )
+
+        # --- stopping criteria (Section 2.4.2) ---
+        if f_size == 0:
+            stop_reason = "boundary-empty"  # Theorem 3 applies
+            break
+        if config.distance_budget is not None and distances >= config.distance_budget:
+            stop_reason = "distance-budget"
+            break
+        if (
+            displacement_eps_w is not None
+            and it > 1
+            and float(res.max_shift) <= displacement_eps_w
+        ):
+            stop_reason = "displacement"
+            break
+        if config.gap_bound_threshold is not None:
+            gap = float(bounds.thm2_gap_bound(part, eps, res.d1))
+            if gap <= config.gap_bound_threshold:
+                stop_reason = "gap-bound"
+                break
+        free_rows = p["capacity"] - int(part.n_blocks)
+        if free_rows <= 0:
+            stop_reason = "capacity"
+            break
+
+        # --- Step 3: sample |F| blocks ∝ ε with replacement, split, retighten ---
+        key, k_cut = jax.random.split(key)
+        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
+        part = part_mod.split_blocks(part, x, chosen)
+        reps, w = part_mod.representatives(part)
+
+    return BWKMResult(
+        centroids=c,
+        partition=part,
+        iterations=it,
+        distances=distances,
+        weighted_errors=weighted_errors,
+        n_blocks=n_blocks,
+        boundary_sizes=boundary_sizes,
+        stop_reason=stop_reason,
+        trace=trace,
+    )

@@ -1,0 +1,66 @@
+"""Misassignment function, boundary, and boundary sampling (paper Section 2).
+
+Definition 3:  ε_{C,D}(B) = max{0, 2·l_B − δ_P(C)} with
+               δ_P(C) = ‖P̄ − c₂‖ − ‖P̄ − c₁‖  (second-closest minus closest).
+Definition 4:  F_{C,D}(B) = {B : ε > 0}  (the boundary).
+Theorem 1:     ε = 0 ⇒ the block is well assigned.
+
+All quantities come for free from the last weighted-Lloyd iteration: the
+top-2 *squared* distances of each representative (we take square roots
+here) and the tight-box diagonal of each block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partition as part_mod
+from repro.core.partition import Partition
+
+__all__ = ["misassignment", "boundary_mask", "sample_boundary", "cutting_probabilities"]
+
+
+def misassignment(part: Partition, d1: jax.Array, d2: jax.Array) -> jax.Array:
+    """ε_{C,D}(B) per block row, ``[M]`` (Definition 3).
+
+    ``d1, d2`` are the squared distances of each block *representative* to
+    its closest / second-closest centroid (from ``LloydResult``). Empty and
+    inactive rows get ε = 0 (the paper sets ε = 0 when B(D) = ∅).
+    """
+    occupied = (part.count > 0) & part.active
+    l_b = part_mod.diagonals(part)
+    delta = jnp.sqrt(jnp.maximum(d2, 0.0)) - jnp.sqrt(jnp.maximum(d1, 0.0))
+    eps = jnp.maximum(0.0, 2.0 * l_b - delta)
+    return jnp.where(occupied, eps, 0.0)
+
+
+def boundary_mask(eps: jax.Array) -> jax.Array:
+    """F_{C,D}(B): blocks that may not be well assigned (Definition 4)."""
+    return eps > 0.0
+
+
+def cutting_probabilities(eps_sum: jax.Array) -> jax.Array:
+    """Pr(B) ∝ accumulated misassignment (Eq. 5); zero-safe."""
+    total = jnp.sum(eps_sum)
+    return jnp.where(total > 0, eps_sum / jnp.maximum(total, 1e-30), 0.0)
+
+
+def sample_boundary(
+    key: jax.Array, eps: jax.Array, num_draws: jax.Array | int
+) -> jax.Array:
+    """Sample ``num_draws`` blocks with replacement ∝ ε and return the chosen
+    bool mask (Algorithm 5 Step 3: ``|F|`` draws ∝ ε; duplicates collapse, so
+    ``|A| ≤ |F|``).
+
+    ``num_draws`` may be a traced scalar; we draw a static ``M`` candidates
+    and keep the first ``num_draws`` (M ≥ |F| always since F ⊆ blocks).
+    """
+    m = eps.shape[0]
+    logits = jnp.where(eps > 0, jnp.log(jnp.maximum(eps, 1e-30)), -jnp.inf)
+    any_pos = jnp.any(eps > 0)
+    safe_logits = jnp.where(any_pos, logits, jnp.zeros_like(logits))
+    draws = jax.random.categorical(key, safe_logits[None, :].repeat(m, 0))  # [M]
+    keep = jnp.arange(m) < num_draws
+    chosen = jnp.zeros((m,), bool).at[draws].max(keep)
+    return chosen & (eps > 0) & any_pos

@@ -1,0 +1,161 @@
+"""Dataset partitions induced by spatial partitions (paper Definition 1).
+
+A partition lives in *fixed-capacity* arrays so every BWKM step is a static
+XLA program: ``max_blocks`` rows, a per-row active mask, and a per-point
+``block_id``. Splits consume preallocated rows (parent row becomes the left
+child, a fresh row the right child) and point routing is repaired with one
+vectorised gather + compare against the split plane — no tree traversal.
+
+Blocks are recorded by their *tight bounding boxes* (the paper recomputes the
+smallest bounding box of every subset when updating the partition in Step 3 of
+Algorithm 5, because the misassignment criterion is sharper on tight boxes).
+Splitting a tight box at the midpoint of its longest side is a valid
+refinement of the spatial partition: member points always lie inside the
+tight box.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Partition",
+    "create_partition",
+    "recompute_stats",
+    "split_blocks",
+    "representatives",
+    "diagonals",
+]
+
+_BIG = 3.0e38  # sentinel for min/max reductions (f32-safe, < inf to dodge nan arith)
+
+
+class Partition(NamedTuple):
+    """Fixed-capacity dataset partition state (a JAX pytree).
+
+    Attributes:
+      lo, hi:    ``[M, d]`` tight bounding box per block (lo > hi for empty).
+      psum:      ``[M, d]`` sum of member points.
+      count:     ``[M]`` number of member points (f32; these are the weights).
+      active:    ``[M]`` bool, whether the row is a live block.
+      block_id:  ``[n]`` int32, block membership of every point.
+      n_blocks:  scalar int32, number of live rows (rows ``[0, n_blocks)``).
+    """
+
+    lo: jax.Array
+    hi: jax.Array
+    psum: jax.Array
+    count: jax.Array
+    active: jax.Array
+    block_id: jax.Array
+    n_blocks: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.lo.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.lo.shape[1]
+
+
+def representatives(part: Partition) -> tuple[jax.Array, jax.Array]:
+    """Per-block centers of mass and weights ``(reps [M,d], w [M])``.
+
+    Empty/inactive rows get weight 0 and a representative parked at the
+    origin; every consumer must mask by ``w > 0``.
+    """
+    safe = jnp.maximum(part.count, 1.0)
+    occupied = (part.count > 0) & part.active
+    reps = jnp.where(occupied[:, None], part.psum / safe[:, None], 0.0)
+    w = jnp.where(occupied, part.count, 0.0)
+    return reps, w
+
+
+def diagonals(part: Partition) -> jax.Array:
+    """Length of the tight bounding-box diagonal per block, ``[M]`` (0 if empty)."""
+    ext = jnp.maximum(part.hi - part.lo, 0.0)
+    occupied = (part.count > 0) & part.active
+    return jnp.where(occupied, jnp.linalg.norm(ext, axis=-1), 0.0)
+
+
+def recompute_stats(part: Partition, x: jax.Array) -> Partition:
+    """Recompute (psum, count, lo, hi) for all rows from point memberships.
+
+    ``O(n·d)`` segment reductions — the cost the paper assigns to the
+    partition-update step (Section 2.3.1).
+    """
+    m = part.capacity
+    bid = part.block_id
+    psum = jax.ops.segment_sum(x, bid, num_segments=m)
+    count = jax.ops.segment_sum(jnp.ones(x.shape[0], jnp.float32), bid, num_segments=m)
+    lo = jax.ops.segment_min(x, bid, num_segments=m)
+    hi = jax.ops.segment_max(x, bid, num_segments=m)
+    empty = count <= 0
+    lo = jnp.where(empty[:, None], _BIG, lo)
+    hi = jnp.where(empty[:, None], -_BIG, hi)
+    return part._replace(psum=psum, count=count, lo=lo, hi=hi)
+
+
+def create_partition(x: jax.Array, capacity: int) -> Partition:
+    """The trivial one-block partition: the smallest bounding box of ``D``."""
+    n, d = x.shape
+    part = Partition(
+        lo=jnp.full((capacity, d), _BIG, jnp.float32),
+        hi=jnp.full((capacity, d), -_BIG, jnp.float32),
+        psum=jnp.zeros((capacity, d), jnp.float32),
+        count=jnp.zeros((capacity,), jnp.float32),
+        active=jnp.zeros((capacity,), bool).at[0].set(True),
+        block_id=jnp.zeros((n,), jnp.int32),
+        n_blocks=jnp.asarray(1, jnp.int32),
+    )
+    return recompute_stats(part, x)
+
+
+def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
+    """Split every block in ``chosen`` (bool mask ``[M]``) at the midpoint of
+    its longest side (paper Section 2.3: "divided in the middle point of its
+    largest side ... replaced ... to produce the new thinner spatial
+    partition"), then re-tighten all bounding boxes.
+
+    Blocks whose right child would exceed capacity are silently not split
+    (callers bound ``sum(chosen)`` against free rows; this is the safety net).
+    """
+    m = part.capacity
+    chosen = chosen & part.active & (part.count > 1)  # singleton blocks can't split
+
+    # Allocate rows for right children: rank via cumsum over chosen.
+    rank = jnp.cumsum(chosen.astype(jnp.int32)) - 1
+    right_row = part.n_blocks + rank  # [M]
+    fits = chosen & (right_row < m)
+    right_row = jnp.where(fits, right_row, 0)
+
+    ext = jnp.maximum(part.hi - part.lo, 0.0)
+    axis = jnp.argmax(ext, axis=-1).astype(jnp.int32)  # [M]
+    mid = 0.5 * (
+        jnp.take_along_axis(part.lo, axis[:, None], axis=1)[:, 0]
+        + jnp.take_along_axis(part.hi, axis[:, None], axis=1)[:, 0]
+    )  # [M]
+
+    # Route points: member of a split block goes right iff x[axis] > mid.
+    bid = part.block_id
+    p_split = fits[bid]  # [n]
+    p_axis = axis[bid]
+    p_mid = mid[bid]
+    p_val = jnp.take_along_axis(x, p_axis[:, None].astype(jnp.int32), axis=1)[:, 0]
+    goes_right = p_split & (p_val > p_mid)
+    new_bid = jnp.where(goes_right, right_row[bid].astype(jnp.int32), bid)
+
+    n_new = jnp.sum(fits.astype(jnp.int32))
+    active = part.active | (
+        (jnp.arange(m) >= part.n_blocks) & (jnp.arange(m) < part.n_blocks + n_new)
+    )
+    out = part._replace(
+        block_id=new_bid,
+        active=active,
+        n_blocks=part.n_blocks + n_new,
+    )
+    return recompute_stats(out, x)

@@ -1,0 +1,7 @@
+"""Data pipeline: deterministic, resumable synthetic generators — GMM point
+streams mirroring the paper's datasets and token streams for the LM cells."""
+
+from repro.data.synthetic import PAPER_DATASETS, gmm_dataset, paper_dataset
+from repro.data.tokens import TokenStream
+
+__all__ = ["PAPER_DATASETS", "gmm_dataset", "paper_dataset", "TokenStream"]

@@ -1,0 +1,2 @@
+"""Distribution substrate: mesh context, logical sharding rules, and the
+shard_map-based distributed clustering engine."""

@@ -1,0 +1,329 @@
+"""Distributed BWKM: the paper's algorithm on the production mesh.
+
+Layout (DESIGN.md §3/§5):
+  * points      ``x [n, d]``   — rows over ``(pod, data)``, features
+                                  optionally over ``model`` (distances
+                                  decompose additively over d → one psum).
+  * block stats ``[M, ·]``     — partial per shard, ``psum`` over the data
+                                  axes; exact, since sums/counts/min/max are
+                                  associative-commutative.
+  * representatives / centroids — tiny (M ≤ thousands): replicated compute,
+                                  identical across shards by construction
+                                  (same psum'd inputs + same PRNG key).
+
+Points never leave their shard; per-iteration traffic is O(M·d + M·K)
+statistics. The host driver mirrors ``core.bwkm.fit`` step for step, so the
+algorithm is the paper's Algorithm 5 verbatim.
+
+Fault tolerance: the driver state (centroids, block boxes, iteration,
+distance budget) is checkpointed via ``train.checkpoint`` every round;
+``block_id`` is *not* checkpointed — it is recomputed from the block boxes
+in O(n·log M) on restart (cheaper than storing n int32s, and correct on any
+mesh shape → elastic restart).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import bwkm as core_bwkm
+from repro.core import misassignment as mis
+from repro.core import partition as part_mod
+from repro.core.kmeanspp import weighted_kmeanspp
+from repro.core.lloyd import weighted_lloyd
+from repro.core.partition import Partition
+from repro.distributed import sharding as sh
+
+__all__ = ["shard_points", "dist_recompute_stats", "dist_route_points",
+           "dist_assign_step", "fit"]
+
+_BIG = 3.0e38
+
+
+def _data_axes():
+    return sh.batch_axes()
+
+
+def shard_points(x: jax.Array) -> jax.Array:
+    """Place the dataset: rows over (pod, data), features over model."""
+    mesh = sh.current_mesh()
+    if mesh is None:
+        return x
+    return jax.device_put(
+        x, NamedSharding(mesh, sh.logical_to_spec(("batch", "tensor"), x.shape))
+    )
+
+
+# ------------------------------------------------------------- shard_map ops
+def _stats_body(x_loc, bid_loc, *, m):
+    ones = jnp.ones(x_loc.shape[0], jnp.float32)
+    psum_ = jax.ops.segment_sum(x_loc, bid_loc, num_segments=m)
+    count = jax.ops.segment_sum(ones, bid_loc, num_segments=m)
+    lo = jax.ops.segment_min(x_loc, bid_loc, num_segments=m)
+    hi = jax.ops.segment_max(x_loc, bid_loc, num_segments=m)
+    axes = _data_axes()
+    psum_ = jax.lax.psum(psum_, axes)
+    count = jax.lax.psum(count, axes)
+    lo = jax.lax.pmin(lo, axes)
+    hi = jax.lax.pmax(hi, axes)
+    empty = count <= 0
+    lo = jnp.where(empty[:, None], _BIG, lo)
+    hi = jnp.where(empty[:, None], -_BIG, hi)
+    return psum_, count, lo, hi
+
+
+def dist_recompute_stats(part: Partition, x: jax.Array, bid: jax.Array) -> Partition:
+    """psum-combined (Σx, count, lo, hi) over sharded points."""
+    mesh = sh.current_mesh()
+    m = part.capacity
+    if mesh is None:
+        return part_mod.recompute_stats(part._replace(block_id=bid), x)
+    n, d = x.shape
+    row_spec = sh.logical_to_spec(("batch", "tensor"), (n, d))
+    bid_spec = sh.logical_to_spec(("batch",), (n,))
+    fn = jax.shard_map(
+        partial(_stats_body, m=m),
+        mesh=mesh,
+        in_specs=(row_spec, bid_spec),
+        out_specs=(
+            P(None, row_spec[1]), P(None), P(None, row_spec[1]), P(None, row_spec[1]),
+        ),
+        check_vma=False,
+    )
+    psum_, count, lo, hi = fn(x, bid)
+    return part._replace(psum=psum_, count=count, lo=lo, hi=hi, block_id=bid)
+
+
+def _route_body(x_loc, bid_loc, fits, axis, mid, right_row):
+    p_split = fits[bid_loc]
+    p_axis = axis[bid_loc]
+    p_mid = mid[bid_loc]
+    p_val = jnp.take_along_axis(x_loc, p_axis[:, None], axis=1)[:, 0]
+    goes_right = p_split & (p_val > p_mid)
+    return jnp.where(goes_right, right_row[bid_loc].astype(jnp.int32), bid_loc)
+
+
+def dist_route_points(
+    x: jax.Array, bid: jax.Array, fits, axis, mid, right_row
+) -> jax.Array:
+    """Repair local block ids after a split round (pure local gather+compare).
+
+    Feature sharding caveat: the split coordinate lives on one model shard;
+    we broadcast the needed column via the replicated-stat path (axis/mid are
+    replicated; x columns are gathered only for the split axes).
+    """
+    mesh = sh.current_mesh()
+    if mesh is None:
+        return part_mod.split_blocks.__wrapped__ if False else _route_body(
+            x, bid, fits, axis, mid, right_row
+        )
+    n, d = x.shape
+    row_spec = sh.logical_to_spec(("batch", None), (n, d))  # gather features
+    bid_spec = sh.logical_to_spec(("batch",), (n,))
+    fn = jax.shard_map(
+        _route_body,
+        mesh=mesh,
+        in_specs=(row_spec, bid_spec, P(None), P(None), P(None), P(None)),
+        out_specs=bid_spec,
+        check_vma=False,
+    )
+    return fn(x, bid, fits, axis, mid, right_row)
+
+
+def _assign_body(x_loc, c, w_loc, *, k):
+    """One full-dataset assignment + partial cluster stats (for the
+    distributed Lloyd baseline / final refinement)."""
+    from repro.kernels import ref
+
+    assign, d1, _ = ref.assign_top2(x_loc, c)
+    wx = x_loc * w_loc[:, None]
+    sums = jax.ops.segment_sum(wx, assign, num_segments=k)
+    counts = jax.ops.segment_sum(w_loc, assign, num_segments=k)
+    err = jnp.sum(w_loc * d1)
+    axes = _data_axes()
+    return (
+        jax.lax.psum(sums, axes),
+        jax.lax.psum(counts, axes),
+        jax.lax.psum(err, axes),
+        assign,
+    )
+
+
+def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
+    """Distributed Lloyd iteration over the full dataset (the scalable
+    baseline the paper compares against): returns (new_c, error)."""
+    mesh = sh.current_mesh()
+    n, d = x.shape
+    k = c.shape[0]
+    w = jnp.ones(n, jnp.float32) if w is None else w
+    if mesh is None:
+        sums, counts, err, _ = _assign_body(x, c, w, k=k)
+    else:
+        row_spec = sh.logical_to_spec(("batch", None), (n, d))
+        fn = jax.shard_map(
+            partial(_assign_body, k=k),
+            mesh=mesh,
+            in_specs=(row_spec, P(None, None), sh.logical_to_spec(("batch",), (n,))),
+            out_specs=(P(None, None), P(None), P(), sh.logical_to_spec(("batch",), (n,))),
+            check_vma=False,
+        )
+        sums, counts, err, _ = fn(x, c, w)
+    new_c = jnp.where(
+        (counts > 0)[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], c
+    )
+    return new_c, err
+
+
+# ------------------------------------------------------------------ driver
+def fit(
+    key: jax.Array,
+    x: jax.Array,
+    config: core_bwkm.BWKMConfig,
+    *,
+    checkpoint_dir: str | None = None,
+) -> core_bwkm.BWKMResult:
+    """Distributed Algorithm 5. ``x`` should be placed with shard_points.
+
+    Matches core_bwkm.fit semantics; representatives/centroids are computed
+    replicated from psum'd statistics, so the trajectory is the single-host
+    one up to psum summation order.
+    """
+    n, d = x.shape
+    p = config.resolve(n, d)
+    k = config.k
+    mesh = sh.current_mesh()
+
+    # --- initial partition: Algorithm 2 on a host-gathered SAMPLE (the
+    # paper's init only ever touches O(r·s) points; gathering the sample is
+    # O(s·d), not O(n·d)), then broadcast boxes + distributed re-route.
+    key, k_init, k_pp, k_s = jax.random.split(key, 4)
+    s_init = min(n, max(p["s"] * p["r"] * 4, 4 * p["m"]))
+    idx = jax.random.choice(k_s, n, shape=(s_init,), replace=False)
+    x_sample = jax.device_get(x[jnp.sort(idx)])  # gather once, small
+    sample_part = (
+        core_bwkm.init_partition.build_initial_partition(
+            k_init, jnp.asarray(x_sample), k,
+            m=p["m"], m_prime=p["m_prime"], s=min(p["s"], s_init), r=p["r"],
+            capacity=p["capacity"],
+        )
+    )
+    # route the full dataset through the sample-built boxes: nearest box by
+    # containment (boxes partition the sample's bounding box; clip points)
+    bid = _route_into_boxes(x, sample_part)
+    part = dist_recompute_stats(sample_part, x, bid)
+
+    reps, w = part_mod.representatives(part)
+    c = weighted_kmeanspp(k_pp, reps, w, k)
+    distances = float(p["r"] * p["s"] * k + p["m"] * k + int(part.n_blocks) * k)
+
+    weighted_errors: list[float] = []
+    n_blocks: list[int] = []
+    boundary_sizes: list[int] = []
+    stop_reason = "max-iters"
+    it = 0
+    for it in range(1, config.max_iters + 1):
+        res = weighted_lloyd(
+            reps, w, c, max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon
+        )
+        c = res.centroids
+        distances += float(res.distances)
+        weighted_errors.append(float(res.error))
+        n_blocks.append(int(part.n_blocks))
+
+        eps = mis.misassignment(part, res.d1, res.d2)
+        f_size = int(jnp.sum(eps > 0))
+        boundary_sizes.append(f_size)
+
+        if checkpoint_dir is not None:
+            from repro.train import checkpoint as ckpt
+
+            ckpt.save(
+                checkpoint_dir, it,
+                {"centroids": c, "boxes": {"lo": part.lo, "hi": part.hi,
+                                           "active": part.active,
+                                           "n_blocks": part.n_blocks}},
+                extra={"distances": distances, "iteration": it},
+            )
+
+        if f_size == 0:
+            stop_reason = "boundary-empty"
+            break
+        if config.distance_budget is not None and distances >= config.distance_budget:
+            stop_reason = "distance-budget"
+            break
+        free_rows = p["capacity"] - int(part.n_blocks)
+        if free_rows <= 0:
+            stop_reason = "capacity"
+            break
+
+        key, k_cut = jax.random.split(key)
+        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
+        part, bid = _dist_split(part, x, bid, chosen)
+        reps, w = part_mod.representatives(part)
+
+    return core_bwkm.BWKMResult(
+        centroids=c,
+        partition=part,
+        iterations=it,
+        distances=distances,
+        weighted_errors=weighted_errors,
+        n_blocks=n_blocks,
+        boundary_sizes=boundary_sizes,
+        stop_reason=stop_reason,
+        trace=[],
+    )
+
+
+def _dist_split(part: Partition, x, bid, chosen):
+    """split_blocks with distributed routing + stats."""
+    m = part.capacity
+    chosen = chosen & part.active & (part.count > 1)
+    rank = jnp.cumsum(chosen.astype(jnp.int32)) - 1
+    right_row = part.n_blocks + rank
+    fits = chosen & (right_row < m)
+    right_row = jnp.where(fits, right_row, 0)
+    ext = jnp.maximum(part.hi - part.lo, 0.0)
+    axis = jnp.argmax(ext, axis=-1).astype(jnp.int32)
+    mid = 0.5 * (
+        jnp.take_along_axis(part.lo, axis[:, None], axis=1)[:, 0]
+        + jnp.take_along_axis(part.hi, axis[:, None], axis=1)[:, 0]
+    )
+    new_bid = dist_route_points(x, bid, fits, axis, mid, right_row)
+    n_new = jnp.sum(fits.astype(jnp.int32))
+    mrange = jnp.arange(m)
+    active = part.active | (
+        (mrange >= part.n_blocks) & (mrange < part.n_blocks + n_new)
+    )
+    part = part._replace(active=active, n_blocks=part.n_blocks + n_new)
+    part = dist_recompute_stats(part, x, new_bid)
+    return part, new_bid
+
+
+def _route_into_boxes(x: jax.Array, part: Partition) -> jax.Array:
+    """Assign every point to the box whose clipped L∞ distance is smallest
+    (containment for in-sample boxes; nearest box for out-of-sample tails).
+    O(n·M) elementwise — runs sharded."""
+    mesh = sh.current_mesh()
+
+    def body(x_loc):
+        lo = jnp.where(part.active[:, None], part.lo, _BIG)
+        hi = jnp.where(part.active[:, None], part.hi, -_BIG)
+        below = jnp.maximum(lo[None] - x_loc[:, None, :], 0.0)
+        above = jnp.maximum(x_loc[:, None, :] - hi[None], 0.0)
+        dist = jnp.max(below + above, axis=-1)  # [n_loc, M] clipped L∞
+        return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+    if mesh is None:
+        return body(x)
+    n, d = x.shape
+    row_spec = sh.logical_to_spec(("batch", None), (n, d))
+    return jax.shard_map(
+        body, mesh=mesh, in_specs=(row_spec,),
+        out_specs=sh.logical_to_spec(("batch",), (n,)), check_vma=False,
+    )(x)

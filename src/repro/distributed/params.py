@@ -1,0 +1,137 @@
+"""Parameter / cache sharding rules (FSDP × TP), applied by leaf path.
+
+Every weight matrix is 2-D sharded: its "fan-in-ish" dimension over the
+data-parallel axes (FSDP — ZeRO-3 style, gathered at use by GSPMD or by the
+MoE island) and its "parallel" dimension over the model axis (TP). Stacked
+layer leaves get a leading ``None`` automatically. Rules are name-based so
+the same table covers every family.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchConfig
+from repro.distributed import sharding as sh
+
+__all__ = ["param_shardings", "cache_shardings", "input_shardings"]
+
+# name -> logical spec for the *unstacked* leaf (trailing dims)
+_RULES: dict[str, tuple] = {
+    "embed": ("tensor", "batch"),
+    "out_head": ("batch", "tensor"),
+    "wq": ("batch", "tensor"),
+    "wk": ("batch", "tensor"),
+    "wv": ("batch", "tensor"),
+    "wo": ("tensor", "batch"),
+    "w1": ("batch", "tensor"),
+    "w3": ("batch", "tensor"),
+    "w2": ("tensor", "batch"),
+    "router": (None, None),
+    "in_proj": ("batch", "tensor"),
+    "out_proj": ("tensor", "batch"),
+    "shared_in": ("batch", "tensor"),
+    "conv_w": (None, None),
+}
+
+# MoE expert tensors (rank 3 under a "moe" path component); specs must match
+# the shard_map island in_specs for the mode moe.moe_mode selects.
+def _moe_rule(cfg: ArchConfig, name: str) -> tuple:
+    from repro.models.moe import moe_mode
+
+    mode = moe_mode(cfg.n_experts, max(sh.axis_size("model"), 1))
+    if name in ("w1", "w3"):
+        return {
+            "ep": ("expert", "batch", None),
+            "ep_split": (None, "batch", "tensor"),  # TP storage; island a2a
+            "tp": (None, "batch", "tensor"),
+        }[mode]
+    if name == "w2":
+        return {
+            "ep": ("expert", None, "batch"),
+            "ep_split": (None, "tensor", "batch"),
+            "tp": (None, "tensor", "batch"),
+        }[mode]
+    raise KeyError(name)
+
+
+def _leaf_spec(cfg: ArchConfig, path: tuple, leaf) -> P:
+    names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = names[-1]
+    is_moe = "moe" in names and "shared" not in names
+    rank = leaf.ndim
+    if is_moe and name in ("w1", "w3", "w2") and rank >= 3:
+        logical = _moe_rule(cfg, name)
+    elif name in _RULES:
+        logical = _RULES[name]
+    else:
+        logical = (None,) * min(rank, 1)  # norms, biases, scalars: replicated
+        logical = logical if rank else ()
+    # pad leading stacked dims (layer / group axes)
+    pad = rank - len(logical)
+    logical = (None,) * pad + tuple(logical)
+    return sh.logical_to_spec(logical, leaf.shape)
+
+
+def param_shardings(cfg: ArchConfig, params_shapes: Any) -> Any:
+    """NamedSharding tree matching ``jax.eval_shape(init_params, ...)``."""
+    mesh = sh.current_mesh()
+    assert mesh is not None
+
+    def f(path, leaf):
+        return NamedSharding(mesh, _leaf_spec(cfg, path, leaf))
+
+    return jax.tree_util.tree_map_with_path(f, params_shapes)
+
+
+_CACHE_RULES: dict[str, tuple] = {
+    # [L, B, S, kv, hd]: batch over bd; cache seq over model (flash-decoding
+    # style partial-softmax combine is emitted by GSPMD for the reduction)
+    "k": (None, "batch", "seq", None, None),
+    "v": (None, "batch", "seq", None, None),
+    "xk": (None, "batch", None, None, None),
+    "xv": (None, "batch", None, None, None),
+    "slot_pos": ("batch", "seq"),
+    "conv": (None, "batch", None, None),
+    "ssm": (None, "batch", "tensor", None, None),
+}
+
+
+def cache_shardings(cfg: ArchConfig, cache_shapes: Any) -> Any:
+    mesh = sh.current_mesh()
+    assert mesh is not None
+
+    def f(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        logical = _CACHE_RULES[names[-1]]
+        pad = leaf.ndim - len(logical)
+        spec = sh.logical_to_spec((None,) * pad + tuple(logical[-leaf.ndim:] if pad < 0 else logical), leaf.shape)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(f, cache_shapes)
+
+
+def input_shardings(cfg: ArchConfig, specs: dict) -> dict:
+    """Shardings for the step-function inputs built by configs.input_specs."""
+    mesh = sh.current_mesh()
+    assert mesh is not None
+    out: dict[str, Any] = {}
+    for name, v in specs.items():
+        if name == "cache":
+            out[name] = cache_shardings(cfg, v)
+        elif name in ("tokens", "labels"):
+            out[name] = NamedSharding(mesh, sh.logical_to_spec(("batch", None), v.shape))
+        elif name == "image_embeds":
+            out[name] = NamedSharding(
+                mesh, sh.logical_to_spec(("batch", None, None), v.shape)
+            )
+        elif name == "token":
+            out[name] = NamedSharding(mesh, sh.logical_to_spec(("batch",), v.shape))
+        elif name == "pos":
+            out[name] = NamedSharding(mesh, P())
+        else:
+            raise KeyError(name)
+    return out

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the K-means
+assignment step (fused distances + top-2 + argmin) and the weighted
+cluster update (on-the-fly one-hot MXU matmul). ``ops`` dispatches,
+``ref`` holds the pure-jnp oracles."""

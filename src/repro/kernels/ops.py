@@ -1,0 +1,73 @@
+"""Public, jit-friendly entry points for the clustering kernels.
+
+``assign_top2`` / ``cluster_sums`` dispatch to the Pallas TPU kernels when
+they apply (TPU backend, or explicitly requested interpret mode) and to the
+pure-jnp oracles in ``ref.py`` otherwise. The CPU CI container always
+validates the Pallas path via ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+__all__ = ["assign_top2", "cluster_sums", "pallas_available", "set_default_impl"]
+
+# "auto" | "pallas" | "ref". "auto" = pallas on TPU, ref elsewhere (the
+# interpret-mode pallas path is exercised explicitly by tests/benchmarks:
+# running every Lloyd iteration of the CPU test-suite through the Python
+# interpreter loop would be needlessly slow).
+_DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
+
+
+def set_default_impl(impl: str) -> None:
+    global _DEFAULT_IMPL
+    assert impl in ("auto", "pallas", "ref")
+    _DEFAULT_IMPL = impl
+
+
+def pallas_available() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str | None) -> str:
+    impl = impl or _DEFAULT_IMPL
+    if impl == "auto":
+        return "pallas" if pallas_available() else "ref"
+    return impl
+
+
+def assign_top2(
+    x: jax.Array, c: jax.Array, *, impl: str | None = None
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused distance + argmin + top-2: ``(assign, d1, d2)``. See ref.assign_top2."""
+    if _resolve(impl) == "pallas":
+        from repro.kernels import distance_assign
+
+        interpret = jax.default_backend() != "tpu"
+        return distance_assign.assign_top2_pallas(x, c, interpret=interpret)
+    return ref.assign_top2(x, c)
+
+
+def cluster_sums(
+    x: jax.Array,
+    w: jax.Array,
+    assign: jax.Array,
+    num_clusters: int,
+    *,
+    impl: str | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Weighted per-cluster sums/counts. See ref.cluster_sums."""
+    if _resolve(impl) == "pallas":
+        from repro.kernels import cluster_update
+
+        interpret = jax.default_backend() != "tpu"
+        return cluster_update.cluster_sums_pallas(
+            x, w, assign, num_clusters, interpret=interpret
+        )
+    return ref.cluster_sums(x, w, assign, num_clusters)

@@ -1,0 +1,263 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell against the production mesh — 16×16 single-pod and 2×16×16 multi-pod —
+and record memory / cost / collective analysis for §Dry-run and §Roofline.
+
+The XLA_FLAGS line above MUST precede any jax import (jax locks the device
+count on first init); do not set it globally — smoke tests and benches see
+one device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--probe]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+
+Each cell writes results/dryrun/<mesh>/<arch>__<shape>.json.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs  # noqa: E402
+from repro.distributed import params as param_rules  # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import transformer  # noqa: E402
+from repro.roofline import analysis  # noqa: E402
+from repro.train import optimizer as opt  # noqa: E402
+from repro.train import train_step as ts  # noqa: E402
+
+RESULTS = pathlib.Path(os.environ.get("REPRO_RESULTS", "results/dryrun"))
+
+
+def _cost_dict(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    colls = analysis.parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collectives": colls,
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "generated_code_bytes": mem.generated_code_size_in_bytes,
+            "peak_bytes_est": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+    }
+
+
+def _lower_cell(cfg, shape, mesh, *, compile_=True):
+    """Build the cell's step function, lower and (optionally) compile."""
+    specs = configs.input_specs(cfg, shape)
+    with sh.use_mesh(mesh):
+        in_sh = param_rules.input_shardings(cfg, specs)
+        pshapes = jax.eval_shape(lambda k: transformer.init_params(cfg, k),
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+        psh = param_rules.param_shardings(cfg, pshapes)
+
+        if shape.kind == "train":
+            ostate_shapes = jax.eval_shape(opt.adamw_init, pshapes)
+            osh = param_rules.param_shardings(cfg, ostate_shapes["m"])
+            osh_full = {"m": osh, "v": osh,
+                        "step": jax.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+            step = ts.make_train_step(cfg, param_shardings=psh)
+            args = [pshapes, ostate_shapes, specs["tokens"], specs["labels"]]
+            shardings = [psh, osh_full, in_sh["tokens"], in_sh["labels"]]
+            if cfg.family == "vlm":
+                args.append(specs["image_embeds"])
+                shardings.append(in_sh["image_embeds"])
+            jitted = jax.jit(
+                step,
+                in_shardings=tuple(shardings),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(*args)
+        elif shape.kind == "prefill":
+            def fn(params, tokens, *img):
+                return transformer.prefill(
+                    cfg, params, tokens, img[0] if img else None,
+                    max_seq_len=shape.seq_len,
+                )
+
+            args = [pshapes, specs["tokens"]]
+            shardings = [psh, in_sh["tokens"]]
+            if cfg.family == "vlm":
+                args.append(specs["image_embeds"])
+                shardings.append(in_sh["image_embeds"])
+            lowered = jax.jit(fn, in_shardings=tuple(shardings)).lower(*args)
+        else:  # decode
+            def fn(params, cache, token, pos):
+                return transformer.decode(cfg, params, cache, token, pos)
+
+            lowered = jax.jit(
+                fn,
+                in_shardings=(psh, in_sh["cache"], in_sh["token"], in_sh["pos"]),
+                donate_argnums=(1,),
+            ).lower(pshapes, specs["cache"], specs["token"], specs["pos"])
+
+        if not compile_:
+            return lowered, None
+        compiled = lowered.compile()
+        return lowered, compiled
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, probe: bool = False,
+             overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = configs.get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = configs.SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "tag": tag,
+    }
+    t0 = time.time()
+    lowered, compiled = _lower_cell(cfg, shape, mesh)
+    rec["compile_s"] = round(time.time() - t0, 2)
+    rec.update(_cost_dict(compiled))
+    print(f"[dryrun] {arch} × {shape_name} on {rec['mesh']}: "
+          f"compile {rec['compile_s']}s, "
+          f"peak/device {rec['memory']['peak_bytes_est']/2**30:.2f} GiB, "
+          f"flops/device {rec['flops']:.3e}, "
+          f"coll {rec['collectives']['total_bytes']/2**20:.1f} MiB")
+    print(compiled.memory_analysis())
+
+    if probe:
+        rec["probe"] = _probe_costs(cfg, shape, mesh)
+    return rec
+
+
+def _probe_depth(cfg):
+    """The smallest homogeneous unroll unit (group for vlm/hybrid)."""
+    if cfg.family == "vlm":
+        return cfg.cross_attn_every
+    if cfg.family == "hybrid":
+        return cfg.shared_attn_every
+    return 1
+
+
+def _probe_costs(cfg, shape, mesh) -> dict:
+    """Unrolled probes at depths p and 2p → exact cost(L) = a + b·L
+    extrapolation (XLA's cost model counts scan bodies once; DESIGN.md §7)."""
+    unit = _probe_depth(cfg)
+    probes = {}
+    for mult in (1, 2):
+        layers = unit * mult
+        # grad_accum=1: the microbatch loop is a scan, which the cost model
+        # counts once — probes must measure the full-batch step
+        pcfg = cfg.replace(
+            n_layers=layers, scan_layers=False, remat=False, grad_accum=1
+        )
+        lowered, compiled = _lower_cell(pcfg, shape, mesh)
+        cost = _cost_dict(compiled)
+        probes[mult] = {
+            "flops": cost["flops"],
+            "bytes_accessed": cost["bytes_accessed"],
+            "collective_bytes": cost["collectives"]["total_bytes"],
+        }
+    total_units = cfg.n_layers // unit
+    extrap = analysis.extrapolate_linear(probes[1], probes[2], 1, total_units)
+    return {
+        "unit_layers": unit,
+        "probe_1": probes[1],
+        "probe_2": probes[2],
+        "extrapolated": extrap,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=list(configs.SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--probe", action="store_true",
+                    help="also lower unrolled probes for exact roofline costs")
+    ap.add_argument("--subprocess-per-cell", action="store_true",
+                    help="isolate each cell in a fresh process (bounds XLA memory)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    ap.add_argument("--tag", default="", help="experiment tag for the record")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = json.loads(v)
+        except json.JSONDecodeError:
+            pass
+        overrides[k] = v
+
+    cells = (
+        configs.runnable_cells()
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = []
+    for multi in meshes:
+        outdir = RESULTS / ("2x16x16" if multi else "16x16")
+        outdir.mkdir(parents=True, exist_ok=True)
+        for arch, shape in cells:
+            suffix = f"__{args.tag}" if args.tag else ""
+            out = outdir / f"{arch.replace('.', '_')}__{shape}{suffix}.json"
+            if args.subprocess_per_cell:
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape]
+                if multi:
+                    cmd.append("--multi-pod")
+                if args.probe:
+                    cmd.append("--probe")
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                for kv in args.set:
+                    cmd += ["--set", kv]
+                r = subprocess.run(cmd, capture_output=True, text=True)
+                if r.returncode != 0:
+                    failures.append((arch, shape, multi, r.stderr[-2000:]))
+                    print(f"[dryrun] FAIL {arch} × {shape} multi={multi}\n{r.stderr[-2000:]}")
+                else:
+                    print(r.stdout.strip().splitlines()[0] if r.stdout else "")
+                continue
+            try:
+                rec = run_cell(arch, shape, multi_pod=multi, probe=args.probe,
+                               overrides=overrides, tag=args.tag)
+                out.write_text(json.dumps(rec, indent=1))
+            except Exception:
+                failures.append((arch, shape, multi, traceback.format_exc()[-2000:]))
+                print(f"[dryrun] FAIL {arch} × {shape} multi={multi}")
+                traceback.print_exc()
+
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for a, s, m, _ in failures:
+            print(f"  {a} × {s} (multi={m})")
+        sys.exit(1)
+    print("\n[dryrun] all cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

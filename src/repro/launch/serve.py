@@ -1,0 +1,75 @@
+"""Batched serving driver: prefill a batch of prompts, then decode with the
+ring-buffer KV cache (greedy sampling).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_smoke_mesh
+from repro.models import transformer
+
+
+def generate(cfg, params, prompts, gen_len: int, *, greedy: bool = True, key=None):
+    """prompts [B, P] int32 → generated [B, gen_len] int32 (teacher-free)."""
+    b, p = prompts.shape
+    last_logits, cache = transformer.prefill(
+        cfg, params, prompts, max_seq_len=p + gen_len
+    )
+    decode = jax.jit(
+        lambda c, t, pos: transformer.decode(cfg, params, c, t, pos),
+        donate_argnums=(0,),
+    )
+    token = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    for i in range(gen_len - 1):
+        logits, cache = decode(cache, token, jnp.asarray(p + i, jnp.int32))
+        if greedy:
+            token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            key, sub = jax.random.split(key)
+            token = jax.random.categorical(sub, logits).astype(jnp.int32)
+        out.append(token)
+    return jnp.stack(out, axis=1)
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS, default="granite-8b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = configs.reduced_config(cfg)
+    with sh.use_mesh(make_smoke_mesh()):
+        params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1), (args.batch, args.prompt_len),
+            0, cfg.vocab,
+        )
+        t0 = time.time()
+        tokens = generate(cfg, params, prompts, args.gen)
+        dt = time.time() - t0
+        tps = args.batch * args.gen / dt
+        print(f"[serve] {args.arch} generated [{args.batch}, {args.gen}] tokens "
+              f"in {dt:.1f}s ({tps:.1f} tok/s on 1 CPU core)")
+        print("[serve] sample:", tokens[0, :16].tolist())
+        return {"tokens": tokens, "tok_per_s": tps}
+
+
+if __name__ == "__main__":
+    main()

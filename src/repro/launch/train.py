@@ -1,0 +1,110 @@
+"""End-to-end LM training driver.
+
+Runs any assigned architecture (full or reduced config) with the
+deterministic token pipeline, AdamW, checkpoint/restart (resume is
+automatic if the checkpoint dir has state), and a trivial-mesh fallback so
+the same driver runs on 1 CPU and on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \
+      --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt --ckpt-every 50
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data.tokens import TokenStream
+from repro.distributed import params as param_rules
+from repro.distributed import sharding as sh
+from repro.launch.mesh import make_smoke_mesh
+from repro.train import checkpoint as ckpt
+from repro.train import optimizer as opt
+from repro.train import train_step as ts
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS, default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = configs.reduced_config(cfg)
+    mesh = make_smoke_mesh()
+
+    with sh.use_mesh(mesh):
+        stream = TokenStream(cfg.vocab, args.seq, args.batch, seed=args.seed)
+        params, opt_state = ts.init_train_state(cfg, jax.random.PRNGKey(args.seed))
+        start_step = 0
+        if args.ckpt_dir:
+            last = ckpt.latest_step(args.ckpt_dir)
+            if last is not None:
+                shard_tree = {
+                    "params": param_rules.param_shardings(
+                        cfg, jax.eval_shape(lambda: params)
+                    ),
+                }
+                state, extra = ckpt.restore(
+                    args.ckpt_dir, last,
+                    {"params": params, "opt": opt_state},
+                )
+                params, opt_state = state["params"], state["opt"]
+                start_step = extra["step"]
+                print(f"[train] resumed from step {start_step}")
+
+        opt_cfg = opt.AdamWConfig(
+            lr=args.lr, warmup_steps=min(20, args.steps // 5),
+            total_steps=args.steps,
+        )
+        step_fn = jax.jit(ts.make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+        losses = []
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            tokens, labels = stream.batch(step)
+            image = (
+                jnp.zeros((args.batch, cfg.n_image_tokens, cfg.d_model), cfg.dtype)
+                if cfg.family == "vlm"
+                else None
+            )
+            if image is not None:
+                params, opt_state, metrics = step_fn(
+                    params, opt_state, tokens, labels, image
+                )
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state, tokens, labels)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                print(
+                    f"[train] step {step} loss {loss:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} "
+                    f"lr {float(metrics['lr']):.2e} "
+                    f"({(time.time() - t0):.1f}s)"
+                )
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(
+                    args.ckpt_dir, step + 1,
+                    {"params": params, "opt": opt_state},
+                    extra={"step": step + 1, "arch": args.arch},
+                )
+        return {"losses": losses, "final_loss": losses[-1] if losses else None}
+
+
+if __name__ == "__main__":
+    main()

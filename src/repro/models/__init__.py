@@ -1,0 +1,2 @@
+"""Model zoo: one decoder substrate covering the 10 assigned architectures
+(dense GQA / MoE / SSD / hybrid shared-block / audio-token / VLM cross-attn)."""

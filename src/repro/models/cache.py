@@ -1,0 +1,79 @@
+"""Decode-time caches: ring-buffered KV (bounded by the SWA window where the
+arch has one), constant-size SSM/conv states for Mamba/hybrid, per-invocation
+KV for Zamba2's shared block, cached cross-attention KV for the VLM.
+
+``cache_specs`` builds the same pytree as ShapeDtypeStructs via
+``jax.eval_shape`` — zero allocation, which is what the dry-run lowers
+against.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.models import mamba2
+
+__all__ = ["init_cache", "cache_specs", "cache_seq_len"]
+
+
+def cache_seq_len(cfg: ArchConfig, seq_len: int) -> int:
+    """SWA archs never need more than ``window`` cache slots (ring buffer)."""
+    return min(seq_len, cfg.window) if cfg.window else seq_len
+
+
+def _kv(l, b, s, kv, hd, dtype):
+    return {
+        "k": jnp.zeros((l, b, s, kv, hd), dtype),
+        "v": jnp.zeros((l, b, s, kv, hd), dtype),
+    }
+
+
+def _mamba_state(cfg, l, b):
+    dims = mamba2.mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((l, b, cfg.ssm_conv - 1, dims["conv_dim"]), cfg.dtype),
+        "ssm": jnp.zeros(
+            (l, b, dims["nheads"], cfg.ssm_headdim, dims["n"]), jnp.float32
+        ),
+    }
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> dict[str, Any]:
+    b = batch
+    sc = cache_seq_len(cfg, seq_len)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family == "ssm":
+        return _mamba_state(cfg, cfg.n_layers, b)
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        tail = cfg.n_layers - g * per
+        cache: dict[str, Any] = {
+            "mamba": _mamba_state(cfg, g * per, b),
+            "shared": _kv(g, b, sc, kv, hd, cfg.dtype),
+            "slot_pos": jnp.full((b, sc), -1, jnp.int32),
+        }
+        if tail:
+            cache["mamba_tail"] = _mamba_state(cfg, tail, b)
+        return cache
+    n_self = cfg.n_layers
+    if cfg.family == "vlm":
+        # self-attention layers only; cross layers cache image KV separately
+        n_self = (cfg.n_layers // cfg.cross_attn_every) * (cfg.cross_attn_every - 1)
+    cache = _kv(n_self, b, sc, kv, hd, cfg.dtype)
+    cache["slot_pos"] = jnp.full((b, sc), -1, jnp.int32)
+    if cfg.family == "vlm":
+        gc = cfg.n_layers // cfg.cross_attn_every
+        cache["xk"] = jnp.zeros((gc, b, cfg.n_image_tokens, kv, hd), cfg.dtype)
+        cache["xv"] = jnp.zeros((gc, b, cfg.n_image_tokens, kv, hd), cfg.dtype)
+    return cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, seq_len: int):
+    # shapes are static config, not traced args
+    return jax.eval_shape(lambda: init_cache(cfg, batch, seq_len))

@@ -1,0 +1,296 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (block-causal
+chunked, masked-full, decode, cross), SwiGLU MLP.
+
+Attention chunk loops are *python* loops (static unroll), never lax.scan:
+XLA's cost model counts loop bodies once, so static structure is what makes
+the roofline FLOP accounting exact (DESIGN.md §7). ``block_causal`` skips
+strictly-upper-triangular (and outside-window) chunk pairs at trace time —
+the compiled program does no masked-out work; ``masked_full`` computes all
+pairs and masks (the cheaper-to-compile baseline the §Perf log starts from).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+__all__ = [
+    "rmsnorm",
+    "rope",
+    "swiglu",
+    "attention",
+    "decode_attention",
+    "cross_attention",
+]
+
+_NEG = -1e30
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dtype)
+
+
+def rope_tables(positions: jax.Array, hd: int, theta: float):
+    """Precompute (cos, sin) [..., S, half] once per step — layers reuse the
+    same tables, so the scan body doesn't re-derive (and XLA doesn't stack)
+    per-layer [L, S, hd] trig buffers."""
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def rope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    tables: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Rotary embedding. ``x [..., S, H, hd]``, ``positions [S] or [B, S]``."""
+    hd = x.shape[-1]
+    half = hd // 2
+    cos, sin = tables if tables is not None else rope_tables(positions, hd, theta)
+    cos = cos[..., None, :]  # [..., S, 1, half]
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU MLP; hidden activations sharded over the tensor axis."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    spec = ("batch",) + (None,) * (h.ndim - 2) + ("tensor",)
+    h = shard(h, *spec)
+    return h @ w2
+
+
+def _scores(q, k, scale):
+    # q [B, c, KV, G, hd] × k [B, s, KV, hd] → [B, KV, G, c, s]
+    # dot_general emits (batch B, KV) + lhs-free (c, G) + rhs-free (s)
+    return jax.lax.dot_general(
+        q * scale,
+        k,
+        (((4,), (3,)), ((0, 2), (0, 2))),
+        preferred_element_type=jnp.float32,
+    ).transpose(0, 1, 3, 2, 4)
+
+
+def _weighted_v(p, v):
+    # p [B, KV, G, c, s] × v [B, s, KV, hd] → [B, c, KV, G, hd]
+    out = jax.lax.dot_general(
+        p,
+        v.astype(p.dtype),
+        (((4,), (1,)), ((0, 1), (0, 2))),
+    )  # [B, KV, G, c, hd]
+    return out.transpose(0, 3, 1, 2, 4)
+
+
+def _chunk_mask(i, j, chunk, window):
+    qpos = i * chunk + jnp.arange(chunk)
+    kpos = j * chunk + jnp.arange(chunk)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    return mask
+
+
+def _visible(i, j, window, chunk):
+    """Whether kv chunk j is (partially) visible from q chunk i."""
+    if j > i:
+        return False
+    return window is None or (i - j - 1) * chunk < window
+
+
+def _flash_fwd_impl(q, k, v, window, chunk):
+    """Block-causal online-softmax forward. q [B,S,KV,G,hd] grouped layout.
+
+    Returns (out f32 [B,S,KV,G,hd], m, l stats [B,KV,G,S,1])."""
+    b, s, kv, g, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    nc = s // chunk
+    outs, ms, ls = [], [], []
+    for i in range(nc):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        m = jnp.full((b, kv, g, chunk, 1), _NEG, jnp.float32)
+        l = jnp.zeros((b, kv, g, chunk, 1), jnp.float32)
+        acc = jnp.zeros((b, chunk, kv, g, hd), jnp.float32)
+        for j in range(i + 1):
+            if not _visible(i, j, window, chunk):
+                continue
+            kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+            logits = _scores(qi, kj, scale)  # [B, KV, G, c, c]
+            logits = jnp.where(_chunk_mask(i, j, chunk, window)[None, None, None],
+                               logits, _NEG)
+            m_new = jnp.maximum(m, logits.max(-1, keepdims=True))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new)
+            l = l * alpha + p.sum(-1, keepdims=True)
+            acc = acc * alpha.transpose(0, 3, 1, 2, 4) + _weighted_v(p, vj)
+            m = m_new
+        outs.append(acc / l.transpose(0, 3, 1, 2, 4))
+        ms.append(m)
+        ls.append(l)
+    return (
+        jnp.concatenate(outs, axis=1),
+        jnp.concatenate(ms, axis=3),
+        jnp.concatenate(ls, axis=3),
+    )
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _flash(q, k, v, window, chunk):
+    out, _, _ = _flash_fwd_impl(q, k, v, window, chunk)
+    return out
+
+
+def _flash_fwd(q, k, v, window, chunk):
+    out, m, l = _flash_fwd_impl(q, k, v, window, chunk)
+    return out, (q, k, v, out, m, l)
+
+
+def _flash_bwd(window, chunk, res, dout):
+    """Flash-attention backward: recompute tiles from saved (m, l) stats —
+    residual memory is O(S) per head, not O(S²)."""
+    q, k, v, out, m, l = res
+    b, s, kv, g, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    nc = s // chunk
+    dout = dout.astype(jnp.float32)
+    # delta_i = rowsum(dout * out)  [B, KV, G, S, 1]
+    delta = jnp.sum(dout * out, axis=-1).transpose(0, 2, 3, 1)[..., None]
+
+    dq = [jnp.zeros((b, chunk, kv, g, hd), jnp.float32) for _ in range(nc)]
+    dk = [jnp.zeros((b, chunk, kv, hd), jnp.float32) for _ in range(nc)]
+    dv = [jnp.zeros((b, chunk, kv, hd), jnp.float32) for _ in range(nc)]
+    for i in range(nc):
+        qi = jax.lax.dynamic_slice_in_dim(q, i * chunk, chunk, axis=1)
+        doi = jax.lax.dynamic_slice_in_dim(dout, i * chunk, chunk, axis=1)
+        mi = jax.lax.dynamic_slice_in_dim(m, i * chunk, chunk, axis=3)
+        li = jax.lax.dynamic_slice_in_dim(l, i * chunk, chunk, axis=3)
+        di = jax.lax.dynamic_slice_in_dim(delta, i * chunk, chunk, axis=3)
+        for j in range(i + 1):
+            if not _visible(i, j, window, chunk):
+                continue
+            kj = jax.lax.dynamic_slice_in_dim(k, j * chunk, chunk, axis=1)
+            vj = jax.lax.dynamic_slice_in_dim(v, j * chunk, chunk, axis=1)
+            logits = _scores(qi, kj, scale)
+            logits = jnp.where(_chunk_mask(i, j, chunk, window)[None, None, None],
+                               logits, _NEG)
+            p = jnp.exp(logits - mi) / li  # [B, KV, G, c, c]
+            # dv_j += p^T @ dout_i   (sum over q rows and G)
+            dv[j] = dv[j] + jnp.einsum("bkgqs,bqkgh->bskh", p, doi)
+            # dp = dout_i @ v_j^T
+            dp = jnp.einsum("bqkgh,bskh->bkgqs", doi, vj)
+            ds = p * (dp - di)  # [B, KV, G, c, c]
+            dq[i] = dq[i] + jnp.einsum("bkgqs,bskh->bqkgh", ds, kj) * scale
+            dk[j] = dk[j] + jnp.einsum("bkgqs,bqkgh->bskh", ds, qi) * scale
+    dq = jnp.concatenate(dq, axis=1).astype(q.dtype)
+    dk = jnp.concatenate(dk, axis=1).astype(k.dtype)
+    dv = jnp.concatenate(dv, axis=1).astype(v.dtype)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    window: int | None = None,
+    impl: str = "block_causal",
+    chunk: int = 2048,
+) -> jax.Array:
+    """Causal (optionally sliding-window) GQA attention.
+
+    q [B, S, H, hd]; k, v [B, S, KV, hd]. Returns [B, S, H, hd].
+
+    ``block_causal`` is a hand-written flash attention (custom_vjp: the
+    backward recomputes tiles from O(S) softmax stats instead of saving the
+    O(S²) probabilities) that skips invisible chunk pairs at trace time.
+    ``masked_full`` is the dense reference the §Perf log starts from.
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, s, kv, g, hd)
+
+    if impl == "masked_full" or s <= chunk:
+        pos = jnp.arange(s)
+        mask = pos[None, :] <= pos[:, None]
+        if window is not None:
+            mask &= pos[:, None] - pos[None, :] < window
+        logits = _scores(qg, k, scale)  # [B, KV, G, S, S]
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        return _weighted_v(p, v).reshape(b, s, h, hd).astype(q.dtype)
+
+    assert s % chunk == 0, (s, chunk)
+    out = _flash(qg, k, v, window, chunk)
+    return out.astype(q.dtype).reshape(b, s, h, hd)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    slot_pos: jax.Array,
+    pos: jax.Array,
+    *,
+    window: int | None = None,
+) -> jax.Array:
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q [B, H, hd]; caches [B, Sc, KV, hd]; slot_pos [B, Sc] the token position
+    stored in each slot (-1 = empty). A slot is attendable iff its position
+    is in (pos − window, pos].
+    """
+    b, h, hd = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, 1, kv, g, hd)
+    logits = _scores(qg, k_cache, scale)[:, :, :, 0]  # [B, KV, G, Sc]
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= slot_pos > pos - window
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)  # [B, KV, G, Sc]
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(p.dtype))
+    return out.reshape(b, h, hd).astype(q.dtype)
+
+
+def cross_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array
+) -> jax.Array:
+    """Unmasked attention of text queries over (stubbed) image tokens.
+
+    q [B, S, H, hd]; k, v [B, T_img, KV, hd]. The score tensor gets an
+    explicit (batch, tensor-on-KV) constraint: GSPMD loses the head
+    sharding across the 5D transposes otherwise and replicates ~100 GiB of
+    probabilities on the 90B config (EXPERIMENTS.md §Perf).
+    """
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(b, s, kv, g, hd)
+    logits = _scores(qg, k, scale)  # [B, KV, G, S, T]
+    logits = shard(logits, "batch", "tensor", None, None, None)
+    p = jax.nn.softmax(logits, axis=-1)
+    return _weighted_v(p, v).reshape(b, s, h, hd).astype(q.dtype)

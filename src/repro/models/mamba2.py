@@ -1,0 +1,196 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Chunked SSD algorithm ("minimal ssd"): within a chunk the dual quadratic
+form runs on the MXU; across chunks a *python-loop* linear recurrence carries
+the [H, P, N] state (static unroll — exact FLOP accounting, DESIGN.md §7).
+Single-token decode is the O(1) recurrent update on the cached state.
+
+Layout: d_inner = expand·d_model, H = d_inner / headdim heads, G=1 B/C group.
+The in-projection produces (z, x, B, C, dt); a width-4 causal depthwise conv
+runs over (x, B, C); output gate z feeds a gated RMSNorm before out-proj.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import rmsnorm
+
+__all__ = ["init_mamba_params", "mamba_forward", "mamba_decode", "mamba_dims"]
+
+
+def mamba_dims(cfg: ArchConfig) -> dict[str, int]:
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    n = cfg.ssm_state
+    conv_dim = d_inner + 2 * n  # (x, B, C) share the conv
+    return dict(
+        d_inner=d_inner,
+        nheads=nheads,
+        n=n,
+        conv_dim=conv_dim,
+        in_dim=2 * d_inner + 2 * n + nheads,  # z, x, B, C, dt
+    )
+
+
+def init_mamba_params(cfg: ArchConfig, key: jax.Array) -> dict[str, Any]:
+    dims = mamba_dims(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    std = 0.02
+    pdt = cfg.param_dtype
+    return {
+        "in_proj": (jax.random.normal(k1, (d, dims["in_dim"])) * std).astype(pdt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, dims["conv_dim"])) * std).astype(pdt),
+        "conv_b": jnp.zeros((dims["conv_dim"],), pdt),
+        "a_log": jnp.zeros((dims["nheads"],), pdt),
+        "dt_bias": jnp.zeros((dims["nheads"],), pdt),
+        "d_skip": jnp.ones((dims["nheads"],), pdt),
+        "norm_w": jnp.ones((dims["d_inner"],), pdt),
+        "out_proj": (jax.random.normal(k3, (dims["d_inner"], d)) * std).astype(pdt),
+    }
+
+
+def _split_proj(proj, dims):
+    d_inner, n, nheads = dims["d_inner"], dims["n"], dims["nheads"]
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner : d_inner + dims["conv_dim"]]
+    dt = proj[..., d_inner + dims["conv_dim"] :]
+    return z, xbc, dt
+
+
+def _split_xbc(xbc, dims):
+    d_inner, n = dims["d_inner"], dims["n"]
+    return xbc[..., :d_inner], xbc[..., d_inner : d_inner + n], xbc[..., d_inner + n :]
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over sequence. xbc [B, S, C], w [W, C]."""
+    wsz = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (wsz - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :] for i in range(wsz)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def mamba_forward(
+    cfg: ArchConfig, p: dict, x: jax.Array, *, return_state: bool = False
+):
+    """Full-sequence SSD. x [B, S, D] → [B, S, D] (+ final (conv,ssm) state)."""
+    dims = mamba_dims(cfg)
+    b, s, _ = x.shape
+    h, pd, n = dims["nheads"], cfg.ssm_headdim, dims["n"]
+    q = cfg.ssm_chunk
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(proj, dims)
+    xbc = _causal_conv(xbc, p["conv_w"].astype(x.dtype), p["conv_b"].astype(x.dtype))
+    xs, bmat, cmat = _split_xbc(xbc, dims)
+
+    xs = shard(xs.reshape(b, s, h, pd), "batch", None, "tensor", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None, :])  # [B,S,H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # [H]
+    da = dt * a[None, None, :]  # [B, S, H]
+    bmat = bmat.astype(jnp.float32)  # [B, S, N] (G=1)
+    cmat = cmat.astype(jnp.float32)
+
+    state0 = jnp.zeros((b, h, pd, n), jnp.float32)
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    d_skip = p["d_skip"].astype(jnp.float32)
+
+    def chunk_step(state, args):
+        xc, dtc, dac, bc, cc = args
+        xc = xc.astype(jnp.float32)
+        cum = jnp.cumsum(dac, axis=1)  # [B, q, H]
+        # intra-chunk dual form: L[t,s'] = exp(cum_t - cum_s') for s' <= t
+        seg = cum[:, :, None, :] - cum[:, None, :, :]  # [B, q, q, H]
+        l_mat = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)  # [B, q, q]
+        y = jnp.einsum("bts,btsh,bsh,bshp->bthp", cb, l_mat, dtc, xc)
+        # contribution of the carried state
+        y = y + jnp.einsum("btn,bth,bhpn->bthp", cc, jnp.exp(cum), state)
+        # chunk state update
+        decay = jnp.exp(cum[:, -1:, :] - cum)  # [B, q, H]
+        new_state = jnp.einsum("bsn,bsh,bsh,bshp->bhpn", bc, decay, dtc, xc)
+        state = state * jnp.exp(cum[:, -1])[:, :, None, None] + new_state
+        y = y + xc * d_skip[None, None, :, None]
+        return state, y
+
+    def to_chunks(a):  # [B, S, ...] -> [nc, B, q, ...]
+        return a.reshape((b, nc, q) + a.shape[2:]).swapaxes(0, 1)
+
+    args = (to_chunks(xs), to_chunks(dt), to_chunks(da), to_chunks(bmat),
+            to_chunks(cmat))
+    if cfg.scan_layers:
+        # production: scan + per-chunk remat bounds live memory to ~one
+        # chunk; the VJP stores only the small [B,H,P,N] carry per step and
+        # recomputes the O(q²) intra-chunk tensors in the backward pass
+        state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0, args)
+    else:
+        # probe mode: static unroll for exact cost accounting
+        state, ys_list = state0, []
+        for i in range(nc):
+            state, y = chunk_step(state, jax.tree.map(lambda a: a[i], args))
+            ys_list.append(y)
+        ys = jnp.stack(ys_list)
+    y = ys.swapaxes(0, 1).reshape(b, s, dims["d_inner"]).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])  # gated norm
+    out = y @ p["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    conv_state = _conv_tail(cfg, x, p)  # last W-1 pre-conv features
+    return out, (conv_state, state)
+
+
+def _conv_tail(cfg, x, p):
+    dims = mamba_dims(cfg)
+    proj = x[:, -(cfg.ssm_conv - 1) :, :] @ p["in_proj"].astype(x.dtype)
+    _, xbc, _ = _split_proj(proj, dims)
+    return xbc  # [B, W-1, conv_dim]
+
+
+def mamba_decode(
+    cfg: ArchConfig, p: dict, x: jax.Array, conv_state: jax.Array, ssm_state: jax.Array
+):
+    """One-token recurrent step. x [B, D]; returns (y [B, D], new states)."""
+    dims = mamba_dims(cfg)
+    b = x.shape[0]
+    h, pd, n = dims["nheads"], cfg.ssm_headdim, dims["n"]
+
+    proj = x @ p["in_proj"].astype(x.dtype)
+    z, xbc, dt = _split_proj(proj, dims)
+
+    # causal conv over (stored W-1 tail, current)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # [B, W, C]
+    w = p["conv_w"].astype(x.dtype)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bwc,wc->bc", window, w) + p["conv_b"].astype(x.dtype)[None]
+    )
+    xs, bvec, cvec = _split_xbc(conv_out, dims)
+    xs = xs.reshape(b, h, pd).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, :])  # [B, H]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a[None, :])  # [B, H]
+    bvec = bvec.astype(jnp.float32)
+    cvec = cvec.astype(jnp.float32)
+
+    new_state = ssm_state * da[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhpn", bvec, dt, xs
+    )
+    y = jnp.einsum("bn,bhpn->bhp", cvec, new_state)
+    y = y + xs * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, dims["d_inner"]).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    return out, (new_conv, new_state)

@@ -1,0 +1,750 @@
+"""One decoder substrate for the 10 assigned architectures.
+
+Families:
+  dense / audio — pre-norm GQA attention + SwiGLU (RoPE, optional qk-norm/SWA)
+  moe           — attention + MoE FFN (shard_map island, see moe.py)
+  ssm           — Mamba2/SSD stack (attention-free)
+  hybrid        — Mamba2 backbone + one *shared* attention+MLP block invoked
+                  every N layers on concat(h, embeddings) (Zamba2)
+  vlm           — dense backbone + gated cross-attention image layers every
+                  N layers; image embeddings come precomputed (stub frontend)
+
+Layer stacks run under ``jax.lax.scan`` with remat in production
+(``cfg.scan_layers=True``) and as python-unrolled loops for the roofline
+probes — XLA's cost model counts loop bodies once, so only the unrolled form
+yields exact FLOP/byte/collective accounting (DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import shard
+from repro.models import cache as cache_mod
+from repro.models import mamba2, moe
+from repro.models.layers import (
+    attention,
+    cross_attention,
+    decode_attention,
+    rmsnorm,
+    rope,
+    rope_tables,
+    swiglu,
+)
+
+
+def _pos_ctx(cfg: ArchConfig, s: int):
+    """(positions, shared rope tables) computed once per step."""
+    pos = jnp.arange(s)
+    tables = rope_tables(pos, cfg.hd, cfg.rope_theta) if cfg.n_heads else None
+    return (pos, tables)
+
+__all__ = ["init_params", "forward", "prefill", "decode"]
+
+
+# ------------------------------------------------------------------ init
+def _init_attn(cfg: ArchConfig, key) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    std = 0.02
+    pdt = cfg.param_dtype
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * hd)) * std).astype(pdt),
+        "wk": (jax.random.normal(ks[1], (d, kv * hd)) * std).astype(pdt),
+        "wv": (jax.random.normal(ks[2], (d, kv * hd)) * std).astype(pdt),
+        "wo": (jax.random.normal(ks[3], (h * hd, d)) * std).astype(pdt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), pdt)
+        p["k_norm"] = jnp.ones((hd,), pdt)
+    return p
+
+
+def _init_mlp(cfg: ArchConfig, key, d_ff=None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    std = 0.02
+    pdt = cfg.param_dtype
+    return {
+        "w1": (jax.random.normal(ks[0], (d, f)) * std).astype(pdt),
+        "w3": (jax.random.normal(ks[1], (d, f)) * std).astype(pdt),
+        "w2": (jax.random.normal(ks[2], (f, d)) * std).astype(pdt),
+    }
+
+
+def _init_block(cfg: ArchConfig, key) -> dict:
+    """One standard decoder layer for this config's family."""
+    ka, kf = jax.random.split(key)
+    pdt = cfg.param_dtype
+    block: dict[str, Any] = {"ln1": jnp.ones((cfg.d_model,), pdt)}
+    if cfg.family == "ssm":
+        block["mamba"] = mamba2.init_mamba_params(cfg, ka)
+        return block
+    block["attn"] = _init_attn(cfg, ka)
+    block["ln2"] = jnp.ones((cfg.d_model,), pdt)
+    if cfg.family == "moe":
+        block["moe"] = moe.init_moe_params(cfg, kf)
+    else:
+        block["mlp"] = _init_mlp(cfg, kf)
+    return block
+
+
+def _init_cross_block(cfg: ArchConfig, key) -> dict:
+    ka, kf = jax.random.split(key)
+    pdt = cfg.param_dtype
+    return {
+        "ln1": jnp.ones((cfg.d_model,), pdt),
+        "ln2": jnp.ones((cfg.d_model,), pdt),
+        "attn": _init_attn(cfg, ka),
+        "mlp": _init_mlp(cfg, kf),
+        "gate_attn": jnp.zeros((), pdt),
+        "gate_mlp": jnp.zeros((), pdt),
+    }
+
+
+def _stack(init_fn, keys):
+    return jax.vmap(init_fn)(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict[str, Any]:
+    ke, kh, kl, ks = jax.random.split(key, 4)
+    std = 0.02
+    pdt = cfg.param_dtype
+    vp = cfg.vocab_padded
+    params: dict[str, Any] = {
+        "embed": (jax.random.normal(ke, (vp, cfg.d_model)) * std).astype(pdt),
+        "out_head": (jax.random.normal(kh, (cfg.d_model, vp)) * std).astype(pdt),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+    }
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        per = cfg.cross_attn_every - 1  # self layers per group
+        self_keys = jax.random.split(kl, g * per).reshape(g, per, 2)
+        params["self_layers"] = jax.vmap(
+            lambda kk: _stack(partial(_init_block, cfg), kk)
+        )(self_keys)
+        params["cross_layers"] = _stack(
+            partial(_init_cross_block, cfg), jax.random.split(ks, g)
+        )
+    elif cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        tail = cfg.n_layers - g * per
+        mkeys = jax.random.split(kl, g * per).reshape(g, per, 2)
+        params["mamba_groups"] = jax.vmap(
+            lambda kk: _stack(partial(_init_block, cfg.replace(family="ssm")), kk)
+        )(mkeys)
+        if tail:
+            params["mamba_tail"] = _stack(
+                partial(_init_block, cfg.replace(family="ssm")),
+                jax.random.split(jax.random.fold_in(kl, 1), tail),
+            )
+        # the shared block: attn+mlp over concat(h, embeddings) -> d_model
+        kp, kb = jax.random.split(ks)
+        params["shared_in"] = (
+            jax.random.normal(kp, (2 * cfg.d_model, cfg.d_model)) * std
+        ).astype(pdt)
+        params["shared_block"] = _init_block(cfg.replace(family="dense"), kb)
+    else:
+        params["layers"] = _stack(
+            partial(_init_block, cfg), jax.random.split(kl, cfg.n_layers)
+        )
+    return params
+
+
+# ------------------------------------------------------------------ blocks
+def _wt(cfg, w, dtype):
+    return w.astype(dtype) if cfg.cast_params_before_use else w
+
+
+def _should_expand_gqa(cfg: ArchConfig) -> bool:
+    if cfg.expand_gqa != "auto":
+        return bool(cfg.expand_gqa)
+    from repro.distributed.sharding import axis_size
+
+    n_model = axis_size("model")
+    if n_model <= 1:
+        return False
+    return cfg.n_kv_heads % n_model != 0 and cfg.n_heads % n_model == 0
+
+
+def _attn_full(cfg: ArchConfig, p: dict, x, pos_ctx, *, return_kv=False):
+    """Full-sequence attention sub-block. x [B, S, D]. ``pos_ctx`` is
+    (positions, precomputed rope tables) — tables are computed once per step
+    so scanned layer bodies share them (no per-layer [L,S,hd] trig stacks)."""
+    positions, tables = pos_ctx
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ _wt(cfg, p["wq"], x.dtype)).reshape(b, s, h, hd)
+    k = (x @ _wt(cfg, p["wk"], x.dtype)).reshape(b, s, kv, hd)
+    v = (x @ _wt(cfg, p["wv"], x.dtype)).reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, positions, cfg.rope_theta, tables)
+    k = rope(k, positions, cfg.rope_theta, tables)
+    # the cache keeps the GQA layout; collected stacks shard over seq so a
+    # 32k-prefill KV stack is [L, B, S/model, kv, hd] per device
+    kv_out = (shard(k, "batch", "seq", None, None), shard(v, "batch", "seq", None, None))
+    if _should_expand_gqa(cfg):
+        g = h // kv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q = shard(q, "batch", None, "tensor", None)
+    k = shard(k, "batch", None, "tensor", None)
+    v = shard(v, "batch", None, "tensor", None)
+    o = attention(
+        q, k, v, window=cfg.window, impl=cfg.attn_impl, chunk=cfg.attn_chunk
+    )
+    out = o.reshape(b, s, h * hd) @ _wt(cfg, p["wo"], x.dtype)
+    if return_kv:
+        return out, kv_out
+    return out
+
+
+def _attn_decode(cfg: ArchConfig, p: dict, x, k_cache, v_cache, slot_pos, pos):
+    """Single-token attention sub-block. x [B, D]; ring-buffer cache update."""
+    b, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    sc = k_cache.shape[1]
+    q = (x @ _wt(cfg, p["wq"], x.dtype)).reshape(b, 1, h, hd)
+    k = (x @ _wt(cfg, p["wk"], x.dtype)).reshape(b, 1, kv, hd)
+    v = (x @ _wt(cfg, p["wv"], x.dtype)).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    posv = pos[None] if pos.ndim == 0 else pos
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    slot = pos % sc
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+    o = decode_attention(
+        q[:, 0], k_cache, v_cache, slot_pos, pos, window=cfg.window
+    )
+    out = o.reshape(b, h * hd) @ _wt(cfg, p["wo"], x.dtype)
+    return out, k_cache, v_cache
+
+
+def _mlp(cfg, p, x):
+    return swiglu(
+        x, _wt(cfg, p["w1"], x.dtype), _wt(cfg, p["w3"], x.dtype),
+        _wt(cfg, p["w2"], x.dtype),
+    )
+
+
+def _ffn(cfg: ArchConfig, block: dict, x):
+    """Post-attention FFN (dense or MoE). Returns (out, aux_loss)."""
+    h = rmsnorm(x, block["ln2"])
+    if cfg.family == "moe":
+        return moe.moe_ffn(cfg, block["moe"], h)
+    return _mlp(cfg, block["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def _decoder_block_full(cfg, block, x, positions, *, return_kv=False):
+    if cfg.family == "ssm":
+        x = x + mamba2.mamba_forward(cfg, block["mamba"], rmsnorm(x, block["ln1"]))
+        return shard(x, "batch", "seq", None), None, 0.0
+    if return_kv:
+        o, kvs = _attn_full(cfg, block["attn"], rmsnorm(x, block["ln1"]), positions, return_kv=True)
+    else:
+        o, kvs = _attn_full(cfg, block["attn"], rmsnorm(x, block["ln1"]), positions), None
+    x = x + o
+    f, aux = _ffn(cfg, block, x)
+    x = shard(x + f, "batch", "seq", None)
+    return x, kvs, aux
+
+
+def _cross_block_full(cfg, block, x, image_kv):
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = block["attn"]
+    hidden = rmsnorm(x, block["ln1"])
+    q = (hidden @ _wt(cfg, p["wq"], x.dtype)).reshape(b, s, h, hd)
+    q = shard(q, "batch", None, "tensor", None)
+    ik, iv = _expand_kv(cfg, *image_kv)
+    o = cross_attention(q, ik, iv).reshape(b, s, h * hd) @ _wt(cfg, p["wo"], x.dtype)
+    x = x + jnp.tanh(block["gate_attn"]).astype(x.dtype) * o
+    f = _mlp(cfg, block["mlp"], rmsnorm(x, block["ln2"]))
+    x = x + jnp.tanh(block["gate_mlp"]).astype(x.dtype) * f
+    return shard(x, "batch", "seq", None)
+
+
+def _image_kv(cfg, block, image_embeds):
+    """Project (stubbed) image embeddings to this cross layer's K/V.
+
+    KV heads are expanded to the full head count when the arch qualifies
+    for GQA expansion so the cross scores shard cleanly over the model
+    axis (kv=8 can't split a 16-way axis)."""
+    b, t, _ = image_embeds.shape
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    p = block["attn"]
+    ik = (image_embeds @ _wt(cfg, p["wk"], image_embeds.dtype)).reshape(b, t, kv, hd)
+    iv = (image_embeds @ _wt(cfg, p["wv"], image_embeds.dtype)).reshape(b, t, kv, hd)
+    return ik, iv  # GQA layout (the cache layout); expand at the use site
+
+
+def _expand_kv(cfg, k, v):
+    if _should_expand_gqa(cfg):
+        g = cfg.n_heads // cfg.n_kv_heads
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    k = shard(k, "batch", None, "tensor", None)
+    v = shard(v, "batch", None, "tensor", None)
+    return k, v
+
+
+def _shared_block_full(cfg, params, x, x0, positions, *, return_kv=False):
+    """Zamba2 shared attention block on concat(h, embeddings)."""
+    block = params["shared_block"]
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = cat @ _wt(cfg, params["shared_in"], x.dtype)
+    if return_kv:
+        o, kvs = _attn_full(cfg, block["attn"], rmsnorm(h, block["ln1"]), positions, return_kv=True)
+    else:
+        o, kvs = _attn_full(cfg, block["attn"], rmsnorm(h, block["ln1"]), positions), None
+    h = h + o
+    h = h + _mlp(cfg, block["mlp"], rmsnorm(h, block["ln2"]))
+    return shard(x + h, "batch", "seq", None), kvs
+
+
+# ------------------------------------------------------------------ forward
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def _scan_or_loop(cfg, body, x, stacked, length):
+    """scan in production; python loop for roofline probes. body(x, leaf)->
+    (x, ys)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(_maybe_remat(cfg, body), x, stacked, length=length)
+    ys = []
+    for i in range(length):
+        layer = jax.tree.map(lambda a: a[i], stacked)
+        x, y = body(x, layer)
+        ys.append(y)
+    ys = jax.tree.map(lambda *a: jnp.stack(a), *ys) if ys and ys[0] is not None else None
+    return x, ys
+
+
+def _embed(cfg, params, tokens):
+    x = jnp.take(_wt(cfg, params["embed"], cfg.dtype), tokens, axis=0)
+    return shard(x, "batch", "seq", None)
+
+
+def _head(cfg, params, x):
+    x = rmsnorm(x, params["final_norm"])
+    logits = jax.lax.dot_general(
+        x, _wt(cfg, params["out_head"], x.dtype),
+        (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if cfg.vocab_padded > cfg.vocab:  # mask the shard-padding columns
+        logits = jnp.where(
+            jnp.arange(cfg.vocab_padded) < cfg.vocab, logits, -1e30
+        )
+    spec = ("batch",) + (None,) * (x.ndim - 2) + ("tensor",)
+    return shard(logits, *spec)
+
+
+def forward(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    image_embeds: jax.Array | None = None,
+    *,
+    collect_cache: bool = False,
+    head_last_only: bool = False,
+):
+    """Full-sequence forward. Returns (logits [B,S,V], aux_loss, kv_stacks).
+
+    ``head_last_only`` computes the unembedding for the final position only
+    (prefill never needs [B, S, V] logits)."""
+    b, s = tokens.shape
+    positions = _pos_ctx(cfg, s)
+    x = _embed(cfg, params, tokens)
+    aux_total = jnp.zeros((), jnp.float32)
+    kvs = None
+
+    # nested remat: the scan body is a GROUP for vlm/hybrid; checkpointing
+    # each layer inside bounds the backward live-set to one layer, not one
+    # group (hierarchical remat)
+    def _layer_fn(c, collect):
+        fn = lambda blk, x: _decoder_block_full(c, blk, x, positions, return_kv=collect)
+        return jax.checkpoint(fn) if cfg.remat else fn
+
+    if cfg.family == "vlm":
+        assert image_embeds is not None
+        g = cfg.n_layers // cfg.cross_attn_every
+        self_fn = _layer_fn(cfg, collect_cache)
+        cross_fn = (
+            jax.checkpoint(lambda cb, x: _cross_block_full(cfg, cb, x, _image_kv(cfg, cb, image_embeds)))
+            if cfg.remat
+            else (lambda cb, x: _cross_block_full(cfg, cb, x, _image_kv(cfg, cb, image_embeds)))
+        )
+
+        def group_body(carry, layer):
+            x, aux = carry
+            self_stack, cross_block = layer
+            kv_list = []
+            for i in range(cfg.cross_attn_every - 1):
+                blk = jax.tree.map(lambda a: a[i], self_stack)
+                x, kv_i, a = self_fn(blk, x)
+                aux = aux + a
+                kv_list.append(kv_i)
+            ikv = _image_kv(cfg, cross_block, image_embeds)
+            x = cross_fn(cross_block, x)
+            if collect_cache:
+                kv_stacked = jax.tree.map(lambda *a: jnp.stack(a), *kv_list)
+                ys = (kv_stacked, ikv)  # ([per,B,S,kv,hd]x2, image kv)
+            else:
+                ys = None
+            return (x, aux), ys
+
+        (x, aux_total), kvs = _scan_or_loop(
+            cfg, group_body, (x, aux_total),
+            (params["self_layers"], params["cross_layers"]), g,
+        )
+    elif cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        x0 = x
+        ssm_fn = _layer_fn(cfg.replace(family="ssm"), False)
+
+        def group_body(carry, mamba_stack):
+            x, aux = carry
+            x, kv_g = _shared_block_full(cfg, params, x, x0, positions, return_kv=collect_cache)
+            for i in range(cfg.shared_attn_every):
+                blk = jax.tree.map(lambda a: a[i], mamba_stack)
+                x, _, a = ssm_fn(blk, x)
+                aux = aux + a
+            return (x, aux), kv_g
+
+        (x, aux_total), kvs = _scan_or_loop(
+            cfg, group_body, (x, aux_total), params["mamba_groups"], g
+        )
+        if "mamba_tail" in params:
+            def tail_body(carry, blk):
+                x, aux = carry
+                x, _, a = _decoder_block_full(cfg.replace(family="ssm"), blk, x, positions)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = _scan_or_loop(
+                cfg, tail_body, (x, aux_total), params["mamba_tail"],
+                cfg.n_layers - g * cfg.shared_attn_every,
+            )
+    else:
+        def body(carry, block):
+            x, aux = carry
+            x, kv_l, a = _decoder_block_full(cfg, block, x, positions, return_kv=collect_cache)
+            return (x, aux + a), kv_l
+
+        (x, aux_total), kvs = _scan_or_loop(
+            cfg, body, (x, aux_total), params["layers"], cfg.n_layers
+        )
+
+    if head_last_only:
+        x = x[:, -1:]
+    logits = _head(cfg, params, x)
+    return logits, aux_total, kvs
+
+
+# ------------------------------------------------------------------ prefill
+def prefill(
+    cfg: ArchConfig,
+    params: dict,
+    tokens: jax.Array,
+    image_embeds: jax.Array | None = None,
+    *,
+    max_seq_len: int | None = None,
+):
+    """Prefill: returns (last-token logits [B,V], cache).
+
+    ``max_seq_len`` sizes the cache for the whole serving session (prompt +
+    decode headroom); it defaults to the prompt length."""
+    b, s = tokens.shape
+    max_seq_len = max_seq_len or s
+    if cfg.family in ("ssm", "hybrid"):
+        return _prefill_recurrent(cfg, params, tokens, max_seq_len)
+
+    logits, _, kvs = forward(
+        cfg, params, tokens, image_embeds, collect_cache=True, head_last_only=True
+    )
+    cache = cache_mod.init_cache(cfg, b, max_seq_len)
+    sc = cache_mod.cache_seq_len(cfg, max_seq_len)
+    if cfg.family == "vlm":
+        (k_all, v_all), (ik, iv) = kvs  # [G, per, B, S, kv, hd]
+        cache["xk"], cache["xv"] = ik, iv
+        k_stack = k_all.reshape((-1,) + k_all.shape[2:])
+        v_stack = v_all.reshape((-1,) + v_all.shape[2:])
+    else:
+        k_stack, v_stack = kvs
+    if sc == s:
+        # common serving case (cache sized to the prompt, or non-SWA with
+        # max_seq == prompt): the collected stacks ARE the cache — no
+        # zero-init + scatter round trip
+        cache["k"], cache["v"] = k_stack, v_stack
+        cache["slot_pos"] = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        return logits[:, 0], cache
+    # ring placement of the last min(s, sc) prompt positions
+    tail = min(s, sc)
+    positions = jnp.arange(s - tail, s)
+    slots = positions % sc
+    cache["k"] = cache["k"].at[:, :, slots].set(k_stack[:, :, s - tail :, :, :])
+    cache["v"] = cache["v"].at[:, :, slots].set(v_stack[:, :, s - tail :, :, :])
+    cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(positions[None, :])
+    return logits[:, 0], cache
+
+
+def _prefill_recurrent(
+    cfg: ArchConfig, params: dict, tokens: jax.Array, max_seq_len: int
+):
+    """SSM/hybrid prefill: full-seq forward while collecting final states."""
+    b, s = tokens.shape
+    positions = _pos_ctx(cfg, s)
+    x = _embed(cfg, params, tokens)
+    cache = cache_mod.init_cache(cfg, b, max_seq_len)
+    sc = cache_mod.cache_seq_len(cfg, max_seq_len)
+
+    def mamba_step(blk, x):
+        out, (conv, ssm) = mamba2.mamba_forward(
+            cfg, blk["mamba"], rmsnorm(x, blk["ln1"]), return_state=True
+        )
+        return x + out, (conv, ssm)
+
+    if cfg.family == "ssm":
+        def body(x, blk):
+            x, st = mamba_step(blk, x)
+            return x, st
+
+        x, states = _scan_or_loop(cfg, body, x, params["layers"], cfg.n_layers)
+        cache["conv"], cache["ssm"] = states
+        logits = _head(cfg, params, x[:, -1])
+        return logits, cache
+
+    # hybrid
+    g = cfg.n_layers // cfg.shared_attn_every
+    x0 = x
+
+    def group_body(x, mamba_stack):
+        x, kv_g = _shared_block_full(cfg, params, x, x0, positions, return_kv=True)
+        sts = []
+        for i in range(cfg.shared_attn_every):
+            blk = jax.tree.map(lambda a: a[i], mamba_stack)
+            x, st = mamba_step(blk, x)
+            sts.append(st)
+        sts = jax.tree.map(lambda *a: jnp.stack(a), *sts)
+        return x, (kv_g, sts)
+
+    x, (kv_groups, states) = _scan_or_loop(
+        cfg, group_body, x, params["mamba_groups"], g
+    )
+    conv, ssm = states  # [G, per, B, ...]
+    cache["mamba"]["conv"] = conv.reshape((-1,) + conv.shape[2:])
+    cache["mamba"]["ssm"] = ssm.reshape((-1,) + ssm.shape[2:])
+    if "mamba_tail" in params:
+        def tail_body(x, blk):
+            return mamba_step(blk, x)
+
+        x, tail_states = _scan_or_loop(
+            cfg, tail_body, x, params["mamba_tail"],
+            cfg.n_layers - g * cfg.shared_attn_every,
+        )
+        cache["mamba_tail"]["conv"], cache["mamba_tail"]["ssm"] = tail_states
+
+    k_g, v_g = kv_groups  # [G, B, S, kv, hd]
+    tail = min(s, sc)
+    positions_tail = jnp.arange(s - tail, s)
+    slots = positions_tail % sc
+    cache["shared"]["k"] = cache["shared"]["k"].at[:, :, slots].set(
+        k_g[:, :, s - tail :]
+    )
+    cache["shared"]["v"] = cache["shared"]["v"].at[:, :, slots].set(
+        v_g[:, :, s - tail :]
+    )
+    cache["slot_pos"] = cache["slot_pos"].at[:, slots].set(positions_tail[None, :])
+    logits = _head(cfg, params, x[:, -1])
+    return logits, cache
+
+
+# ------------------------------------------------------------------ decode
+def decode(
+    cfg: ArchConfig,
+    params: dict,
+    cache: dict,
+    token: jax.Array,
+    pos: jax.Array,
+):
+    """One decode step. token [B], pos scalar → (logits [B,V], new cache)."""
+    b = token.shape[0]
+    x = jnp.take(_wt(cfg, params["embed"], cfg.dtype), token, axis=0)  # [B, D]
+    x = shard(x, "batch", None)
+    cache = dict(cache)
+
+    def dense_block_decode(blk, x, kc, vc, slot_pos):
+        o, kc, vc = _attn_decode(
+            cfg, blk["attn"], rmsnorm(x, blk["ln1"]), kc, vc, slot_pos, pos
+        )
+        x = x + o
+        if cfg.family == "moe":
+            f, _ = moe.moe_ffn(cfg, blk["moe"], rmsnorm(x, blk["ln2"])[:, None, :])
+            f = f[:, 0]
+        else:
+            f = _mlp(cfg, blk["mlp"], rmsnorm(x, blk["ln2"]))
+        return x + f, kc, vc
+
+    def mamba_block_decode(blk, x, conv, ssm):
+        out, (conv, ssm) = mamba2.mamba_decode(
+            cfg, blk["mamba"], rmsnorm(x, blk["ln1"]), conv, ssm
+        )
+        return x + out, conv, ssm
+
+    def _idx(a, l):
+        return jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+
+    def _upd(a, v, l):
+        return jax.lax.dynamic_update_index_in_dim(a, v, l, 0)
+
+    if cfg.family == "ssm":
+        # caches ride the scan carry: the while-loop buffer is updated in
+        # place (donated), instead of stacking a fresh ys cache copy
+        def body(carry, layer):
+            x, conv_all, ssm_all = carry
+            blk, l = layer
+            x, conv, ssm = mamba_block_decode(blk, x, _idx(conv_all, l), _idx(ssm_all, l))
+            return (x, _upd(conv_all, conv, l), _upd(ssm_all, ssm, l)), None
+
+        (x, conv, ssm), _ = _scan_or_loop(
+            cfg, body, (x, cache["conv"], cache["ssm"]),
+            (params["layers"], jnp.arange(cfg.n_layers)), cfg.n_layers,
+        )
+        cache["conv"], cache["ssm"] = conv, ssm
+        return _head(cfg, params, x), cache
+
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        per = cfg.shared_attn_every
+        x0 = x
+        sc = cache["slot_pos"].shape[1]
+        slot_pos = cache["slot_pos"].at[:, pos % sc].set(pos)  # token sees itself
+        mcache = cache["mamba"]
+        mconv = mcache["conv"].reshape((g, per) + mcache["conv"].shape[1:])
+        mssm = mcache["ssm"].reshape((g, per) + mcache["ssm"].shape[1:])
+
+        def group_body(carry, layer):
+            x, k_all, v_all, conv_all, ssm_all = carry
+            mamba_stack, gi = layer
+            # shared block (single token)
+            cat = jnp.concatenate([x, x0], axis=-1)
+            h = cat @ _wt(cfg, params["shared_in"], x.dtype)
+            blk = params["shared_block"]
+            o, kc, vc = _attn_decode(
+                cfg, blk["attn"], rmsnorm(h, blk["ln1"]),
+                _idx(k_all, gi), _idx(v_all, gi), slot_pos, pos,
+            )
+            k_all = _upd(k_all, kc, gi)
+            v_all = _upd(v_all, vc, gi)
+            h = h + o
+            h = h + _mlp(cfg, blk["mlp"], rmsnorm(h, blk["ln2"]))
+            x = x + h
+            for i in range(per):
+                mblk = jax.tree.map(lambda a: a[i], mamba_stack)
+                x, cv, sm = mamba_block_decode(
+                    mblk, x, _idx(conv_all, gi)[i], _idx(ssm_all, gi)[i]
+                )
+                conv_all = conv_all.at[gi, i].set(cv)
+                ssm_all = ssm_all.at[gi, i].set(sm)
+            return (x, k_all, v_all, conv_all, ssm_all), None
+
+        (x, kc, vc, conv, ssm), _ = _scan_or_loop(
+            cfg, group_body,
+            (x, cache["shared"]["k"], cache["shared"]["v"], mconv, mssm),
+            (params["mamba_groups"], jnp.arange(g)),
+            g,
+        )
+        cache["shared"] = {"k": kc, "v": vc}
+        cache["mamba"] = {
+            "conv": conv.reshape((-1,) + conv.shape[2:]),
+            "ssm": ssm.reshape((-1,) + ssm.shape[2:]),
+        }
+        if "mamba_tail" in params:
+            def tail_body(carry, layer):
+                x, conv_all, ssm_all = carry
+                blk, l = layer
+                x, cv, sm = mamba_block_decode(
+                    blk, x, _idx(conv_all, l), _idx(ssm_all, l)
+                )
+                return (x, _upd(conv_all, cv, l), _upd(ssm_all, sm, l)), None
+
+            tail_n = cfg.n_layers - g * per
+            (x, tconv, tssm), _ = _scan_or_loop(
+                cfg, tail_body,
+                (x, cache["mamba_tail"]["conv"], cache["mamba_tail"]["ssm"]),
+                (params["mamba_tail"], jnp.arange(tail_n)),
+                tail_n,
+            )
+            cache["mamba_tail"] = {"conv": tconv, "ssm": tssm}
+        cache["slot_pos"] = slot_pos
+        return _head(cfg, params, x), cache
+
+    sc = cache["slot_pos"].shape[1]
+    slot_pos = cache["slot_pos"].at[:, pos % sc].set(pos)  # token sees itself
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+
+        per = cfg.cross_attn_every - 1
+
+        def group_body(carry, layer):
+            x, k_all, v_all = carry
+            self_stack, cross_block, gi, xk, xv = layer
+            for i in range(per):
+                blk = jax.tree.map(lambda a: a[i], self_stack)
+                l = gi * per + i
+                x, kc_i, vc_i = dense_block_decode(
+                    blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos
+                )
+                k_all = _upd(k_all, kc_i, l)
+                v_all = _upd(v_all, vc_i, l)
+            # cross layer: cached image KV, single-token query
+            p = cross_block["attn"]
+            h = rmsnorm(x, cross_block["ln1"])
+            q = (h @ _wt(cfg, p["wq"], x.dtype)).reshape(
+                x.shape[0], 1, cfg.n_heads, cfg.hd
+            )
+            o = cross_attention(q, xk, xv)[:, 0].reshape(x.shape[0], -1)
+            x = x + jnp.tanh(cross_block["gate_attn"]).astype(x.dtype) * (
+                o @ _wt(cfg, p["wo"], x.dtype)
+            )
+            f = _mlp(cfg, cross_block["mlp"], rmsnorm(x, cross_block["ln2"]))
+            x = x + jnp.tanh(cross_block["gate_mlp"]).astype(x.dtype) * f
+            return (x, k_all, v_all), None
+
+        (x, kc, vc), _ = _scan_or_loop(
+            cfg, group_body, (x, cache["k"], cache["v"]),
+            (params["self_layers"], params["cross_layers"], jnp.arange(g),
+             cache["xk"], cache["xv"]),
+            g,
+        )
+        cache["k"], cache["v"] = kc, vc
+    else:
+        def body(carry, layer):
+            x, k_all, v_all = carry
+            blk, l = layer
+            x, kc, vc = dense_block_decode(
+                blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos
+            )
+            return (x, _upd(k_all, kc, l), _upd(v_all, vc, l)), None
+
+        (x, kc, vc), _ = _scan_or_loop(
+            cfg, body, (x, cache["k"], cache["v"]),
+            (params["layers"], jnp.arange(cfg.n_layers)),
+            cfg.n_layers,
+        )
+        cache["k"], cache["v"] = kc, vc
+
+    cache["slot_pos"] = slot_pos
+    return _head(cfg, params, x), cache

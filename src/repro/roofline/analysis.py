@@ -1,0 +1,218 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_global   / (chips · peak_FLOP/s)
+  memory     = HLO_bytes_global   / (chips · HBM_bw)
+  collective = coll_bytes_global  / (chips · link_bw)
+
+``cost_analysis()`` on an SPMD-partitioned module reports *per-device*
+numbers, so global = per_device · chips and each term reduces to
+per_device / unit_bw. Collective bytes are not in cost_analysis; we parse
+the compiled HLO and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Loop caveat (measured, DESIGN.md §7): XLA's cost model counts scan/while
+bodies ONCE. The production program scans over layers, so flops/bytes/
+collectives from it undercount by ~n_layers. The dry-run therefore also
+lowers two *unrolled* probes (depth p and 2p layer groups) and
+extrapolates ``cost(L) = a + b·L`` exactly — homogeneous stacks make this
+linear identity, not a model fit.
+
+TPU v5e-class hardware constants per the brief: 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z]+\d*)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_RE = re.compile(r"%[\w.\-]+")
+
+
+def _def_bytes(rhs: str) -> int:
+    """Bytes of an instruction's result type(s) — the text between '=' and
+    the opcode, e.g. ``(f32[8,4]{1,0}, u32[])`` or ``bf16[16,4096]{1,0}``."""
+    # cut at the opcode: first space not inside brackets/parens
+    total = 0
+    for m in _SHAPE_RE.finditer(rhs.split(" ", 1)[0] if rhs.startswith(("(", "f", "b", "s", "u", "p", "c")) else rhs):
+        if m.group(1) in _DTYPE_BYTES:
+            total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, Any]:
+    """Per-device *operand* bytes of every collective op in the module.
+
+    Post-optimization HLO references operands by name only, so this is a
+    two-pass parse: (1) symbol table %name -> result bytes, (2) for each
+    collective (and its async -start variant), sum the operand sizes.
+    Loop bodies are separate computations listed once — consistent with the
+    once-per-body convention of cost_analysis that the probe extrapolation
+    corrects (see module docstring).
+    """
+    defs: dict[str, int] = {}
+    coll_lines: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        # result type(s): the prefix of rhs up to the opcode token
+        type_part = rhs.split("=", 1)[0]
+        total = 0
+        depth = 0
+        end = 0
+        for end, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            elif ch == " " and depth == 0:
+                break
+        type_str = rhs[:end]
+        for sm in _SHAPE_RE.finditer(type_str):
+            if sm.group(1) in _DTYPE_BYTES:
+                total += _shape_bytes(sm.group(1), sm.group(2))
+        defs[name] = total
+        rest = rhs[end:]
+        for kind in _COLLECTIVES:
+            if rest.lstrip().startswith((f"{kind}(", f"{kind}-start(")):
+                paren = rest[rest.find("(") + 1:]
+                depth = 1
+                for j, ch in enumerate(paren):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            paren = paren[:j]
+                            break
+                coll_lines.append((kind, paren))
+                break
+
+    out: dict[str, Any] = {k: {"bytes": 0, "count": 0} for k in _COLLECTIVES}
+    for kind, args in coll_lines:
+        nbytes = sum(defs.get(op, 0) for op in _OPERAND_RE.findall(args))
+        out[kind]["bytes"] += nbytes
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values() if isinstance(v, dict))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """Per-step terms in seconds (per-device quantities / unit bandwidth)."""
+
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    collective_bytes: float  # per-device collective operand bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self) | {
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def terms_from_costs(flops: float, hbm_bytes: float, coll_bytes: float) -> RooflineTerms:
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm_bytes,
+        collective_bytes=coll_bytes,
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=hbm_bytes / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+    )
+
+
+def extrapolate_linear(
+    cost_p: dict[str, float], cost_2p: dict[str, float], p: int, total: int
+) -> dict[str, float]:
+    """Exact ``cost(L) = a + b·L`` from unrolled probes at depths p and 2p."""
+    out = {}
+    for k in cost_p:
+        b = (cost_2p[k] - cost_p[k]) / p
+        a = cost_p[k] - b * p
+        out[k] = a + b * total
+    return out
+
+
+def model_flops(cfg, shape, n_params: int, n_active: int) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train (N_active for MoE; arXiv:2001.08361
+    convention, non-embedding N) + causal-attention term; 2·N·D for prefill;
+    2·N·B per decode step + cache reads are memory not flops."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = b * s
+    att = 0.0
+    if cfg.n_heads:
+        # 2·(QK^T)+2·(PV) per layer, causal halves the square
+        window = cfg.window or s
+        eff = min(window, s)
+        att_tokens = b * s * min(s, eff) / (1 if cfg.window and s > window else 2)
+        att = 4 * cfg.n_layers * cfg.n_heads * cfg.hd * att_tokens
+        if cfg.family == "vlm":
+            att = att * (cfg.cross_attn_every - 1) / cfg.cross_attn_every
+        if cfg.family == "hybrid":
+            att = att * (cfg.n_layers // cfg.shared_attn_every) / cfg.n_layers
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens + 3.0 * att
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens + att
+    # decode: one token per sequence
+    dec_att = 0.0
+    if cfg.n_heads:
+        eff = min(cfg.window or s, s)
+        layers_with_attn = (
+            cfg.n_layers // cfg.shared_attn_every
+            if cfg.family == "hybrid"
+            else cfg.n_layers
+        )
+        dec_att = 4 * layers_with_attn * cfg.n_heads * cfg.hd * b * eff
+    return 2.0 * n_active * b + dec_att

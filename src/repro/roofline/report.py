@@ -1,0 +1,172 @@
+"""Generate the §Dry-run / §Roofline markdown tables from the per-cell JSON
+records that launch/dryrun.py writes.
+
+  PYTHONPATH=src python -m repro.roofline.report [--results results/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro import configs
+from repro.roofline import analysis
+
+
+def _load(results: pathlib.Path, mesh: str) -> dict[tuple[str, str], dict]:
+    out = {}
+    for f in sorted((results / mesh).glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag"):
+            continue  # perf-experiment records are reported in §Perf
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def _n_params(cfg) -> tuple[int, int]:
+    """(total, active) parameter counts from the param tree shapes."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+
+    shapes = jax.eval_shape(
+        lambda k: transformer.init_params(cfg, k),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = emb = routed = 0
+    for path, leaf in flat:
+        names = [str(getattr(p, "key", "")) for p in path]
+        sz = leaf.size
+        total += sz
+        if names[-1] in ("embed", "out_head"):
+            emb += sz
+        if "moe" in names and names[-1] in ("w1", "w2", "w3") and "shared" not in names:
+            routed += sz
+    non_emb = total - emb
+    active = non_emb
+    if cfg.n_experts:
+        active = non_emb - routed + routed * cfg.top_k / cfg.n_experts
+    return int(non_emb), int(active)
+
+
+def roofline_row(rec: dict, cfg, shape) -> dict:
+    chips = rec["chips"]
+    probe = rec.get("probe")
+    if probe:
+        c = probe["extrapolated"]
+        flops, hbm, coll = c["flops"], c["bytes_accessed"], c["collective_bytes"]
+        source = "probe-extrapolated"
+    else:
+        flops = rec["flops"]
+        hbm = rec["bytes_accessed"]
+        coll = rec["collectives"]["total_bytes"]
+        source = "scan-body-once (undercount)"
+    terms = analysis.terms_from_costs(flops, hbm, coll)
+    n_total, n_active = _n_params(cfg)
+    mf = analysis.model_flops(cfg, shape, n_total, n_active)
+    mf_dev = mf / chips
+    useful = mf_dev / flops if flops else 0.0
+    # roofline fraction: useful model flops vs what the bound-time allows
+    bound = terms.bound_s
+    mfu_at_bound = mf_dev / analysis.PEAK_FLOPS / bound if bound else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "compute_s": terms.compute_s,
+        "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s,
+        "dominant": terms.dominant,
+        "model_flops_ratio": useful,
+        "roofline_fraction": mfu_at_bound,
+        "peak_gib": rec["memory"]["peak_bytes_est"] / 2**30,
+        "source": source,
+    }
+
+
+def build_tables(results: pathlib.Path) -> tuple[str, str, list[dict]]:
+    single = _load(results, "16x16")
+    multi = _load(results, "2x16x16")
+
+    dry = []
+    dry.append("| arch | shape | 16x16 peak GiB | 16x16 compile s | 2x16x16 peak GiB | 2x16x16 compile s |")
+    dry.append("|---|---|---|---|---|---|")
+    runnable = set(configs.runnable_cells())
+    for arch in configs.ARCHS:
+        for sname in configs.SHAPES:
+            s = single.get((arch, sname))
+            m = multi.get((arch, sname))
+            if (arch, sname) not in runnable:
+                dry.append(f"| {arch} | {sname} | N/A (full attention) | — | N/A | — |")
+                continue
+            sp = f"{s['memory']['peak_bytes_est']/2**30:.2f}" if s else "…"
+            st = f"{s['compile_s']:.0f}" if s else "—"
+            mp = f"{m['memory']['peak_bytes_est']/2**30:.2f}" if m else "…"
+            mt = f"{m['compile_s']:.0f}" if m else "—"
+            dry.append(f"| {arch} | {sname} | {sp} | {st} | {mp} | {mt} |")
+
+    roof = []
+    roof.append("| arch | shape | compute s | memory s (ub) | collective s | dominant | comp:coll | MODEL/HLO | roofline frac | to move the dominant term |")
+    roof.append("|---|---|---|---|---|---|---|---|---|---|")
+    rows = []
+    for arch in configs.ARCHS:
+        for sname in configs.SHAPES:
+            rec = single.get((arch, sname))
+            if rec is None:
+                continue
+            cfg = configs.get_config(arch)
+            row = roofline_row(rec, cfg, configs.SHAPES[sname])
+            rows.append(row)
+            cc = (
+                f"{row['compute_s']/max(row['collective_s'], 1e-12):.1f}"
+                if row["collective_s"] > 0
+                else "∞"
+            )
+            roof.append(
+                f"| {row['arch']} | {row['shape']} | {row['compute_s']:.3e} | "
+                f"{row['memory_s']:.3e} | {row['collective_s']:.3e} | "
+                f"{row['dominant']} | {cc} | {row['model_flops_ratio']:.2f} | "
+                f"{row['roofline_fraction']:.1%} | {_advice(row, configs.SHAPES[sname])} |"
+            )
+    return "\n".join(dry), "\n".join(roof), rows
+
+
+def _advice(row: dict, shape) -> str:
+    comp, coll = row["compute_s"], row["collective_s"]
+    if shape.kind == "decode":
+        if shape.global_batch == 1:
+            return "latency-bound by design (batch 1): batch requests or shrink the mesh slice"
+        return "cache reads dominate: quantize KV (the BWKM codebook path) or raise decode batch"
+    if coll > comp:
+        return "collective-heavy: bf16 gathers, overlap with compute, cut a2a capacity factor"
+    if row["model_flops_ratio"] < 0.8:
+        return "recompute/dispatch waste: relax remat policy, trim MoE capacity"
+    return "near compute-bound: memory term is the unfused-CPU upper bound; on TPU expect MFU ≈ MODEL/HLO × compute share"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="results/dryrun")
+    ap.add_argument("--write", action="store_true",
+                    help="inject tables into EXPERIMENTS.md at the markers")
+    args = ap.parse_args()
+    results = pathlib.Path(args.results)
+    dry, roof, rows = build_tables(results)
+    if args.write:
+        exp = pathlib.Path("EXPERIMENTS.md")
+        text = exp.read_text()
+        text = text.replace("<!-- DRYRUN_TABLE -->", dry)
+        text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+        exp.write_text(text)
+        print(f"wrote tables into {exp} ({len(rows)} roofline rows)")
+    else:
+        print(dry)
+        print()
+        print(roof)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Training substrate: in-repo AdamW, train step, checkpointing, schedules."""

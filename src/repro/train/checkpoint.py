@@ -1,0 +1,116 @@
+"""Checkpoint save/restore with elastic resharding.
+
+Checkpoints are mesh-independent: every leaf is gathered to host and stored
+as a flat ``path -> array`` npz plus a JSON manifest (step, config digest,
+data-loader cursor). Restore ``device_put``s each leaf with the sharding
+rules of the *current* mesh — so a run checkpointed on 16×16 restarts on
+2×16×16 (or 1 CPU) unchanged: elastic up/down-scaling, and the recovery
+path after node failure (synchronous-collective designs restart from the
+last checkpoint; see DESIGN.md §5).
+
+In a multi-controller deployment each host would write only its addressable
+shards (same manifest format, per-shard files); the single-process container
+exercises the gather path.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.distributed import sharding as sh
+
+__all__ = ["save", "restore", "latest_step"]
+
+_SEP = "§"
+
+
+def _flatten(tree: Any) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def save(
+    directory: str | pathlib.Path,
+    step: int,
+    state: dict[str, Any],
+    extra: dict | None = None,
+) -> pathlib.Path:
+    """Write ``<dir>/step_<n>/state.npz`` + manifest. Atomic via rename."""
+    directory = pathlib.Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f".tmp_step_{step:08d}"
+    tmp.mkdir(parents=True, exist_ok=True)
+    flat = {}
+    for name, tree in state.items():
+        for k, v in _flatten(tree).items():
+            flat[f"{name}{_SEP}{k}"] = v
+    np.savez(tmp / "state.npz", **flat)
+    manifest = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    if final.exists():
+        import shutil
+
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | pathlib.Path) -> int | None:
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return None
+    steps = sorted(
+        int(p.name.split("_")[1]) for p in directory.glob("step_*") if p.is_dir()
+    )
+    return steps[-1] if steps else None
+
+
+def restore(
+    directory: str | pathlib.Path,
+    step: int,
+    state_template: dict[str, Any],
+    shardings: dict[str, Any] | None = None,
+) -> tuple[dict[str, Any], dict]:
+    """Restore onto the current mesh. ``state_template`` supplies pytree
+    structure; ``shardings`` (same structure) supplies target placements —
+    this is where elastic resharding happens."""
+    directory = pathlib.Path(directory) / f"step_{step:08d}"
+    data = np.load(directory / "state.npz")
+    manifest = json.loads((directory / "manifest.json").read_text())
+
+    out: dict[str, Any] = {}
+    for name, tree in state_template.items():
+        paths, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        leaves = []
+        shard_tree = shardings.get(name) if shardings else None
+        shard_leaves = (
+            jax.tree_util.tree_flatten_with_path(shard_tree)[0]
+            if shard_tree is not None
+            else [None] * len(paths)
+        )
+        for (path, leaf), shard_entry in zip(paths, shard_leaves):
+            key = f"{name}{_SEP}" + _SEP.join(
+                str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                for p in path
+            )
+            arr = data[key]
+            assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+            target = shard_entry[1] if shard_entry is not None else None
+            leaves.append(
+                jax.device_put(arr.astype(leaf.dtype), target)
+                if target is not None
+                else jax.device_put(arr.astype(leaf.dtype))
+            )
+        out[name] = jax.tree_util.tree_unflatten(treedef, leaves)
+    return out, manifest["extra"]

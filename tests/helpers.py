@@ -1,0 +1,38 @@
+"""Shared test utilities: dataset generators and exact f64 error oracles."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gmm(key, n: int, d: int, k: int, spread: float = 8.0, noise: float = 1.0):
+    kc, kz, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    z = jax.random.randint(kz, (n,), 0, k)
+    x = centers[z] + noise * jax.random.normal(kn, (n, d))
+    return jnp.asarray(x, jnp.float32)
+
+
+def error_f64(x, c) -> float:
+    """Exact E^D(C) in float64 (Eq. 1) — the oracle for theorem tests."""
+    x = np.asarray(x, np.float64)
+    c = np.asarray(c, np.float64)
+    d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    return float(d2.min(axis=1).sum())
+
+
+def weighted_error_f64(reps, w, c) -> float:
+    reps = np.asarray(reps, np.float64)
+    w = np.asarray(w, np.float64)
+    c = np.asarray(c, np.float64)
+    d2 = ((reps[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    return float((w * d2.min(axis=1)).sum())
+
+
+def assign_f64(x, c) -> np.ndarray:
+    x = np.asarray(x, np.float64)
+    c = np.asarray(c, np.float64)
+    d2 = ((x[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+    return d2.argmin(axis=1)

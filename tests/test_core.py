@@ -1,0 +1,203 @@
+"""Unit tests: weighted Lloyd, seeding, misassignment mechanics, BWKM driver,
+baselines."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import baselines, bwkm, metrics, misassignment as mis, partition as pm
+from repro.core.kmeanspp import afkmc2, forgy, kmeanspp, weighted_kmeanspp
+from repro.core.lloyd import lloyd, weighted_lloyd
+from repro.kernels import ref
+
+from helpers import error_f64, gmm, weighted_error_f64
+
+
+# ---------------------------------------------------------------- seeding
+def test_forgy_selects_rows():
+    x = gmm(jax.random.PRNGKey(0), 100, 3, 4)
+    c = forgy(jax.random.PRNGKey(1), x, 5)
+    xs = np.asarray(x)
+    for row in np.asarray(c):
+        assert (np.abs(xs - row).sum(1) < 1e-6).any()
+
+
+def test_weighted_kmeanspp_ignores_zero_weight():
+    key = jax.random.PRNGKey(2)
+    x = jnp.concatenate([jnp.zeros((10, 2)), 100.0 + jnp.zeros((10, 2))])
+    w = jnp.concatenate([jnp.ones(10), jnp.zeros(10)])
+    for seed in range(5):
+        c = weighted_kmeanspp(jax.random.PRNGKey(seed), x, w, 3)
+        assert bool(jnp.all(c < 50.0)), "picked a zero-weight point"
+
+
+def test_kmeanspp_spreads_seeds():
+    """On well-separated clusters, KM++ should hit every cluster most times."""
+    x = gmm(jax.random.PRNGKey(3), 3000, 2, 5, spread=30.0, noise=0.3)
+    hits = 0
+    for seed in range(10):
+        c = kmeanspp(jax.random.PRNGKey(seed), x, 5)
+        a, _, _ = ref.assign_top2(x, c)
+        hits += int(len(np.unique(np.asarray(a))) == 5)
+    assert hits >= 8
+
+
+def test_afkmc2_selects_rows():
+    x = gmm(jax.random.PRNGKey(4), 500, 3, 4)
+    c = afkmc2(jax.random.PRNGKey(5), x, 4, chain_length=50)
+    xs = np.asarray(x)
+    for row in np.asarray(c):
+        assert (np.abs(xs - row).sum(1) < 1e-6).any()
+
+
+# ---------------------------------------------------------------- lloyd
+def test_weighted_lloyd_monotone_weighted_error():
+    key = jax.random.PRNGKey(6)
+    x = gmm(key, 500, 4, 3)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(7), (500,))) + 0.1
+    c0 = forgy(jax.random.PRNGKey(8), x, 3)
+    errs = []
+    c = c0
+    for _ in range(6):
+        res = weighted_lloyd(x, w, c, max_iters=1, epsilon=0.0)
+        errs.append(weighted_error_f64(x, w, res.centroids))
+        c = res.centroids
+    assert all(e2 <= e1 * (1 + 1e-9) for e1, e2 in zip(errs, errs[1:])), errs
+
+
+def test_lloyd_top2_consistency():
+    x = gmm(jax.random.PRNGKey(9), 300, 3, 4)
+    c0 = kmeanspp(jax.random.PRNGKey(10), x, 4)
+    res = lloyd(x, c0, max_iters=10)
+    assert bool(jnp.all(res.d1 <= res.d2 + 1e-6))
+    d2ref = ref.pairwise_sqdist(x, res.centroids)
+    np.testing.assert_array_equal(np.asarray(res.assign), np.asarray(d2ref).argmin(1))
+
+
+def test_lloyd_empty_cluster_keeps_centroid():
+    x = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [0.0, 1.0]], jnp.float32)
+    far = jnp.asarray([[100.0, 100.0]], jnp.float32)
+    c0 = jnp.concatenate([x[:1], far])
+    res = lloyd(x, c0, max_iters=3)
+    np.testing.assert_allclose(np.asarray(res.centroids[1]), [100.0, 100.0])
+
+
+def test_lloyd_counts_distances():
+    x = gmm(jax.random.PRNGKey(11), 200, 2, 3)
+    c0 = forgy(jax.random.PRNGKey(12), x, 3)
+    res = lloyd(x, c0, max_iters=5, epsilon=0.0)
+    expected = 200 * 3 * (int(res.iters) + 1)  # +1 for the initial assignment
+    assert float(res.distances) == expected
+
+
+# ---------------------------------------------------------------- misassignment
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_misassignment_matches_definition(seed):
+    key = jax.random.PRNGKey(seed)
+    x = gmm(key, 300, 3, 4)
+    part = pm.create_partition(x, capacity=64)
+    for i in range(3):
+        part = pm.split_blocks(part, x, part.active)
+    reps, w = pm.representatives(part)
+    c = jax.random.normal(jax.random.PRNGKey(seed ^ 1), (4, 3)) * 6
+    _, d1, d2 = ref.assign_top2(reps, c)
+    eps = np.asarray(mis.misassignment(part, d1, d2))
+    # recompute in f64
+    reps64 = np.asarray(reps, np.float64)
+    c64 = np.asarray(c, np.float64)
+    lb = np.asarray(pm.diagonals(part), np.float64)
+    dist = np.sqrt(((reps64[:, None] - c64[None]) ** 2).sum(-1))
+    dist.sort(axis=1)
+    delta = dist[:, 1] - dist[:, 0]
+    occupied = np.asarray(part.count) > 0
+    expect = np.where(occupied, np.maximum(0.0, 2 * lb - delta), 0.0)
+    np.testing.assert_allclose(eps, expect, rtol=2e-3, atol=2e-3)
+
+
+def test_sample_boundary_only_positive_eps():
+    eps = jnp.asarray([0.0, 1.0, 0.0, 2.0, 0.0])
+    for seed in range(10):
+        chosen = mis.sample_boundary(jax.random.PRNGKey(seed), eps, 2)
+        assert not bool(chosen[0] | chosen[2] | chosen[4])
+
+
+def test_sample_boundary_empty_eps_selects_nothing():
+    eps = jnp.zeros(8)
+    chosen = mis.sample_boundary(jax.random.PRNGKey(0), eps, 4)
+    assert not bool(jnp.any(chosen))
+
+
+# ---------------------------------------------------------------- BWKM driver
+def test_bwkm_reaches_kmpp_quality_with_fewer_distances():
+    x = gmm(jax.random.PRNGKey(20), 30000, 5, 9, spread=10.0)
+    res = bwkm.fit(jax.random.PRNGKey(21), x, bwkm.BWKMConfig(k=9, max_iters=25))
+    c_pp, d_pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(22), x, 9)
+    e_b = error_f64(x, res.centroids)
+    e_pp = error_f64(x, c_pp)
+    rel = (e_b - e_pp) / e_pp
+    assert rel < 0.05, f"BWKM rel error vs KM++ {rel:.3f}"
+    assert res.distances < 0.2 * d_pp, (res.distances, d_pp)
+
+
+def test_bwkm_distance_budget_stops():
+    x = gmm(jax.random.PRNGKey(23), 5000, 3, 4)
+    res = bwkm.fit(
+        jax.random.PRNGKey(24),
+        x,
+        bwkm.BWKMConfig(k=4, max_iters=50, distance_budget=20000.0),
+    )
+    assert res.stop_reason in ("distance-budget", "boundary-empty")
+
+
+def test_bwkm_blocks_grow_monotonically():
+    x = gmm(jax.random.PRNGKey(25), 8000, 4, 5)
+    res = bwkm.fit(jax.random.PRNGKey(26), x, bwkm.BWKMConfig(k=5, max_iters=10))
+    assert all(b2 >= b1 for b1, b2 in zip(res.n_blocks, res.n_blocks[1:]))
+    assert res.n_blocks[0] >= 5  # at least K blocks after init
+
+
+def test_bwkm_trace_for_benchmark():
+    x = gmm(jax.random.PRNGKey(27), 4000, 3, 3)
+    res = bwkm.fit(
+        jax.random.PRNGKey(28), x, bwkm.BWKMConfig(k=3, max_iters=6),
+        trace_centroids=True,
+    )
+    assert len(res.trace) == res.iterations
+    dists = [t["distances"] for t in res.trace]
+    assert all(d2 >= d1 for d1, d2 in zip(dists, dists[1:]))
+
+
+# ---------------------------------------------------------------- baselines
+@pytest.mark.parametrize(
+    "fn,kwargs",
+    [
+        (baselines.forgy_kmeans, {}),
+        (baselines.kmeanspp_kmeans, {}),
+        (baselines.kmc2_kmeans, {"chain_length": 50}),
+        (baselines.minibatch_kmeans, {"batch": 100, "iters": 100}),
+        (baselines.grid_rpkm, {"max_level": 4}),
+    ],
+)
+def test_baselines_return_finite_solutions(fn, kwargs):
+    x = gmm(jax.random.PRNGKey(30), 3000, 4, 5)
+    c, d = fn(jax.random.PRNGKey(31), x, 5, **kwargs)
+    assert c.shape == (5, 4)
+    assert np.isfinite(np.asarray(c)).all()
+    assert d > 0
+    assert np.isfinite(error_f64(x, c))
+
+
+def test_relative_errors():
+    rel = metrics.relative_errors({"a": 100.0, "b": 110.0, "c": 150.0})
+    assert rel["a"] == 0.0
+    np.testing.assert_allclose(rel["b"], 0.1)
+
+
+def test_kmeans_error_batched_matches_f64():
+    x = gmm(jax.random.PRNGKey(32), 5000, 6, 4)
+    c = kmeanspp(jax.random.PRNGKey(33), x, 4)
+    e = float(metrics.kmeans_error(x, c, batch=512))
+    assert abs(e - error_f64(x, c)) / error_f64(x, c) < 1e-4

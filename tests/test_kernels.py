@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + property tests.
+
+The container is CPU-only, so every kernel runs in ``interpret=True`` mode
+(the kernel body executes in Python with the same blocking/masking logic
+that the Mosaic compiler would lower for TPU).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.cluster_update import cluster_sums_pallas
+from repro.kernels.distance_assign import assign_top2_pallas
+
+SHAPES = [
+    # (n, d, k) — aligned, ragged, tiny, K==1, K>bk, d>128
+    (256, 128, 128),
+    (100, 17, 3),
+    (1, 5, 1),
+    (37, 2, 9),
+    (300, 130, 150),
+    (512, 256, 257),
+    (65, 7, 33),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _data(n, d, k, dtype, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = (jax.random.normal(kx, (n, d)) * 3).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 3).astype(dtype)
+    return x, c
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assign_top2_matches_oracle(n, d, k, dtype):
+    x, c = _data(n, d, k, dtype)
+    a_ref, d1_ref, d2_ref = ref.assign_top2(x, c)
+    a, d1, d2 = assign_top2_pallas(x, c, interpret=True)
+    # assignment may differ only between exactly-tied centroids
+    same = np.asarray(a) == np.asarray(a_ref)
+    if not same.all():
+        dd = np.asarray(ref.pairwise_sqdist(x, c))
+        bad = np.where(~same)[0]
+        for i in bad:
+            np.testing.assert_allclose(dd[i, a[i]], dd[i, a_ref[i]], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d1_ref), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_ref), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cluster_sums_matches_oracle(n, d, k, dtype):
+    x, c = _data(n, d, k, dtype, seed=1)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (n,))) + 0.5
+    assign, _, _ = ref.assign_top2(x, c)
+    sums_ref, counts_ref = ref.cluster_sums(x, w, assign, k)
+    sums, counts = cluster_sums_pallas(x, w, assign, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(counts_ref), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(sums_ref), rtol=3e-4, atol=3e-4)
+
+
+def test_assign_top2_k1_second_is_inf():
+    x, c = _data(50, 4, 1, jnp.float32)
+    _, d1, d2 = assign_top2_pallas(x, c, interpret=True)
+    assert bool(jnp.all(jnp.isinf(d2)))
+    assert np.isfinite(np.asarray(d1)).all()
+
+
+def test_assign_top2_duplicate_centroids():
+    """Duplicate centroids ⇒ d2 == d1 for points closest to the duplicate."""
+    x = jnp.asarray([[0.0, 0.0], [10.0, 0.0]], jnp.float32)
+    c = jnp.asarray([[0.0, 0.0], [0.0, 0.0], [10.0, 0.0]], jnp.float32)
+    a, d1, d2 = assign_top2_pallas(x, c, interpret=True)
+    assert int(a[0]) == 0
+    np.testing.assert_allclose(float(d2[0]), float(d1[0]))
+
+
+def test_assign_top2_small_blocks():
+    """Force multi-tile grids on small data to exercise the online merge."""
+    x, c = _data(70, 10, 40, jnp.float32, seed=3)
+    a_ref, d1_ref, d2_ref = ref.assign_top2(x, c)
+    a, d1, d2 = assign_top2_pallas(x, c, interpret=True, bn=16, bk=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(a_ref))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(d2_ref), rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    d=st.integers(1, 40),
+    k=st.integers(2, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_top2_invariants(n, d, k, seed):
+    x, c = _data(n, d, k, jnp.float32, seed=seed)
+    a, d1, d2 = assign_top2_pallas(x, c, interpret=True, bn=32, bk=16)
+    dd = np.asarray(ref.pairwise_sqdist(x, c))
+    # d1 is the true min, a achieves it, d1 <= d2, d2 is the true second
+    np.testing.assert_allclose(np.asarray(d1), dd.min(1), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        dd[np.arange(n), np.asarray(a)], dd.min(1), rtol=2e-5, atol=2e-5
+    )
+    assert bool(jnp.all(d1 <= d2 + 1e-5))
+    part = np.partition(dd, 1, axis=1)
+    np.testing.assert_allclose(np.asarray(d2), part[:, 1], rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    d=st.integers(1, 30),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_cluster_sums_mass_conservation(n, d, k, seed):
+    """Σ_k sums == Σ_i w_i·x_i and Σ_k counts == Σ_i w_i, any assignment."""
+    key = jax.random.PRNGKey(seed)
+    ka, kw, kx = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.uniform(kw, (n,), minval=0.0, maxval=3.0)
+    assign = jax.random.randint(ka, (n,), 0, k)
+    sums, counts = cluster_sums_pallas(x, w, assign, k, interpret=True, bn=16)
+    np.testing.assert_allclose(
+        np.asarray(sums.sum(0)), np.asarray((x * w[:, None]).sum(0)), rtol=1e-4, atol=1e-4
+    )
+    np.testing.assert_allclose(float(counts.sum()), float(w.sum()), rtol=1e-5)
+
+
+def test_ops_dispatch_interpret_equals_ref():
+    """The ops-layer pallas path (as the dry-run/benchmarks use it)."""
+    from repro.kernels import ops
+
+    x, c = _data(128, 24, 10, jnp.float32, seed=9)
+    a1, d11, d21 = ops.assign_top2(x, c, impl="ref")
+    a2, d12, d22 = ops.assign_top2(x, c, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(np.asarray(d11), np.asarray(d12), rtol=2e-5, atol=2e-5)
+    w = jnp.ones(128)
+    s1, c1 = ops.cluster_sums(x, w, a1, 10, impl="ref")
+    s2, c2 = ops.cluster_sums(x, w, a1, 10, impl="pallas")
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), rtol=1e-5)

@@ -1,0 +1,116 @@
+"""Partition invariants: membership, tight boxes, refinement under splits."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as pm
+
+from helpers import gmm
+
+
+def _random_partition(key, x, rounds=4):
+    part = pm.create_partition(x, capacity=256)
+    for i in range(rounds):
+        key, sub = jax.random.split(key)
+        nb = int(part.n_blocks)
+        chosen = jax.random.bernoulli(sub, 0.6, (part.capacity,)) & part.active
+        part = pm.split_blocks(part, x, chosen)
+    return part
+
+
+def test_create_partition_single_block():
+    x = gmm(jax.random.PRNGKey(0), 500, 3, 4)
+    part = pm.create_partition(x, capacity=64)
+    assert int(part.n_blocks) == 1
+    assert bool(jnp.all(part.block_id == 0))
+    np.testing.assert_allclose(part.lo[0], jnp.min(x, 0), rtol=1e-6)
+    np.testing.assert_allclose(part.hi[0], jnp.max(x, 0), rtol=1e-6)
+    assert float(part.count[0]) == 500.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_split_preserves_membership_and_counts(seed):
+    x = gmm(jax.random.PRNGKey(seed), 2000, 5, 6)
+    part = _random_partition(jax.random.PRNGKey(seed + 10), x)
+    # counts sum to n
+    assert float(jnp.sum(part.count)) == x.shape[0]
+    # every point inside its block's tight box
+    lo = part.lo[part.block_id]
+    hi = part.hi[part.block_id]
+    assert bool(jnp.all((x >= lo - 1e-5) & (x <= hi + 1e-5)))
+    # active rows are exactly [0, n_blocks)
+    nb = int(part.n_blocks)
+    assert bool(jnp.all(part.active[:nb])) and not bool(jnp.any(part.active[nb:]))
+
+
+def test_split_is_refinement():
+    """Each post-split block's point set is a subset of one pre-split block."""
+    x = gmm(jax.random.PRNGKey(3), 1000, 4, 5)
+    part = pm.create_partition(x, capacity=64)
+    part = pm.split_blocks(part, x, jnp.zeros(64, bool).at[0].set(True))
+    before = np.asarray(part.block_id)
+    chosen = jnp.zeros(64, bool).at[0].set(True).at[1].set(True)
+    after_part = pm.split_blocks(part, x, chosen)
+    after = np.asarray(after_part.block_id)
+    for b_new in np.unique(after):
+        parents = np.unique(before[after == b_new])
+        assert parents.size == 1  # thinner partition (paper footnote 4)
+
+
+def test_representatives_are_centers_of_mass():
+    x = gmm(jax.random.PRNGKey(4), 1500, 3, 4)
+    part = _random_partition(jax.random.PRNGKey(5), x)
+    reps, w = pm.representatives(part)
+    bid = np.asarray(part.block_id)
+    xs = np.asarray(x, np.float64)
+    for b in np.unique(bid):
+        np.testing.assert_allclose(
+            np.asarray(reps)[b], xs[bid == b].mean(0), rtol=2e-4, atol=2e-5
+        )
+        assert float(w[b]) == (bid == b).sum()
+
+
+def test_singleton_blocks_never_split():
+    x = jnp.asarray(np.random.RandomState(0).randn(4, 2), jnp.float32)
+    part = pm.create_partition(x, capacity=32)
+    for _ in range(8):  # split everything until only singletons remain
+        part = pm.split_blocks(part, x, part.active)
+    assert int(part.n_blocks) == 4
+    assert float(jnp.max(part.count)) == 1.0
+    nb_before = int(part.n_blocks)
+    part2 = pm.split_blocks(part, x, part.active)
+    assert int(part2.n_blocks) == nb_before
+
+
+def test_capacity_respected():
+    x = gmm(jax.random.PRNGKey(6), 512, 2, 3)
+    part = pm.create_partition(x, capacity=8)
+    for _ in range(6):
+        part = pm.split_blocks(part, x, part.active)
+    assert int(part.n_blocks) <= 8
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(20, 200),
+    d=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_split_axis_separates(n, d, seed):
+    """After a split, left-child points are <= mid and right-child > mid on
+    the split axis; both children are inside the parent box."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (n, d), jnp.float32) * 5
+    part = pm.create_partition(x, capacity=16)
+    lo0, hi0 = np.asarray(part.lo[0]), np.asarray(part.hi[0])
+    axis = int(np.argmax(hi0 - lo0))
+    mid = 0.5 * (lo0[axis] + hi0[axis])
+    part = pm.split_blocks(part, x, jnp.zeros(16, bool).at[0].set(True))
+    bid = np.asarray(part.block_id)
+    xs = np.asarray(x)
+    if int(part.n_blocks) == 2:
+        assert (xs[bid == 0][:, axis] <= mid + 1e-6).all()
+        assert (xs[bid == 1][:, axis] > mid - 1e-6).all()

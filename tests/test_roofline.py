@@ -1,0 +1,85 @@
+"""Roofline machinery tests: the HLO collective parser, the linear probe
+extrapolation, and the terms arithmetic."""
+
+import numpy as np
+
+from repro.roofline import analysis
+
+HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+ENTRY %main {
+  %p0 = bf16[16,4096]{1,0} parameter(0)
+  %p1 = f32[128,256]{1,0} parameter(1)
+  %ar = f32[128,256]{1,0} all-reduce(%p1), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[16,65536]{1,0} all-gather(%p0), replica_groups={}, dimensions={1}
+  %a2a = f32[128,256]{1,0} all-to-all(%ar), replica_groups={}
+  %rs = f32[8,256]{1,0} reduce-scatter(%a2a), dimensions={0}, to_apply=%add
+  %cp = bf16[16,4096]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %t = (f32[8,256]{1,0}) tuple(%rs)
+}
+"""
+
+
+def test_parse_collective_bytes_by_kind():
+    out = analysis.parse_collective_bytes(HLO)
+    assert out["all-reduce"]["bytes"] == 128 * 256 * 4
+    assert out["all-reduce"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 16 * 4096 * 2
+    assert out["all-to-all"]["bytes"] == 128 * 256 * 4
+    assert out["reduce-scatter"]["bytes"] == 128 * 256 * 4  # operand of rs = a2a
+    assert out["collective-permute"]["bytes"] == 16 * 4096 * 2
+    assert out["total_bytes"] == sum(
+        out[k]["bytes"] for k in
+        ("all-reduce", "all-gather", "all-to-all", "reduce-scatter",
+         "collective-permute")
+    )
+
+
+def test_parse_ignores_non_collectives():
+    out = analysis.parse_collective_bytes(
+        "ENTRY %m {\n  %x = f32[4,4]{1,0} parameter(0)\n  ROOT %y = f32[4,4]{1,0} add(%x, %x)\n}"
+    )
+    assert out["total_bytes"] == 0
+
+
+def test_extrapolate_linear_exact():
+    # cost(L) = 7 + 3L measured at L=2 and L=4 -> predict L=56 exactly
+    c2 = {"flops": 7 + 3 * 2.0}
+    c4 = {"flops": 7 + 3 * 4.0}
+    out = analysis.extrapolate_linear(c2, c4, 2, 56)
+    np.testing.assert_allclose(out["flops"], 7 + 3 * 56.0)
+
+
+def test_terms_and_dominant():
+    t = analysis.terms_from_costs(
+        flops=197e12, hbm_bytes=819e9 * 2, coll_bytes=50e9 * 0.5
+    )
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 2.0)
+    np.testing.assert_allclose(t.collective_s, 0.5)
+    assert t.dominant == "memory"
+    assert t.bound_s == 2.0
+
+
+def test_model_flops_conventions():
+    from repro import configs
+
+    cfg = configs.get_config("granite-8b")
+    shape = configs.SHAPES["train_4k"]
+    n = 8_000_000_000
+    mf = analysis.model_flops(cfg, shape, n, n)
+    # 6·N·D dominates; attention adds <20% at 4k
+    assert 6 * n * shape.global_batch * shape.seq_len <= mf
+    assert mf < 1.3 * 6 * n * shape.global_batch * shape.seq_len
+    # MoE: active < total
+    mcfg = configs.get_config("mixtral-8x22b")
+    mf_act = analysis.model_flops(mcfg, shape, 141e9, 39e9)
+    mf_tot = analysis.model_flops(mcfg, shape, 141e9, 141e9)
+    assert mf_act < mf_tot

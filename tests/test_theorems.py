@@ -1,0 +1,143 @@
+"""Property-based checks of the paper's theorems (Appendix A).
+
+Theorem arithmetic is verified against float64 numpy oracles so fp32 noise in
+the library can't fake or break an inequality.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bounds, bwkm, misassignment as mis, partition as pm
+from repro.core.lloyd import weighted_lloyd
+from repro.kernels import ref
+
+from helpers import assign_f64, error_f64, gmm, weighted_error_f64
+
+
+def _partition_and_centroids(seed, n=400, d=3, k=4, rounds=3):
+    key = jax.random.PRNGKey(seed)
+    kx, kp, kc = jax.random.split(key, 3)
+    x = gmm(kx, n, d, k)
+    part = pm.create_partition(x, capacity=128)
+    for i in range(rounds):
+        kp, sub = jax.random.split(kp)
+        chosen = jax.random.bernoulli(sub, 0.7, (part.capacity,)) & part.active
+        part = pm.split_blocks(part, x, chosen)
+    c = jax.random.normal(kc, (k, d)) * 6
+    return x, part, c
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_theorem1_zero_misassignment_implies_well_assigned(seed):
+    """ε_{C,D}(B) = 0  ⇒  every x ∈ B(D) has the same closest centroid as P̄."""
+    x, part, c = _partition_and_centroids(seed)
+    reps, w = pm.representatives(part)
+    _, d1, d2 = ref.assign_top2(reps, c)
+    eps = mis.misassignment(part, d1, d2)
+    rep_assign = assign_f64(reps, c)
+    pt_assign = assign_f64(x, c)
+    bid = np.asarray(part.block_id)
+    eps_np = np.asarray(eps)
+    for b in np.unique(bid):
+        if eps_np[b] == 0.0:
+            assert (pt_assign[bid == b] == rep_assign[b]).all(), (
+                f"block {b} declared well-assigned but points disagree"
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_theorem2_error_gap_bound(seed):
+    """|E^D(C) − E^P(C)| ≤ the Theorem-2 bound."""
+    x, part, c = _partition_and_centroids(seed)
+    reps, w = pm.representatives(part)
+    _, d1, d2 = ref.assign_top2(reps, c)
+    eps = mis.misassignment(part, d1, d2)
+    gap = abs(error_f64(x, c) - weighted_error_f64(reps, w, c))
+    bound = float(bounds.thm2_gap_bound(part, eps, d1))
+    assert gap <= bound * (1 + 1e-4) + 1e-6, (gap, bound)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_theorem_a2_monotone_descent_when_well_assigned(seed):
+    """If all blocks are well assigned for C and for the C' produced by one
+    weighted Lloyd iteration, then E^D(C') ≤ E^D(C)."""
+    x, part, c = _partition_and_centroids(seed, rounds=5)
+    reps, w = pm.representatives(part)
+
+    res = weighted_lloyd(reps, w, c, max_iters=1, epsilon=0.0)
+    c_new = res.centroids
+
+    def all_well_assigned(cc):
+        _, d1, d2 = ref.assign_top2(reps, cc)
+        return not bool(jnp.any(mis.misassignment(part, d1, d2) > 0))
+
+    if all_well_assigned(c) and all_well_assigned(c_new):
+        assert error_f64(x, c_new) <= error_f64(x, c) * (1 + 1e-9)
+
+
+def test_theorem3_fixed_point_transfer():
+    """BWKM stopping with an empty boundary is a Lloyd fixed point on D."""
+    x = gmm(jax.random.PRNGKey(0), 5000, 3, 4)
+    res = bwkm.fit(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=4, max_iters=40))
+    assert res.stop_reason == "boundary-empty"
+    c = np.asarray(res.centroids, np.float64)
+    xs = np.asarray(x, np.float64)
+    a = assign_f64(xs, c)
+    c_next = np.stack([xs[a == j].mean(0) if (a == j).any() else c[j] for j in range(4)])
+    # one full-dataset Lloyd step leaves the centroids unchanged
+    np.testing.assert_allclose(c_next, c, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_theorem_a4_displacement_stopping(seed):
+    """‖C−C'‖∞ ≤ ε_w  ⇒  |E^D(C) − E^D(C')| ≤ ε."""
+    key = jax.random.PRNGKey(seed)
+    kx, kc, kp = jax.random.split(key, 3)
+    n, d, k = 200, 3, 4
+    x = gmm(kx, n, d, k)
+    # dataset bounding-box diagonal; centroids within the box so d(x,C) <= l
+    lo, hi = jnp.min(x, 0), jnp.max(x, 0)
+    l = float(jnp.linalg.norm(hi - lo))
+    epsilon = 10.0
+    eps_w = bounds.displacement_threshold(l, n, epsilon)
+    u = jax.random.uniform(kc, (k, d))
+    c = lo + u * (hi - lo)
+    delta = jax.random.normal(kp, (k, d))
+    delta = delta / jnp.maximum(jnp.linalg.norm(delta, axis=1, keepdims=True), 1e-9)
+    c2 = c + 0.99 * eps_w * delta
+    c2 = jnp.clip(c2, lo, hi)  # keep the d(x,C) <= l precondition
+    assert abs(error_f64(x, c) - error_f64(x, c2)) <= epsilon
+
+
+def test_theorem_a1_grid_coreset_bound():
+    """Grid-RPKM level-i partitions satisfy the (K, ε)-coreset inequality."""
+    key = jax.random.PRNGKey(7)
+    x = gmm(key, 2000, 2, 3, spread=5.0)
+    xs = np.asarray(x, np.float64)
+    lo, hi = xs.min(0), xs.max(0)
+    l = float(np.linalg.norm(hi - lo))
+    n = xs.shape[0]
+    # a strong solution as the OPT estimate (OPT_hat >= OPT makes the test stricter)
+    from repro.core import baselines
+
+    c_good, _ = baselines.kmeanspp_kmeans(jax.random.PRNGKey(8), x, 3)
+    opt_hat = error_f64(xs, np.asarray(c_good))
+    c_rand = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (3, 2)) * 5, np.float64)
+    span = np.where(hi > lo, hi - lo, 1.0)
+    for i in (1, 2, 3, 4):
+        bins = 1 << i
+        q = np.minimum(((xs - lo) / span * bins).astype(np.int64), bins - 1)
+        _, inv, cnt = np.unique(q, axis=0, return_inverse=True, return_counts=True)
+        sums = np.zeros((cnt.shape[0], 2))
+        np.add.at(sums, inv, xs)
+        reps = sums / cnt[:, None]
+        e_d = error_f64(xs, c_rand)
+        e_p = weighted_error_f64(reps, cnt.astype(np.float64), c_rand)
+        eps_i = bounds.coreset_epsilon(i, n, l, opt_hat)
+        assert abs(e_d - e_p) <= eps_i * e_d * (1 + 1e-9), (i, abs(e_d - e_p), eps_i * e_d)
