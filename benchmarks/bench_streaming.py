@@ -1,0 +1,135 @@
+"""Out-of-core streaming BWKM vs the in-memory driver (BENCHMARKS.md §3).
+
+Materialises a paper-profile dataset as ``.npy`` shards on disk, then runs:
+
+  * ``core.bwkm.fit``  over the resident array          (the baseline)
+  * ``streaming.fit``  over a ShardedFileSource          (the out-of-core path)
+  * one full-stream assignment pass (``streaming_lloyd_step``), the steady-
+    state data-plane operation, to report ingest throughput in points/s
+
+Emits ``name,us_per_call,derived`` CSV like the other benches. The
+interesting columns: ``distances`` (the paper's cost unit — must be in the
+same ballpark for both drivers), ``rel_gap`` (quality difference), and
+``points_per_s`` (how fast the chunk pipeline feeds the device).
+
+  PYTHONPATH=src python -m benchmarks.bench_streaming
+  PYTHONPATH=src python -m benchmarks.bench_streaming --n 2000000 --chunk 65536
+"""
+
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import streaming
+from repro.core import bwkm, metrics
+from repro.data import chunks as ck
+from repro.data.synthetic import gmm_dataset
+
+
+def bench(
+    *,
+    n: int,
+    d: int,
+    modes: int,
+    k: int,
+    chunk_size: int,
+    rows_per_shard: int,
+    max_iters: int,
+    seed: int = 0,
+) -> list[dict]:
+    x = gmm_dataset(seed, n, d, modes)
+    rows = []
+
+    with tempfile.TemporaryDirectory(prefix="bench_streaming_") as td:
+        paths = ck.write_npy_shards(x, td, rows_per_shard=rows_per_shard)
+        src = ck.ShardedFileSource(paths, chunk_size)
+
+        cfg = bwkm.BWKMConfig(k=k, max_iters=max_iters)
+
+        t0 = time.time()
+        res_core = bwkm.fit(jax.random.PRNGKey(seed), jnp.asarray(x), cfg)
+        jax.block_until_ready(res_core.centroids)
+        t_core = time.time() - t0
+        e_core = float(metrics.kmeans_error(jnp.asarray(x), res_core.centroids))
+
+        t0 = time.time()
+        res_s = streaming.fit(jax.random.PRNGKey(seed), src, cfg)
+        jax.block_until_ready(res_s.centroids)
+        t_stream = time.time() - t0
+        e_stream = float(metrics.kmeans_error(jnp.asarray(x), res_s.centroids))
+
+        e_best = min(e_core, e_stream)
+        rows.append({
+            "name": f"stream_bwkm_core_n{n}_k{k}",
+            "seconds": t_core,
+            "derived": {
+                "E": e_core, "rel_gap": (e_core - e_best) / e_best,
+                "distances": res_core.distances, "stop": res_core.stop_reason,
+            },
+        })
+        rows.append({
+            "name": f"stream_bwkm_stream_n{n}_k{k}",
+            "seconds": t_stream,
+            "derived": {
+                "E": e_stream, "rel_gap": (e_stream - e_best) / e_best,
+                "distances": res_s.distances, "stop": res_s.stop_reason,
+                "passes": res_s.stream.passes,
+                "points_streamed": res_s.stream.points_streamed,
+                "points_per_s": res_s.stream.points_streamed / max(t_stream, 1e-9),
+                "chunk": chunk_size, "n_chunks": src.n_chunks,
+            },
+        })
+
+        # Steady-state ingest: one exact assignment pass over the stream
+        # (compiles on the first call; time the second).
+        streaming.streaming_lloyd_step(src, res_s.centroids)
+        t0 = time.time()
+        _, err = streaming.streaming_lloyd_step(src, res_s.centroids)
+        t_pass = time.time() - t0
+        rows.append({
+            "name": f"stream_assign_pass_n{n}_k{k}",
+            "seconds": t_pass,
+            "derived": {
+                "E": err,
+                "points_per_s": n / max(t_pass, 1e-9),
+                "MBps": n * d * 4 / 1e6 / max(t_pass, 1e-9),
+                "chunk": chunk_size,
+            },
+        })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--d", type=int, default=10)
+    ap.add_argument("--modes", type=int, default=12)
+    ap.add_argument("--k", type=int, default=9)
+    ap.add_argument("--chunk", type=int, default=16_384)
+    ap.add_argument("--rows-per-shard", type=int, default=50_000)
+    ap.add_argument("--max-iters", type=int, default=15)
+    args = ap.parse_args(argv)
+
+    rows = bench(
+        n=args.n, d=args.d, modes=args.modes, k=args.k,
+        chunk_size=args.chunk, rows_per_shard=args.rows_per_shard,
+        max_iters=args.max_iters,
+    )
+    print("name,us_per_call,derived")
+    for r in rows:
+        derived = ";".join(
+            f"{k}={v:.4e}" if isinstance(v, float) else f"{k}={v}"
+            for k, v in r["derived"].items()
+        )
+        print(f"{r['name']},{r['seconds'] * 1e6:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@
 Emits ``name,us_per_call,derived`` CSV:
   * tradeoff_*  — Figures 2–6 (distances vs relative error, per dataset × K)
   * assign_*    — the assignment-kernel micro-bench
+  * stream_*    — out-of-core streaming driver vs in-memory (throughput)
 """
 
 from __future__ import annotations
@@ -20,18 +21,21 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_tradeoff
+    from benchmarks import bench_kernels, bench_streaming, bench_tradeoff
 
     if args.quick:
         bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "--reps", "1"])
+        bench_streaming.main(["--n", "50000", "--max-iters", "8"])
     elif args.full:
         # the paper's full grid: 5 datasets x K in {3,9,27} x repetitions
         bench_tradeoff.main(["--full", "--ks", "3", "9", "27", "--reps", "3"])
+        bench_streaming.main(["--n", "2000000", "--chunk", "65536"])
     else:
         # default CPU budget: every figure (all 5 datasets) at K=9 + the
         # K-sweep on the smallest dataset
         bench_tradeoff.main(["--ks", "9", "--reps", "1"])
         bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "27", "--reps", "1"])
+        bench_streaming.main([])
     bench_kernels.main([])
 
 

@@ -23,8 +23,16 @@ import jax.numpy as jnp
 
 __all__ = [
     "Partition",
+    "BlockStats",
+    "SplitPlan",
     "create_partition",
+    "block_stats",
+    "empty_block_stats",
+    "combine_block_stats",
     "recompute_stats",
+    "split_plan",
+    "route_split",
+    "apply_split_plan",
     "split_blocks",
     "representatives",
     "diagonals",
@@ -82,22 +90,67 @@ def diagonals(part: Partition) -> jax.Array:
     return jnp.where(occupied, jnp.linalg.norm(ext, axis=-1), 0.0)
 
 
-def recompute_stats(part: Partition, x: jax.Array) -> Partition:
-    """Recompute (psum, count, lo, hi) for all rows from point memberships.
+class BlockStats(NamedTuple):
+    """Per-block sufficient statistics ``(Σx, |B|, min x, max x)`` — everything
+    BWKM needs about a block (representative = psum/count, diagonal from
+    lo/hi). Sums/counts add and min/max combine associatively, so stats are
+    accumulated chunk-by-chunk (streaming), shard-by-shard (mesh psum), or in
+    one pass (in-core) with identical results up to summation order."""
 
-    ``O(n·d)`` segment reductions — the cost the paper assigns to the
-    partition-update step (Section 2.3.1).
+    psum: jax.Array  # [M, d]
+    count: jax.Array  # [M]
+    lo: jax.Array  # [M, d] (lo > hi marks an empty row)
+    hi: jax.Array  # [M, d]
+
+
+def block_stats(
+    x: jax.Array, bid: jax.Array, m: int, valid: jax.Array | None = None
+) -> BlockStats:
+    """``O(n·d)`` segment reductions of points into ``m`` block rows — the cost
+    the paper assigns to the partition-update step (Section 2.3.1).
+
+    ``valid`` masks padding rows (streaming chunks are padded to a static
+    shape); masked points land in a scratch segment that is dropped.
     """
-    m = part.capacity
-    bid = part.block_id
-    psum = jax.ops.segment_sum(x, bid, num_segments=m)
-    count = jax.ops.segment_sum(jnp.ones(x.shape[0], jnp.float32), bid, num_segments=m)
-    lo = jax.ops.segment_min(x, bid, num_segments=m)
-    hi = jax.ops.segment_max(x, bid, num_segments=m)
+    if valid is not None:
+        bid = jnp.where(valid, bid, m)  # scratch segment m, sliced away below
+    seg = m + 1 if valid is not None else m
+    ones = jnp.ones(x.shape[0], jnp.float32)
+    psum = jax.ops.segment_sum(x, bid, num_segments=seg)[:m]
+    count = jax.ops.segment_sum(ones, bid, num_segments=seg)[:m]
+    lo = jax.ops.segment_min(x, bid, num_segments=seg)[:m]
+    hi = jax.ops.segment_max(x, bid, num_segments=seg)[:m]
     empty = count <= 0
     lo = jnp.where(empty[:, None], _BIG, lo)
     hi = jnp.where(empty[:, None], -_BIG, hi)
-    return part._replace(psum=psum, count=count, lo=lo, hi=hi)
+    return BlockStats(psum, count, lo, hi)
+
+
+def empty_block_stats(m: int, d: int) -> BlockStats:
+    """The identity element of ``combine_block_stats``."""
+    return BlockStats(
+        psum=jnp.zeros((m, d), jnp.float32),
+        count=jnp.zeros((m,), jnp.float32),
+        lo=jnp.full((m, d), _BIG, jnp.float32),
+        hi=jnp.full((m, d), -_BIG, jnp.float32),
+    )
+
+
+def combine_block_stats(a: BlockStats, b: BlockStats) -> BlockStats:
+    """Merge two partial statistics (associative + commutative; the empty-row
+    sentinels ±_BIG are absorbing for min/max, so no masking is needed)."""
+    return BlockStats(
+        psum=a.psum + b.psum,
+        count=a.count + b.count,
+        lo=jnp.minimum(a.lo, b.lo),
+        hi=jnp.maximum(a.hi, b.hi),
+    )
+
+
+def recompute_stats(part: Partition, x: jax.Array) -> Partition:
+    """Recompute (psum, count, lo, hi) for all rows from point memberships."""
+    st = block_stats(x, part.block_id, part.capacity)
+    return part._replace(psum=st.psum, count=st.count, lo=st.lo, hi=st.hi)
 
 
 def create_partition(x: jax.Array, capacity: int) -> Partition:
@@ -115,11 +168,25 @@ def create_partition(x: jax.Array, capacity: int) -> Partition:
     return recompute_stats(part, x)
 
 
-def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
-    """Split every block in ``chosen`` (bool mask ``[M]``) at the midpoint of
-    its longest side (paper Section 2.3: "divided in the middle point of its
-    largest side ... replaced ... to produce the new thinner spatial
-    partition"), then re-tighten all bounding boxes.
+class SplitPlan(NamedTuple):
+    """A resolved split round: which rows split (``fits``), along which
+    coordinate (``axis``) at which midpoint (``mid``), and the row index of
+    each right child (``right_row``). The plan is O(M) data — the in-core,
+    distributed, and streaming drivers all compute it once per round and then
+    route points against it (all at once, per shard, or per chunk)."""
+
+    fits: jax.Array  # [M] bool
+    axis: jax.Array  # [M] int32
+    mid: jax.Array  # [M] f32
+    right_row: jax.Array  # [M] int32
+    n_new: jax.Array  # scalar int32
+
+
+def split_plan(part: Partition, chosen: jax.Array) -> SplitPlan:
+    """Resolve ``chosen`` (bool mask ``[M]``) into a :class:`SplitPlan`: each
+    block splits at the midpoint of its longest side (paper Section 2.3:
+    "divided in the middle point of its largest side ... replaced ... to
+    produce the new thinner spatial partition").
 
     Blocks whose right child would exceed capacity are silently not split
     (callers bound ``sum(chosen)`` against free rows; this is the safety net).
@@ -131,7 +198,7 @@ def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
     rank = jnp.cumsum(chosen.astype(jnp.int32)) - 1
     right_row = part.n_blocks + rank  # [M]
     fits = chosen & (right_row < m)
-    right_row = jnp.where(fits, right_row, 0)
+    right_row = jnp.where(fits, right_row, 0).astype(jnp.int32)
 
     ext = jnp.maximum(part.hi - part.lo, 0.0)
     axis = jnp.argmax(ext, axis=-1).astype(jnp.int32)  # [M]
@@ -139,23 +206,35 @@ def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
         jnp.take_along_axis(part.lo, axis[:, None], axis=1)[:, 0]
         + jnp.take_along_axis(part.hi, axis[:, None], axis=1)[:, 0]
     )  # [M]
+    return SplitPlan(fits, axis, mid, right_row, jnp.sum(fits.astype(jnp.int32)))
 
-    # Route points: member of a split block goes right iff x[axis] > mid.
-    bid = part.block_id
-    p_split = fits[bid]  # [n]
-    p_axis = axis[bid]
-    p_mid = mid[bid]
-    p_val = jnp.take_along_axis(x, p_axis[:, None].astype(jnp.int32), axis=1)[:, 0]
+
+def route_split(x: jax.Array, bid: jax.Array, plan: SplitPlan) -> jax.Array:
+    """Repair point memberships after a split round: a member of a split block
+    goes right iff ``x[axis] > mid``. One vectorised gather + compare — no
+    tree traversal; works on any subset of the dataset (shard, chunk)."""
+    p_split = plan.fits[bid]  # [n]
+    p_axis = plan.axis[bid]
+    p_mid = plan.mid[bid]
+    p_val = jnp.take_along_axis(x, p_axis[:, None], axis=1)[:, 0]
     goes_right = p_split & (p_val > p_mid)
-    new_bid = jnp.where(goes_right, right_row[bid].astype(jnp.int32), bid)
+    return jnp.where(goes_right, plan.right_row[bid], bid)
 
-    n_new = jnp.sum(fits.astype(jnp.int32))
+
+def apply_split_plan(part: Partition, plan: SplitPlan) -> Partition:
+    """Activate the right-child rows of ``plan`` (stats are stale until the
+    caller recomputes them from routed memberships)."""
+    m = part.capacity
+    mrange = jnp.arange(m)
     active = part.active | (
-        (jnp.arange(m) >= part.n_blocks) & (jnp.arange(m) < part.n_blocks + n_new)
+        (mrange >= part.n_blocks) & (mrange < part.n_blocks + plan.n_new)
     )
-    out = part._replace(
-        block_id=new_bid,
-        active=active,
-        n_blocks=part.n_blocks + n_new,
-    )
+    return part._replace(active=active, n_blocks=part.n_blocks + plan.n_new)
+
+
+def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
+    """In-core split round: plan, route every point, re-tighten all boxes."""
+    plan = split_plan(part, chosen)
+    new_bid = route_split(x, part.block_id, plan)
+    out = apply_split_plan(part._replace(block_id=new_bid), plan)
     return recompute_stats(out, x)

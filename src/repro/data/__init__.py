@@ -1,7 +1,31 @@
 """Data pipeline: deterministic, resumable synthetic generators — GMM point
-streams mirroring the paper's datasets and token streams for the LM cells."""
+streams mirroring the paper's datasets, token streams for the LM cells, and
+out-of-core chunk sources for the streaming BWKM driver."""
 
+from repro.data.chunks import (
+    ArrayChunkSource,
+    ChunkSource,
+    MemmapChunkSource,
+    ShardedFileSource,
+    as_chunk_source,
+    padded_device_chunks,
+    reservoir_sample,
+    write_npy_shards,
+)
 from repro.data.synthetic import PAPER_DATASETS, gmm_dataset, paper_dataset
 from repro.data.tokens import TokenStream
 
-__all__ = ["PAPER_DATASETS", "gmm_dataset", "paper_dataset", "TokenStream"]
+__all__ = [
+    "PAPER_DATASETS",
+    "gmm_dataset",
+    "paper_dataset",
+    "TokenStream",
+    "ChunkSource",
+    "ArrayChunkSource",
+    "MemmapChunkSource",
+    "ShardedFileSource",
+    "as_chunk_source",
+    "padded_device_chunks",
+    "reservoir_sample",
+    "write_npy_shards",
+]

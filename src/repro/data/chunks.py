@@ -1,0 +1,275 @@
+"""Out-of-core chunk sources for the streaming BWKM driver (DESIGN.md §6).
+
+A :class:`ChunkSource` presents a dataset as a deterministic, repeatable
+sequence of fixed-size row chunks — the contract the streaming driver
+(`repro.streaming`) builds its multi-pass sufficient-statistics loops on.
+Three backends:
+
+  * :class:`ArrayChunkSource`   — an array already in host memory (the
+                                  degenerate case; used by tests to prove
+                                  streaming ≡ in-core).
+  * :class:`MemmapChunkSource`  — a memory-mapped ``.npy`` file; the OS pages
+                                  rows in on demand, so ``n·d`` never has to
+                                  fit in RAM, let alone device memory.
+  * :class:`ShardedFileSource`  — a list of ``.npy`` shards presented as one
+                                  logical dataset, re-chunked to a fixed
+                                  chunk size across shard boundaries.
+
+:func:`padded_device_chunks` is the host→device feed: every chunk is padded
+to the static ``[chunk_size, d]`` shape (so each pass compiles exactly one
+XLA program) and the *next* chunk's transfer is enqueued before the current
+one is yielded — double buffering that overlaps H2D copy with compute.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Iterator, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "ChunkSource",
+    "ArrayChunkSource",
+    "MemmapChunkSource",
+    "ShardedFileSource",
+    "as_chunk_source",
+    "padded_device_chunks",
+    "reservoir_sample",
+    "write_npy_shards",
+]
+
+
+@runtime_checkable
+class ChunkSource(Protocol):
+    """A repeatable stream of ``float32 [<=chunk_size, d]`` row chunks.
+
+    Every chunk except possibly the last has exactly ``chunk_size`` rows, and
+    repeated iterations yield identical chunks in identical order (the
+    streaming driver makes several passes and keeps per-chunk state aligned
+    by position).
+    """
+
+    @property
+    def n_points(self) -> int: ...
+
+    @property
+    def dim(self) -> int: ...
+
+    @property
+    def chunk_size(self) -> int: ...
+
+    @property
+    def n_chunks(self) -> int: ...
+
+    def chunks(self) -> Iterator[np.ndarray]: ...
+
+
+def _check_chunk_size(chunk_size: int) -> int:
+    chunk_size = int(chunk_size)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    return chunk_size
+
+
+def _n_chunks(n: int, chunk_size: int) -> int:
+    return max(1, -(-n // chunk_size))
+
+
+class ArrayChunkSource:
+    """Chunk view over a host-resident array (zero-copy row slices)."""
+
+    def __init__(self, x: np.ndarray, chunk_size: int):
+        self._x = np.asarray(x)
+        if self._x.ndim != 2:
+            raise ValueError(f"expected [n, d] array, got shape {self._x.shape}")
+        self._chunk_size = _check_chunk_size(chunk_size)
+
+    @property
+    def n_points(self) -> int:
+        return self._x.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._x.shape[1]
+
+    @property
+    def chunk_size(self) -> int:
+        return self._chunk_size
+
+    @property
+    def n_chunks(self) -> int:
+        return _n_chunks(self.n_points, self._chunk_size)
+
+    def chunks(self) -> Iterator[np.ndarray]:
+        for start in range(0, self.n_points, self._chunk_size):
+            yield self._x[start : start + self._chunk_size]
+
+
+class MemmapChunkSource(ArrayChunkSource):
+    """Chunks from a memory-mapped ``.npy`` file.
+
+    ``np.load(mmap_mode="r")`` maps the file without reading it; each yielded
+    chunk materialises only ``chunk_size·d`` floats, so the working set is
+    two chunks (current + prefetched) regardless of ``n``.
+    """
+
+    def __init__(self, path: str | os.PathLike, chunk_size: int):
+        super().__init__(np.load(path, mmap_mode="r"), chunk_size)
+        self.path = os.fspath(path)
+
+    def chunks(self) -> Iterator[np.ndarray]:
+        for start in range(0, self.n_points, self._chunk_size):
+            # np.array(...) forces the page-in into a private buffer here, on
+            # the producer side, instead of lazily inside jitted code.
+            yield np.array(self._x[start : start + self._chunk_size])
+
+
+class ShardedFileSource:
+    """Several ``.npy`` shards presented as one logical ``[n, d]`` dataset.
+
+    Shards may have ragged row counts; chunks are re-packed to the fixed
+    ``chunk_size`` across shard boundaries so downstream static-shape
+    programs never see shard structure. At most one shard is mapped at a
+    time.
+    """
+
+    def __init__(self, paths: Sequence[str | os.PathLike], chunk_size: int):
+        if not paths:
+            raise ValueError("ShardedFileSource needs at least one shard")
+        self.paths = [os.fspath(p) for p in paths]
+        self._chunk_size = _check_chunk_size(chunk_size)
+        rows, dims = [], []
+        for p in self.paths:
+            arr = np.load(p, mmap_mode="r")
+            if arr.ndim != 2:
+                raise ValueError(f"shard {p}: expected [n, d], got {arr.shape}")
+            rows.append(arr.shape[0])
+            dims.append(arr.shape[1])
+        if len(set(dims)) != 1:
+            raise ValueError(f"shards disagree on d: {dict(zip(self.paths, dims))}")
+        self._rows = rows
+        self._dim = dims[0]
+
+    @property
+    def n_points(self) -> int:
+        return int(sum(self._rows))
+
+    @property
+    def dim(self) -> int:
+        return self._dim
+
+    @property
+    def chunk_size(self) -> int:
+        return self._chunk_size
+
+    @property
+    def n_chunks(self) -> int:
+        return _n_chunks(self.n_points, self._chunk_size)
+
+    def chunks(self) -> Iterator[np.ndarray]:
+        cs = self._chunk_size
+        pending: list[np.ndarray] = []
+        pending_rows = 0
+        for p in self.paths:
+            arr = np.load(p, mmap_mode="r")
+            start = 0
+            while start < arr.shape[0]:
+                take = min(cs - pending_rows, arr.shape[0] - start)
+                pending.append(np.array(arr[start : start + take]))
+                pending_rows += take
+                start += take
+                if pending_rows == cs:
+                    yield pending[0] if len(pending) == 1 else np.concatenate(pending)
+                    pending, pending_rows = [], 0
+        if pending_rows:
+            yield pending[0] if len(pending) == 1 else np.concatenate(pending)
+
+
+def as_chunk_source(x, chunk_size: int) -> ChunkSource:
+    """Coerce an array / path / list-of-paths / existing source to a source."""
+    if isinstance(x, ChunkSource):
+        return x
+    if isinstance(x, (str, os.PathLike)):
+        return MemmapChunkSource(x, chunk_size)
+    if isinstance(x, (list, tuple)):
+        return ShardedFileSource(x, chunk_size)
+    return ArrayChunkSource(np.asarray(x), chunk_size)
+
+
+def padded_device_chunks(source: ChunkSource):
+    """Yield ``(x_dev [chunk_size, d] f32, n_valid)`` with one-chunk lookahead.
+
+    Padding keeps every chunk the same static shape (one compiled program per
+    pass); the lookahead enqueues chunk ``i+1``'s host→device transfer before
+    chunk ``i`` is handed to the consumer, so under JAX's async dispatch the
+    copy overlaps the consumer's compute.
+    """
+    import jax
+
+    cs, d = source.chunk_size, source.dim
+
+    def put(chunk: np.ndarray):
+        chunk = np.ascontiguousarray(chunk, np.float32)
+        n = chunk.shape[0]
+        if n < cs:
+            buf = np.zeros((cs, d), np.float32)
+            buf[:n] = chunk
+            chunk = buf
+        return jax.device_put(chunk), n
+
+    prev = None
+    for chunk in source.chunks():
+        cur = put(chunk)
+        if prev is not None:
+            yield prev
+        prev = cur
+    if prev is not None:
+        yield prev
+
+
+def reservoir_sample(source: ChunkSource, size: int, seed: int) -> np.ndarray:
+    """Single-pass uniform sample of ``size`` rows (vectorised reservoir).
+
+    Standard reservoir invariant, applied a chunk at a time: after seeing
+    ``t`` rows each row is retained with probability ``size/t``. This is the
+    streaming stand-in for the uniform subsamples the paper's initialisation
+    (Algorithms 2–4) draws from a resident dataset.
+    """
+    rng = np.random.RandomState(seed)
+    reservoir: np.ndarray | None = None
+    filled = 0
+    seen = 0
+    for chunk in source.chunks():
+        chunk = np.asarray(chunk, np.float32)
+        if reservoir is None:
+            reservoir = np.empty((size, chunk.shape[1]), np.float32)
+        fill = min(size - filled, chunk.shape[0])
+        if fill > 0:
+            reservoir[filled : filled + fill] = chunk[:fill]
+            filled += fill
+        tail = chunk[fill:]
+        if tail.shape[0]:
+            t = seen + fill + np.arange(1, tail.shape[0] + 1)
+            accept = rng.random_sample(tail.shape[0]) < (size / t)
+            idx = np.flatnonzero(accept)
+            if idx.size:
+                slots = rng.randint(0, size, size=idx.size)
+                reservoir[slots] = tail[idx]
+        seen += chunk.shape[0]
+    if reservoir is None:
+        raise ValueError("empty chunk source")
+    return reservoir[:filled] if filled < size else reservoir
+
+
+def write_npy_shards(
+    x: np.ndarray, directory: str | os.PathLike, *, rows_per_shard: int
+) -> list[str]:
+    """Materialise ``x`` as ``.npy`` shards (benchmark/test fixture helper)."""
+    os.makedirs(directory, exist_ok=True)
+    paths = []
+    for i, start in enumerate(range(0, x.shape[0], rows_per_shard)):
+        p = os.path.join(os.fspath(directory), f"shard_{i:05d}.npy")
+        np.save(p, np.asarray(x[start : start + rows_per_shard], np.float32))
+        paths.append(p)
+    return paths

@@ -1,6 +1,6 @@
 """Distributed BWKM: the paper's algorithm on the production mesh.
 
-Layout (DESIGN.md §3/§5):
+Layout (docs/DESIGN.md §3, fault tolerance §5):
   * points      ``x [n, d]``   — rows over ``(pod, data)``, features
                                   optionally over ``model`` (distances
                                   decompose additively over d → one psum).
@@ -62,16 +62,16 @@ def shard_points(x: jax.Array) -> jax.Array:
 
 # ------------------------------------------------------------- shard_map ops
 def _stats_body(x_loc, bid_loc, *, m):
-    ones = jnp.ones(x_loc.shape[0], jnp.float32)
-    psum_ = jax.ops.segment_sum(x_loc, bid_loc, num_segments=m)
-    count = jax.ops.segment_sum(ones, bid_loc, num_segments=m)
-    lo = jax.ops.segment_min(x_loc, bid_loc, num_segments=m)
-    hi = jax.ops.segment_max(x_loc, bid_loc, num_segments=m)
+    """Local ``partition.block_stats`` + cross-shard combine. The psum/pmin/
+    pmax quartet is exactly ``combine_block_stats`` folded over the data
+    axes — the same associative statistics the streaming driver folds over
+    chunks (docs/DESIGN.md §6.4)."""
+    st = part_mod.block_stats(x_loc, bid_loc, m)
     axes = _data_axes()
-    psum_ = jax.lax.psum(psum_, axes)
-    count = jax.lax.psum(count, axes)
-    lo = jax.lax.pmin(lo, axes)
-    hi = jax.lax.pmax(hi, axes)
+    psum_ = jax.lax.psum(st.psum, axes)
+    count = jax.lax.psum(st.count, axes)
+    lo = jax.lax.pmin(st.lo, axes)
+    hi = jax.lax.pmax(st.hi, axes)
     empty = count <= 0
     lo = jnp.where(empty[:, None], _BIG, lo)
     hi = jnp.where(empty[:, None], -_BIG, hi)
@@ -87,7 +87,7 @@ def dist_recompute_stats(part: Partition, x: jax.Array, bid: jax.Array) -> Parti
     n, d = x.shape
     row_spec = sh.logical_to_spec(("batch", "tensor"), (n, d))
     bid_spec = sh.logical_to_spec(("batch",), (n,))
-    fn = jax.shard_map(
+    fn = sh.shard_map(
         partial(_stats_body, m=m),
         mesh=mesh,
         in_specs=(row_spec, bid_spec),
@@ -101,18 +101,15 @@ def dist_recompute_stats(part: Partition, x: jax.Array, bid: jax.Array) -> Parti
 
 
 def _route_body(x_loc, bid_loc, fits, axis, mid, right_row):
-    p_split = fits[bid_loc]
-    p_axis = axis[bid_loc]
-    p_mid = mid[bid_loc]
-    p_val = jnp.take_along_axis(x_loc, p_axis[:, None], axis=1)[:, 0]
-    goes_right = p_split & (p_val > p_mid)
-    return jnp.where(goes_right, right_row[bid_loc].astype(jnp.int32), bid_loc)
+    plan = part_mod.SplitPlan(fits, axis, mid, right_row, jnp.sum(fits))
+    return part_mod.route_split(x_loc, bid_loc, plan)
 
 
 def dist_route_points(
     x: jax.Array, bid: jax.Array, fits, axis, mid, right_row
 ) -> jax.Array:
-    """Repair local block ids after a split round (pure local gather+compare).
+    """Repair local block ids after a split round — ``partition.route_split``
+    applied per shard (pure local gather+compare).
 
     Feature sharding caveat: the split coordinate lives on one model shard;
     we broadcast the needed column via the replicated-stat path (axis/mid are
@@ -120,13 +117,11 @@ def dist_route_points(
     """
     mesh = sh.current_mesh()
     if mesh is None:
-        return part_mod.split_blocks.__wrapped__ if False else _route_body(
-            x, bid, fits, axis, mid, right_row
-        )
+        return _route_body(x, bid, fits, axis, mid, right_row)
     n, d = x.shape
     row_spec = sh.logical_to_spec(("batch", None), (n, d))  # gather features
     bid_spec = sh.logical_to_spec(("batch",), (n,))
-    fn = jax.shard_map(
+    fn = sh.shard_map(
         _route_body,
         mesh=mesh,
         in_specs=(row_spec, bid_spec, P(None), P(None), P(None), P(None)),
@@ -166,7 +161,7 @@ def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
         sums, counts, err, _ = _assign_body(x, c, w, k=k)
     else:
         row_spec = sh.logical_to_spec(("batch", None), (n, d))
-        fn = jax.shard_map(
+        fn = sh.shard_map(
             partial(_assign_body, k=k),
             mesh=mesh,
             in_specs=(row_spec, P(None, None), sh.logical_to_spec(("batch",), (n,))),
@@ -281,26 +276,12 @@ def fit(
 
 
 def _dist_split(part: Partition, x, bid, chosen):
-    """split_blocks with distributed routing + stats."""
-    m = part.capacity
-    chosen = chosen & part.active & (part.count > 1)
-    rank = jnp.cumsum(chosen.astype(jnp.int32)) - 1
-    right_row = part.n_blocks + rank
-    fits = chosen & (right_row < m)
-    right_row = jnp.where(fits, right_row, 0)
-    ext = jnp.maximum(part.hi - part.lo, 0.0)
-    axis = jnp.argmax(ext, axis=-1).astype(jnp.int32)
-    mid = 0.5 * (
-        jnp.take_along_axis(part.lo, axis[:, None], axis=1)[:, 0]
-        + jnp.take_along_axis(part.hi, axis[:, None], axis=1)[:, 0]
-    )
-    new_bid = dist_route_points(x, bid, fits, axis, mid, right_row)
-    n_new = jnp.sum(fits.astype(jnp.int32))
-    mrange = jnp.arange(m)
-    active = part.active | (
-        (mrange >= part.n_blocks) & (mrange < part.n_blocks + n_new)
-    )
-    part = part._replace(active=active, n_blocks=part.n_blocks + n_new)
+    """``split_blocks`` with distributed routing + stats: the shared
+    ``split_plan`` is resolved once (replicated), routing and statistics run
+    per shard."""
+    plan = part_mod.split_plan(part, chosen)
+    new_bid = dist_route_points(x, bid, plan.fits, plan.axis, plan.mid, plan.right_row)
+    part = part_mod.apply_split_plan(part, plan)
     part = dist_recompute_stats(part, x, new_bid)
     return part, new_bid
 
@@ -323,7 +304,7 @@ def _route_into_boxes(x: jax.Array, part: Partition) -> jax.Array:
         return body(x)
     n, d = x.shape
     row_spec = sh.logical_to_spec(("batch", None), (n, d))
-    return jax.shard_map(
+    return sh.shard_map(
         body, mesh=mesh, in_specs=(row_spec,),
         out_specs=sh.logical_to_spec(("batch",), (n,)), check_vma=False,
     )(x)

@@ -1,0 +1,19 @@
+"""Pallas API shims shared by the TPU kernels."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` across jax generations (0.4.x named it
+    ``TPUCompilerParams``), failing loudly if neither exists."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams; this jax version is unsupported by repro.kernels"
+        )
+    return cls(**kwargs)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params
+
 __all__ = ["cluster_sums_pallas"]
 
 
@@ -86,7 +88,7 @@ def cluster_sums_pallas(
             jax.ShapeDtypeStruct((kp, dp), jnp.float32),
             jax.ShapeDtypeStruct((kp, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import compiler_params
+
 __all__ = ["assign_top2_pallas"]
 
 _BIG = 3.0e38  # python float: pallas kernels must not capture traced constants
@@ -117,7 +119,7 @@ def assign_top2_pallas(
             jax.ShapeDtypeStruct((np_, 1), jnp.float32),
             jax.ShapeDtypeStruct((np_, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

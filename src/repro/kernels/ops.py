@@ -16,7 +16,13 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 
-__all__ = ["assign_top2", "cluster_sums", "pallas_available", "set_default_impl"]
+__all__ = [
+    "assign_top2",
+    "assign_top2_chunk",
+    "cluster_sums",
+    "pallas_available",
+    "set_default_impl",
+]
 
 # "auto" | "pallas" | "ref". "auto" = pallas on TPU, ref elsewhere (the
 # interpret-mode pallas path is exercised explicitly by tests/benchmarks:
@@ -52,6 +58,31 @@ def assign_top2(
         interpret = jax.default_backend() != "tpu"
         return distance_assign.assign_top2_pallas(x, c, interpret=interpret)
     return ref.assign_top2(x, c)
+
+
+def assign_top2_chunk(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    chunk_size: int,
+    impl: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunk-shaped ``assign_top2`` for streaming passes (DESIGN.md §6).
+
+    Pads a ragged ``[n <= chunk_size, d]`` chunk to the static chunk shape
+    before dispatching, so a whole out-of-core pass — including the tail
+    chunk — reuses one compiled program (one Pallas kernel instantiation per
+    pass, not one per distinct chunk length). Padding rows are sliced off the
+    result; they cost ``(chunk_size − n)·K`` wasted distance lanes on the
+    tail chunk only.
+    """
+    n = x.shape[0]
+    if n > chunk_size:
+        raise ValueError(f"chunk of {n} rows exceeds chunk_size={chunk_size}")
+    if n < chunk_size:
+        x = jnp.pad(x, ((0, chunk_size - n), (0, 0)))
+    assign, d1, d2 = assign_top2(x, c, impl=impl)
+    return assign[:n], d1[:n], d2[:n]
 
 
 def cluster_sums(

@@ -12,20 +12,23 @@ import jax
 __all__ = ["make_production_mesh", "make_smoke_mesh"]
 
 
+def _mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> jax.sharding.Mesh:
+    # jax.sharding.AxisType landed after 0.4.x; every axis here is Auto,
+    # which is also the old default — omit the kwarg on older jax.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16×16 = 256 chips per pod; 2×16×16 = 512 chips across two pods."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh(shape, axes)
 
 
 def make_smoke_mesh() -> jax.sharding.Mesh:
     """Trivial 1×1×1 mesh so model code paths (shard_map islands included)
     run unchanged on a single CPU device."""
-    return jax.make_mesh(
-        (1, 1, 1),
-        ("pod", "data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 3,
-    )
+    return _mesh((1, 1, 1), ("pod", "data", "model"))

@@ -144,7 +144,7 @@ def moe_ffn(cfg: ArchConfig, params: dict, x: jax.Array) -> tuple[jax.Array, jax
         y, aux = _moe_local(cfg, params["router"], w1, w3, w2, x.reshape(-1, d), e)
         out = y.reshape(b, s, d)
     elif mode == "ep":
-        fn = jax.shard_map(
+        fn = sh.shard_map(
             partial(_moe_ep_island, cfg, e=e, n_model=n_model, bd=bd),
             mesh=mesh,
             in_specs=(
@@ -159,7 +159,7 @@ def moe_ffn(cfg: ArchConfig, params: dict, x: jax.Array) -> tuple[jax.Array, jax
         )
         out, aux = fn(x, params["router"], w1, w3, w2)
     elif mode == "ep_split":
-        fn = jax.shard_map(
+        fn = sh.shard_map(
             partial(_moe_ep_split_island, cfg, e=e, n_model=n_model, bd=bd),
             mesh=mesh,
             in_specs=(
@@ -177,7 +177,7 @@ def moe_ffn(cfg: ArchConfig, params: dict, x: jax.Array) -> tuple[jax.Array, jax
         )
         out, aux = fn(x, params["router"], w1, w3, w2)
     else:
-        fn = jax.shard_map(
+        fn = sh.shard_map(
             partial(_moe_tp_island, cfg, e=e, bd=bd),
             mesh=mesh,
             in_specs=(

@@ -1,0 +1,27 @@
+"""Out-of-core streaming BWKM (DESIGN.md §6).
+
+The paper's premise is that the dataset is too large to analyze whole;
+this package takes that literally: the driver consumes an iterator of
+fixed-size chunks (``repro.data.chunks``) and keeps only O(chunk + M·d)
+on the device — per-block sufficient statistics are accumulated across
+chunks, and the weighted Lloyd + ε-boundary-split loop runs unchanged on
+the (tiny) representative set.
+"""
+
+from repro.streaming.init import streaming_initial_partition
+from repro.streaming.stream_bwkm import (
+    StreamBWKMResult,
+    StreamStats,
+    fit,
+    streaming_error,
+    streaming_lloyd_step,
+)
+
+__all__ = [
+    "fit",
+    "streaming_error",
+    "streaming_lloyd_step",
+    "streaming_initial_partition",
+    "StreamBWKMResult",
+    "StreamStats",
+]

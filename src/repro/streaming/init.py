@@ -1,0 +1,64 @@
+"""Streaming-aware initial partition (paper Algorithms 2–4 on a first-pass
+sample; DESIGN.md §6.2).
+
+The paper's initialisation only ever *evaluates* O(r·s + m) points — every
+split decision is driven by uniform subsamples — but the in-core
+implementation keeps the full dataset at hand to re-route memberships after
+each split. Out of core we invert the order: draw one uniform sample in a
+single pass (vectorised reservoir), run Algorithm 2 entirely on that
+resident sample, and only then route the full dataset through the resulting
+spatial partition chunk-by-chunk. This is the same sample→build→broadcast
+scheme the distributed driver uses (``dist_bwkm.fit``), with the broadcast
+replaced by a streaming pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import init_partition
+from repro.core.partition import Partition
+from repro.data.chunks import ChunkSource, reservoir_sample
+
+__all__ = ["streaming_initial_partition", "default_init_sample_size"]
+
+
+def default_init_sample_size(n: int, p: dict) -> int:
+    """Sample size for the init pass: enough for every Alg-3/4 subsample to
+    be a genuine subsample (matches the distributed driver's choice)."""
+    return min(n, max(p["s"] * p["r"] * 4, 4 * p["m"]))
+
+
+def streaming_initial_partition(
+    key: jax.Array,
+    source: ChunkSource,
+    k: int,
+    *,
+    m: int,
+    m_prime: int,
+    s: int,
+    r: int,
+    capacity: int,
+    sample_size: int,
+) -> Partition:
+    """Algorithm 2 over a one-pass uniform sample of ``source``.
+
+    The returned partition's boxes/active rows describe the spatial
+    partition; its statistics and ``block_id`` reflect only the sample. The
+    caller must re-route the full stream through the boxes and replace the
+    statistics (``stream_bwkm._routing_pass``) before using them.
+    """
+    key, k_seed = jax.random.split(key)
+    seed = int(jax.random.randint(k_seed, (), 0, 2**31 - 1))
+    sample = reservoir_sample(source, sample_size, seed)
+    return init_partition.build_initial_partition(
+        key,
+        jnp.asarray(sample),
+        k,
+        m=m,
+        m_prime=m_prime,
+        s=min(s, sample.shape[0]),
+        r=r,
+        capacity=capacity,
+    )

@@ -1,0 +1,333 @@
+"""Out-of-core streaming BWKM driver (paper Algorithm 5; DESIGN.md §6).
+
+``fit`` runs the same weighted Lloyd + ε-boundary-split loop as
+``core.bwkm.fit`` but never materialises the dataset: points arrive as
+fixed-size chunks from a :class:`repro.data.ChunkSource`, and everything the
+algorithm needs about them is folded into per-block sufficient statistics
+``(Σx, |B|, min x, max x)`` (``core.partition.BlockStats``) chunk by chunk.
+
+Memory budget per device: one padded chunk ``[chunk_size, d]`` (double
+buffered → two) + the ``[M, d]`` block statistics + the ``[M, d]``/``[K, d]``
+representative/centroid arrays. Host keeps 4 bytes/point of block
+memberships (``int32``), the only full-length state — see
+docs/adr/0001-streaming-ingestion.md for why that beats recomputing
+memberships from boxes every pass.
+
+Pass structure per outer iteration:
+  * weighted Lloyd + misassignment run on the M-row representative set —
+    no data pass at all;
+  * a split round is ONE streaming pass: each chunk's memberships are
+    repaired against the split plan (gather + compare) and its block
+    statistics are re-accumulated in the same jitted program.
+
+All chunk programs have static shapes (chunks are padded, validity is a
+traced row count), so a full pass reuses one compiled executable, and the
+per-chunk assignment work dispatches through ``kernels.ops`` — the Pallas
+``assign_top2`` kernel on TPU — exactly as the in-core path does.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bounds, bwkm as core_bwkm, misassignment as mis
+from repro.core import partition as part_mod
+from repro.core.kmeanspp import weighted_kmeanspp
+from repro.core.lloyd import weighted_lloyd
+from repro.core.partition import BlockStats, Partition
+from repro.data.chunks import ChunkSource, padded_device_chunks
+from repro.kernels import ops
+from repro.streaming import init as stream_init
+
+__all__ = ["StreamStats", "fit", "streaming_error", "streaming_lloyd_step"]
+
+_BIG = 3.0e38
+
+
+@dataclasses.dataclass
+class StreamStats:
+    """Out-of-core accounting: how much data moved to reach the result."""
+
+    n_chunks: int
+    chunk_size: int
+    passes: int = 0  # full-dataset streaming passes
+    points_streamed: int = 0  # Σ chunk rows fed to the device
+
+
+# ----------------------------------------------------------- chunk programs
+@partial(jax.jit, static_argnames=("m",))
+def _box_route_stats(x, nv, lo, hi, active, *, m):
+    """Route one padded chunk into the partition's boxes (clipped L∞ nearest
+    box — containment for interior points, nearest box for tails exactly as
+    ``dist_bwkm._route_into_boxes``) and fold its block statistics.
+
+    ``lo/hi/active`` are sliced by the caller to the live row prefix (block
+    rows are allocated densely from 0), so the ``[cs, m_live]`` distance
+    matrix scales with actual blocks, not the 64·m capacity; only the
+    ``[m, ·]`` output statistics use full capacity ``m``.
+    """
+    valid = jnp.arange(x.shape[0]) < nv
+    lo_ = jnp.where(active[:, None], lo, _BIG)
+    hi_ = jnp.where(active[:, None], hi, -_BIG)
+    below = jnp.maximum(lo_[None] - x[:, None, :], 0.0)
+    above = jnp.maximum(x[:, None, :] - hi_[None], 0.0)
+    dist = jnp.max(below + above, axis=-1)  # [cs, m_live] clipped L∞
+    bid = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+    return bid, part_mod.block_stats(x, bid, m, valid=valid)
+
+
+@partial(jax.jit, static_argnames=("m",))
+def _split_route_stats(x, bid, nv, plan, *, m):
+    """Repair one chunk's memberships against a split plan and fold stats."""
+    valid = jnp.arange(x.shape[0]) < nv
+    new_bid = part_mod.route_split(x, bid, plan)
+    return new_bid, part_mod.block_stats(x, new_bid, m, valid=valid)
+
+
+_combine = jax.jit(part_mod.combine_block_stats)
+
+
+@jax.jit
+def _chunk_assign_stats(x, nv, c):
+    """Per-chunk Lloyd sufficient statistics over the full dataset: cluster
+    sums/counts and error contribution. Dispatches through the chunk-shaped
+    kernel entry point (the Pallas ``assign_top2`` kernel on TPU); ``x`` is
+    already padded to the static chunk shape, so the pad inside is a no-op."""
+    assign, d1, _d2 = ops.assign_top2_chunk(x, c, chunk_size=x.shape[0])
+    wv = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
+    sums = jax.ops.segment_sum(x * wv[:, None], assign, num_segments=c.shape[0])
+    counts = jax.ops.segment_sum(wv, assign, num_segments=c.shape[0])
+    return sums, counts, jnp.sum(wv * d1)
+
+
+# ------------------------------------------------------------ data passes
+def _pad_bid(bid: np.ndarray, chunk_size: int) -> np.ndarray:
+    if bid.shape[0] == chunk_size:
+        return bid
+    out = np.zeros((chunk_size,), np.int32)
+    out[: bid.shape[0]] = bid
+    return out
+
+
+def _routing_pass(
+    source: ChunkSource, part: Partition, stats: StreamStats
+) -> tuple[Partition, list[np.ndarray]]:
+    """Stream the dataset once: route every chunk into the current boxes,
+    record memberships on the host, accumulate tight block statistics."""
+    m, d = part.capacity, source.dim
+    # Live rows are the dense prefix [0, n_blocks); n_blocks is host-known
+    # before the pass. Routing against the prefix (padded up to a multiple of
+    # 128 for shape stability) keeps the per-chunk distance matrix at
+    # [cs, ~n_blocks] instead of [cs, 64·m] capacity.
+    m_live = min(m, max(128, -(-int(part.n_blocks) // 128) * 128))
+    acc = part_mod.empty_block_stats(m, d)
+    bids: list[np.ndarray] = []
+    for x_dev, nv in padded_device_chunks(source):
+        bid, st = _box_route_stats(
+            x_dev, nv,
+            part.lo[:m_live], part.hi[:m_live], part.active[:m_live], m=m,
+        )
+        acc = _combine(acc, st)
+        bids.append(np.asarray(bid[:nv], np.int32))
+        stats.points_streamed += nv
+    stats.passes += 1
+    return _with_stats(part, acc), bids
+
+
+def _split_pass(
+    source: ChunkSource,
+    bids: list[np.ndarray],
+    part: Partition,
+    plan: part_mod.SplitPlan,
+    stats: StreamStats,
+) -> tuple[Partition, list[np.ndarray]]:
+    """Stream the dataset once to execute a split round: repair memberships
+    chunk-by-chunk and re-tighten every block's statistics."""
+    m, d = part.capacity, source.dim
+    acc = part_mod.empty_block_stats(m, d)
+    new_bids: list[np.ndarray] = []
+    for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
+        bid_dev = jnp.asarray(_pad_bid(bids[i], source.chunk_size))
+        nb, st = _split_route_stats(x_dev, bid_dev, nv, plan, m=m)
+        acc = _combine(acc, st)
+        new_bids.append(np.asarray(nb[:nv], np.int32))
+        stats.points_streamed += nv
+    stats.passes += 1
+    part = part_mod.apply_split_plan(part, plan)
+    return _with_stats(part, acc), new_bids
+
+
+def _with_stats(part: Partition, st: BlockStats) -> Partition:
+    # block_id stays empty: full-length membership lives on the host, not in
+    # the pytree (the whole point of the streaming driver).
+    return part._replace(
+        psum=st.psum, count=st.count, lo=st.lo, hi=st.hi,
+        block_id=jnp.zeros((0,), jnp.int32),
+    )
+
+
+def _global_extent(part: Partition) -> float:
+    """‖max x − min x‖ over the whole stream, from accumulated block boxes."""
+    occ = (part.count > 0) & part.active
+    lo = jnp.min(jnp.where(occ[:, None], part.lo, _BIG), axis=0)
+    hi = jnp.max(jnp.where(occ[:, None], part.hi, -_BIG), axis=0)
+    return float(jnp.linalg.norm(jnp.maximum(hi - lo, 0.0)))
+
+
+# ------------------------------------------------------------------ driver
+@dataclasses.dataclass
+class StreamBWKMResult(core_bwkm.BWKMResult):
+    stream: StreamStats | None = None
+
+
+def fit(
+    key: jax.Array,
+    source: ChunkSource,
+    config: core_bwkm.BWKMConfig,
+    *,
+    init_sample_size: int | None = None,
+    trace_centroids: bool = False,
+) -> StreamBWKMResult:
+    """Algorithm 5 over a chunked stream. Mirrors ``core.bwkm.fit`` step for
+    step; only the dataset passes differ (see module docstring).
+
+    The returned ``partition.block_id`` is empty — full-length memberships
+    are internal host state. ``result.stream`` records pass counts.
+    """
+    n, d = source.n_points, source.dim
+    p = config.resolve(n, d)
+    k = config.k
+    stats = StreamStats(n_chunks=source.n_chunks, chunk_size=source.chunk_size)
+
+    key, k_init, k_pp = jax.random.split(key, 3)
+    s_init = init_sample_size or stream_init.default_init_sample_size(n, p)
+    part = stream_init.streaming_initial_partition(
+        k_init, source, k,
+        m=p["m"], m_prime=p["m_prime"], s=p["s"], r=p["r"],
+        capacity=p["capacity"], sample_size=s_init,
+    )
+    stats.passes += 1  # the reservoir-sample pass
+    stats.points_streamed += n
+    part, bids = _routing_pass(source, part, stats)
+    # Init cost: same units core.bwkm.fit charges (Thm A.3 dominant term).
+    distances = float(p["r"] * p["s"] * k + p["m"] * k)
+
+    reps, w = part_mod.representatives(part)
+    c = weighted_kmeanspp(k_pp, reps, w, k)
+    distances += float(int(part.n_blocks)) * k
+
+    weighted_errors: list[float] = []
+    n_blocks: list[int] = []
+    boundary_sizes: list[int] = []
+    trace: list[dict] = []
+    stop_reason = "max-iters"
+
+    displacement_eps_w = None
+    if config.displacement_epsilon is not None:
+        displacement_eps_w = bounds.displacement_threshold(
+            _global_extent(part), n, config.displacement_epsilon
+        )
+
+    it = 0
+    for it in range(1, config.max_iters + 1):
+        res = weighted_lloyd(
+            reps, w, c,
+            max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
+        )
+        c = res.centroids
+        distances += float(res.distances)
+        weighted_errors.append(float(res.error))
+        n_blocks.append(int(part.n_blocks))
+
+        eps = mis.misassignment(part, res.d1, res.d2)
+        f_size = int(jnp.sum(eps > 0))
+        boundary_sizes.append(f_size)
+        if trace_centroids:
+            trace.append(
+                {
+                    "iteration": it,
+                    "distances": distances,
+                    "centroids": jax.device_get(c),
+                    "n_blocks": int(part.n_blocks),
+                    "boundary": f_size,
+                    "passes": stats.passes,
+                }
+            )
+
+        # --- stopping criteria (Section 2.4.2), as in core.bwkm.fit ---
+        if f_size == 0:
+            stop_reason = "boundary-empty"
+            break
+        if config.distance_budget is not None and distances >= config.distance_budget:
+            stop_reason = "distance-budget"
+            break
+        if (
+            displacement_eps_w is not None
+            and it > 1
+            and float(res.max_shift) <= displacement_eps_w
+        ):
+            stop_reason = "displacement"
+            break
+        if config.gap_bound_threshold is not None:
+            gap = float(bounds.thm2_gap_bound(part, eps, res.d1))
+            if gap <= config.gap_bound_threshold:
+                stop_reason = "gap-bound"
+                break
+        free_rows = p["capacity"] - int(part.n_blocks)
+        if free_rows <= 0:
+            stop_reason = "capacity"
+            break
+
+        # --- Step 3: sample |F| blocks ∝ ε, split via one streaming pass ---
+        key, k_cut = jax.random.split(key)
+        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
+        plan = part_mod.split_plan(part, chosen)
+        part, bids = _split_pass(source, bids, part, plan, stats)
+        reps, w = part_mod.representatives(part)
+
+    return StreamBWKMResult(
+        centroids=c,
+        partition=part,
+        iterations=it,
+        distances=distances,
+        weighted_errors=weighted_errors,
+        n_blocks=n_blocks,
+        boundary_sizes=boundary_sizes,
+        stop_reason=stop_reason,
+        trace=trace,
+        stream=stats,
+    )
+
+
+# ------------------------------------------------- full-stream evaluation
+def streaming_lloyd_step(
+    source: ChunkSource, c: jax.Array
+) -> tuple[jax.Array, float]:
+    """One exact Lloyd iteration over the full stream: ``(new_c, error)``.
+
+    The out-of-core analogue of ``dist_bwkm.dist_assign_step`` — chunk
+    statistics take the place of shard statistics (the two compose: on a
+    mesh, each host streams its shard's chunks and the psum runs unchanged).
+    """
+    k, d = c.shape
+    sums = jnp.zeros((k, d), jnp.float32)
+    counts = jnp.zeros((k,), jnp.float32)
+    err = jnp.zeros((), jnp.float32)  # device-side: no per-chunk host sync
+    for x_dev, nv in padded_device_chunks(source):
+        s_, c_, e_ = _chunk_assign_stats(x_dev, nv, c)
+        sums, counts, err = sums + s_, counts + c_, err + e_
+    new_c = jnp.where(
+        (counts > 0)[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], c
+    )
+    return new_c, float(err)
+
+
+def streaming_error(source: ChunkSource, c: jax.Array) -> float:
+    """Exact K-means error E^D(C) (Eq. 1) computed in one streaming pass."""
+    _, err = streaming_lloyd_step(source, c)
+    return err

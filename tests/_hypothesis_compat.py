@@ -1,0 +1,47 @@
+"""Degrade property-based tests gracefully when ``hypothesis`` is absent.
+
+The seed container ships pytest but not hypothesis (it lives in the
+``test`` extra of pyproject.toml). Importing this module instead of
+``hypothesis`` directly keeps collection working everywhere: with
+hypothesis installed the real decorators are re-exported; without it,
+``@given(...)`` replaces the test with a ``pytest.skip`` stub and the
+example-only tests still run.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _InertStrategies:
+        """``st.<anything>(...)`` evaluates at import time; return None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _InertStrategies()
+
+    def settings(*args, **kwargs):
+        del args, kwargs
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        del args, kwargs
+
+        def deco(fn):
+            # A fresh zero-arg function (not functools.wraps) so pytest does
+            # not try to resolve the property's parameters as fixtures.
+            def skipper():
+                pytest.skip("hypothesis not installed (pip install '.[test]')")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import baselines, bwkm, metrics, misassignment as mis, partition as pm
 from repro.core.kmeanspp import afkmc2, forgy, kmeanspp, weighted_kmeanspp

@@ -1,0 +1,221 @@
+"""Out-of-core streaming BWKM: chunk sources, sufficient-statistic
+accumulation, split-pass determinism, and end-to-end equivalence with the
+in-memory driver."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import streaming
+from repro.core import bwkm, partition as pm
+from repro.data import chunks as ck
+from repro.kernels import ops
+from repro.streaming import stream_bwkm as sb
+
+from helpers import gmm
+
+
+def _points(seed=0, n=12_000, d=4, k=6, spread=30.0, noise=0.5):
+    """Well-separated GMM: every reasonable K-means run finds the same
+    optimum, so driver equivalence shows up as near-identical error."""
+    return np.asarray(gmm(jax.random.PRNGKey(seed), n, d, k, spread, noise))
+
+
+# ------------------------------------------------------------ chunk sources
+def test_chunk_sources_yield_identical_data(tmp_path):
+    x = _points(n=2017, d=3)
+    arr = ck.ArrayChunkSource(x, 256)
+    np.testing.assert_array_equal(np.concatenate(list(arr.chunks())), x)
+
+    p = os.path.join(tmp_path, "x.npy")
+    np.save(p, x)
+    mm = ck.MemmapChunkSource(p, 256)
+    np.testing.assert_array_equal(np.concatenate(list(mm.chunks())), x)
+
+    paths = ck.write_npy_shards(x, tmp_path / "shards", rows_per_shard=500)
+    sh = ck.ShardedFileSource(paths, 256)
+    assert sh.n_points == 2017 and sh.n_chunks == 8
+    parts = list(sh.chunks())
+    # fixed-size chunks across ragged shard boundaries, short tail only
+    assert [c.shape[0] for c in parts] == [256] * 7 + [225]
+    np.testing.assert_array_equal(np.concatenate(parts), x)
+
+
+def test_padded_device_chunks_round_trip():
+    x = _points(n=1000, d=5)
+    src = ck.ArrayChunkSource(x, 384)
+    out = list(ck.padded_device_chunks(src))
+    assert all(xd.shape == (384, 5) for xd, _ in out)
+    rec = np.concatenate([np.asarray(xd)[:nv] for xd, nv in out])
+    np.testing.assert_array_equal(rec, x)
+
+
+def test_reservoir_sample_uniformity():
+    # rows 0..9999, one feature; the sample mean of a uniform draw over
+    # [0, n) concentrates around n/2.
+    x = np.arange(10_000, dtype=np.float32)[:, None]
+    src = ck.ArrayChunkSource(x, 700)
+    s = ck.reservoir_sample(src, 2000, seed=7)
+    assert s.shape == (2000, 1)
+    assert set(np.asarray(s[:, 0], np.int64)) <= set(range(10_000))
+    assert abs(float(s.mean()) - 5000.0) < 300.0
+
+
+# ----------------------------------------------------- sufficient statistics
+def test_chunked_block_stats_match_recompute():
+    x = jnp.asarray(_points(n=3000, d=3))
+    part = pm.create_partition(x, capacity=32)
+    for _ in range(3):
+        part = pm.split_blocks(part, x, part.active)
+
+    m = part.capacity
+    acc = pm.empty_block_stats(m, 3)
+    for start in range(0, 3000, 512):
+        xc = x[start : start + 512]
+        bc = part.block_id[start : start + 512]
+        acc = pm.combine_block_stats(acc, pm.block_stats(xc, bc, m))
+    np.testing.assert_allclose(np.asarray(acc.count), np.asarray(part.count))
+    np.testing.assert_allclose(
+        np.asarray(acc.psum), np.asarray(part.psum), rtol=1e-5, atol=1e-3
+    )
+    np.testing.assert_array_equal(np.asarray(acc.lo), np.asarray(part.lo))
+    np.testing.assert_array_equal(np.asarray(acc.hi), np.asarray(part.hi))
+
+
+def test_block_stats_valid_mask_drops_padding():
+    x = jnp.asarray(_points(n=100, d=3))
+    bid = jnp.zeros((100,), jnp.int32)
+    valid = jnp.arange(100) < 60
+    st = pm.block_stats(x, bid, 4, valid=valid)
+    ref = pm.block_stats(x[:60], bid[:60], 4)
+    np.testing.assert_allclose(np.asarray(st.count), np.asarray(ref.count))
+    np.testing.assert_allclose(
+        np.asarray(st.psum), np.asarray(ref.psum), rtol=1e-5, atol=1e-3
+    )
+    np.testing.assert_array_equal(np.asarray(st.lo), np.asarray(ref.lo))
+    np.testing.assert_array_equal(np.asarray(st.hi), np.asarray(ref.hi))
+
+
+# ------------------------------------------------------- split-pass fidelity
+def test_streaming_split_pass_matches_in_core_split():
+    """Same partition + same plan: one streaming split pass must produce the
+    same boxes/stats as the in-core ``split_blocks``."""
+    x = jnp.asarray(_points(n=4000, d=3))
+    part = pm.create_partition(x, capacity=64)
+    for _ in range(2):
+        part = pm.split_blocks(part, x, part.active)
+
+    chosen = part.active & (part.count > 1)
+    ref = pm.split_blocks(part, x, chosen)
+
+    plan = pm.split_plan(part, chosen)
+    src = ck.ArrayChunkSource(np.asarray(x), 640)
+    bids = [
+        np.asarray(part.block_id[s : s + 640], np.int32)
+        for s in range(0, 4000, 640)
+    ]
+    stats = sb.StreamStats(n_chunks=src.n_chunks, chunk_size=640)
+    out, new_bids = sb._split_pass(src, bids, part, plan, stats)
+
+    assert int(out.n_blocks) == int(ref.n_blocks)
+    np.testing.assert_array_equal(
+        np.concatenate(new_bids), np.asarray(ref.block_id)
+    )
+    np.testing.assert_allclose(np.asarray(out.count), np.asarray(ref.count))
+    np.testing.assert_allclose(
+        np.asarray(out.psum), np.asarray(ref.psum), rtol=1e-5, atol=1e-2
+    )
+    np.testing.assert_array_equal(np.asarray(out.lo), np.asarray(ref.lo))
+    np.testing.assert_array_equal(np.asarray(out.hi), np.asarray(ref.hi))
+
+
+# -------------------------------------------------------- kernel entry point
+def test_assign_top2_chunk_matches_unpadded():
+    x = jnp.asarray(_points(n=300, d=4))
+    c = x[:5]
+    a0, d10, d20 = ops.assign_top2(x, c)
+    a1, d11, d21 = ops.assign_top2_chunk(x, c, chunk_size=512)
+    np.testing.assert_array_equal(np.asarray(a0), np.asarray(a1))
+    np.testing.assert_allclose(np.asarray(d10), np.asarray(d11), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(d20), np.asarray(d21), rtol=1e-6)
+    with pytest.raises(ValueError):
+        ops.assign_top2_chunk(x, c, chunk_size=100)
+
+
+def test_streaming_error_matches_dense():
+    x = _points(n=5000, d=4)
+    c = jnp.asarray(x[:7])
+    src = ck.ArrayChunkSource(x, 1024)
+    e_stream = streaming.streaming_error(src, c)
+    _, d1, _ = ops.assign_top2(jnp.asarray(x), c)
+    np.testing.assert_allclose(e_stream, float(jnp.sum(d1)), rtol=1e-5)
+
+
+def test_streaming_lloyd_step_matches_dense():
+    x = _points(n=5000, d=4)
+    c = jnp.asarray(x[:6]) + 0.5
+    src = ck.ArrayChunkSource(x, 768)
+    c_stream, _ = streaming.streaming_lloyd_step(src, c)
+    xj = jnp.asarray(x)
+    assign, _, _ = ops.assign_top2(xj, c)
+    sums = jax.ops.segment_sum(xj, assign, num_segments=6)
+    counts = jax.ops.segment_sum(jnp.ones(5000), assign, num_segments=6)
+    c_dense = jnp.where(
+        (counts > 0)[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], c
+    )
+    np.testing.assert_allclose(
+        np.asarray(c_stream), np.asarray(c_dense), rtol=1e-4, atol=1e-4
+    )
+
+
+# --------------------------------------------------------- driver end-to-end
+def test_stream_bwkm_matches_core_bwkm_error():
+    """Acceptance: ≥4 chunks, streaming error within 1e-3 relative of the
+    in-memory driver on the same data."""
+    x = _points(seed=1, n=20_000, d=4, k=6)
+    cfg = bwkm.BWKMConfig(k=6, max_iters=15)
+    src = ck.ArrayChunkSource(x, 4096)
+    assert src.n_chunks == 5
+
+    res_s = streaming.fit(jax.random.PRNGKey(2), src, cfg)
+    res_c = bwkm.fit(jax.random.PRNGKey(2), jnp.asarray(x), cfg)
+
+    e_s = streaming.streaming_error(src, res_s.centroids)
+    e_c = streaming.streaming_error(src, res_c.centroids)
+    rel = abs(e_s - e_c) / e_c
+    assert rel < 1e-3, f"streaming vs core relative error {rel:.2e}"
+    assert res_s.stream.passes >= 2  # sample pass + routing pass at minimum
+    assert res_s.stream.points_streamed >= 2 * 20_000
+
+
+def test_stream_bwkm_from_sharded_files(tmp_path):
+    """The headline scenario: dataset lives on disk as shards, device only
+    ever holds one chunk; result quality matches the in-memory driver."""
+    x = _points(seed=3, n=16_000, d=3, k=5)
+    paths = ck.write_npy_shards(x, tmp_path, rows_per_shard=3000)
+    src = ck.ShardedFileSource(paths, chunk_size=2048)
+    assert src.n_chunks == 8
+
+    cfg = bwkm.BWKMConfig(k=5, max_iters=12)
+    res_s = streaming.fit(jax.random.PRNGKey(4), src, cfg)
+    res_c = bwkm.fit(jax.random.PRNGKey(4), jnp.asarray(x), cfg)
+
+    e_s = streaming.streaming_error(src, res_s.centroids)
+    e_c = streaming.streaming_error(src, res_c.centroids)
+    assert abs(e_s - e_c) / e_c < 1e-3
+    # streaming partition keeps no per-point state in the pytree
+    assert res_s.partition.block_id.shape == (0,)
+
+
+def test_stream_bwkm_distance_budget():
+    x = _points(seed=5, n=8_000, d=3, k=4)
+    src = ck.ArrayChunkSource(x, 2048)
+    res = streaming.fit(
+        jax.random.PRNGKey(6),
+        src,
+        bwkm.BWKMConfig(k=4, max_iters=50, distance_budget=20000.0),
+    )
+    assert res.stop_reason in ("distance-budget", "boundary-empty")

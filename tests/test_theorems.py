@@ -7,7 +7,7 @@ the library can't fake or break an inequality.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import bounds, bwkm, misassignment as mis, partition as pm
 from repro.core.lloyd import weighted_lloyd
