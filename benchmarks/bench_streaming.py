@@ -2,8 +2,8 @@
 
 Materialises a paper-profile dataset as ``.npy`` shards on disk, then runs:
 
-  * ``core.bwkm.fit``  over the resident array          (the baseline)
-  * ``streaming.fit``  over a ShardedFileSource          (the out-of-core path)
+  * ``core.bwkm.fit_incore``      over the resident array   (the baseline)
+  * ``streaming.fit_streaming``   over a ShardedFileSource  (out-of-core)
   * one full-stream assignment pass (``streaming_lloyd_step``), the steady-
     state data-plane operation, to report ingest throughput in points/s
 
@@ -53,13 +53,13 @@ def bench(
         cfg = bwkm.BWKMConfig(k=k, max_iters=max_iters)
 
         t0 = time.time()
-        res_core = bwkm.fit(jax.random.PRNGKey(seed), jnp.asarray(x), cfg)
+        res_core = bwkm.fit_incore(jax.random.PRNGKey(seed), jnp.asarray(x), cfg)
         jax.block_until_ready(res_core.centroids)
         t_core = time.time() - t0
         e_core = float(metrics.kmeans_error(jnp.asarray(x), res_core.centroids))
 
         t0 = time.time()
-        res_s = streaming.fit(jax.random.PRNGKey(seed), src, cfg)
+        res_s = streaming.fit_streaming(jax.random.PRNGKey(seed), src, cfg)
         jax.block_until_ready(res_s.centroids)
         t_stream = time.time() - t0
         e_stream = float(metrics.kmeans_error(jnp.asarray(x), res_s.centroids))

@@ -15,37 +15,38 @@ import time
 import jax
 import numpy as np
 
-from repro.core import baselines, bwkm, metrics
+from repro import BWKM
+from repro.core import baselines, metrics
 
 from benchmarks import datasets
 
 
 def run_methods(x, k, seed, *, mb_iters=150):
-    """One repetition: every method's (error, distances, seconds)."""
+    """One repetition: every method's (error, distances, seconds).
+
+    Every method — BWKM through the estimator facade, baselines directly —
+    returns the unified ``FitResult`` schema, so one ``record`` handles all
+    of them (including the per-iteration BWKM trace).
+    """
     out = {}
 
     def record(name, fn):
         t0 = time.time()
-        c, d = fn(jax.random.PRNGKey(seed))
-        e = float(metrics.kmeans_error(x, c))
-        out[name] = {"error": e, "distances": float(d), "s": time.time() - t0}
+        res = fn(jax.random.PRNGKey(seed))  # unified FitResult
+        e = float(metrics.kmeans_error(x, res.centroids))
+        row = {"error": e, "distances": float(res.distances), "s": time.time() - t0}
+        if res.trace:
+            row["trace"] = [
+                {
+                    "distances": t["distances"],
+                    "error": float(metrics.kmeans_error(x, t["centroids"])),
+                }
+                for t in res.trace
+            ]
+        out[name] = row
 
-    t0 = time.time()
-    res = bwkm.fit(
-        jax.random.PRNGKey(seed), x, bwkm.BWKMConfig(k=k, max_iters=20),
-        trace_centroids=True,
-    )
-    e = float(metrics.kmeans_error(x, res.centroids))
-    out["BWKM"] = {
-        "error": e, "distances": res.distances, "s": time.time() - t0,
-        "trace": [
-            {
-                "distances": t["distances"],
-                "error": float(metrics.kmeans_error(x, t["centroids"])),
-            }
-            for t in res.trace
-        ],
-    }
+    record("BWKM", lambda key: BWKM(
+        k=k, engine="incore", max_iters=20, trace=True).fit(x, key=key).result_)
     record("FKM", lambda key: baselines.forgy_kmeans(key, x, k))
     record("KM++", lambda key: baselines.kmeanspp_kmeans(key, x, k))
     record("KM++_init", lambda key: baselines.kmeanspp_kmeans(key, x, k, init_only=True))

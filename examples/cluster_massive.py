@@ -1,20 +1,55 @@
-"""End-to-end driver example: the paper's workload (massive-data K-means)
-through the production launcher, with the full baseline comparison and
-clustering-state checkpointing (restartable).
+"""Massive-data walkthrough: the same `repro.BWKM` estimator across every
+regime the engines cover.
+
+1. Cluster a dataset that lives on disk as `.npy` shards — `fit` on the
+   glob auto-selects the out-of-core streaming engine, and `predict`/`score`
+   stream through the chunked kernel, so nothing is ever materialised.
+2. Cluster the same points resident in memory (auto → in-core engine) and
+   compare: same algorithm, same quality, different execution.
+3. Run the full CLI workload (baseline suite + checkpointing) through the
+   production launcher.
 
   PYTHONPATH=src python examples/cluster_massive.py
 """
 
+import os
 import tempfile
 
+import numpy as np
+
+import repro
+from repro.data import gmm_dataset
+from repro.data.chunks import write_npy_shards
 from repro.launch import cluster
 
 
 def main():
-    with tempfile.TemporaryDirectory() as ckpt:
+    with tempfile.TemporaryDirectory() as work:
+        # --- 1. out-of-core: the dataset exists only as shards on disk
+        x = gmm_dataset(seed=0, n=200_000, d=10, modes=12)
+        shard_dir = os.path.join(work, "shards")
+        write_npy_shards(np.asarray(x, np.float32), shard_dir, rows_per_shard=50_000)
+        pattern = os.path.join(shard_dir, "*.npy")
+
+        model = repro.BWKM(k=9, chunk_size=16_384, seed=0).fit(pattern)
+        meta = model.result_.metadata
+        print(f"[massive] engine={model.engine_} stop={model.result_.stop_reason} "
+              f"passes={meta['passes']} points_streamed={meta['points_streamed']}")
+        e_stream = model.score(pattern)  # chunked pass over the shards
+        labels = model.predict(pattern)
+        print(f"[massive] E^D = {e_stream:.4e} over {labels.shape[0]} points, "
+              f"distances = {model.result_.distances:.3e}")
+
+        # --- 2. same data resident in memory: auto → in-core engine
+        resident = repro.BWKM(k=9, seed=0).fit(np.asarray(x))
+        e_core = resident.score(np.asarray(x))
+        print(f"[massive] in-core engine ({resident.engine_}) E^D = {e_core:.4e} "
+              f"-> streaming within {(e_stream - e_core) / e_core * 100:+.3f}%")
+
+        # --- 3. the full CLI workload: baselines + checkpointing
         out = cluster.main([
             "--dataset", "WUY", "--scale", "0.001", "--k", "9",
-            "--compare", "--distributed", "--ckpt-dir", ckpt,
+            "--compare", "--distributed", "--ckpt-dir", os.path.join(work, "ckpt"),
         ])
     best = min(out, key=lambda m: out[m]["error"])
     print(f"\nbest method: {best}; BWKM used "

@@ -26,7 +26,7 @@ def main():
     print(f"[kv_quantize] clustering {kvecs.shape[0]} K-vectors (hd={cfg.hd})")
 
     k = 64  # codebook entries
-    res = bwkm.fit(jax.random.PRNGKey(2), kvecs, bwkm.BWKMConfig(k=k, max_iters=15))
+    res = bwkm.fit_incore(jax.random.PRNGKey(2), kvecs, bwkm.BWKMConfig(k=k, max_iters=15))
     codebook = res.centroids
 
     # quantize via the fused assignment kernel (the lookup path)

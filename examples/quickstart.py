@@ -1,12 +1,19 @@
-"""Quickstart: BWKM vs K-means++ on a synthetic massive-data profile.
+"""Quickstart: the `repro.BWKM` estimator vs K-means++ on a synthetic
+massive-data profile.
+
+One constructor covers every regime — `fit` accepts an in-memory array, a
+`.npy` path, a glob of shards, or a `ChunkSource`, and auto-selects the
+execution engine (docs/adr/0002-estimator-api.md).
 
   PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import baselines, bwkm, metrics
+import repro
+from repro.core import baselines, metrics
 from repro.data import gmm_dataset
 
 
@@ -15,17 +22,22 @@ def main():
     x = jnp.asarray(gmm_dataset(seed=0, n=100_000, d=10, modes=12))
     k = 9
 
-    res = bwkm.fit(jax.random.PRNGKey(0), x, bwkm.BWKMConfig(k=k))
-    e_bwkm = float(metrics.kmeans_error(x, res.centroids))
+    model = repro.BWKM(k=k, seed=0).fit(x)  # auto → in-core engine
+    res = model.result_
+    e_bwkm = model.score(x)  # full-dataset E^D(C), one chunked pass
     print(f"BWKM : E = {e_bwkm:.4e}  distances = {res.distances:.3e}  "
-          f"blocks = {res.n_blocks[-1]}  stop = {res.stop_reason}")
+          f"engine = {model.engine_}  stop = {res.stop_reason}")
 
-    c_pp, d_pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(1), x, k)
-    e_pp = float(metrics.kmeans_error(x, c_pp))
-    print(f"KM++ : E = {e_pp:.4e}  distances = {d_pp:.3e}")
+    labels = model.predict(x)
+    print(f"       predict -> {labels.shape[0]} labels over "
+          f"{len(np.unique(labels))} clusters")
+
+    pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(1), x, k)
+    e_pp = float(metrics.kmeans_error(x, pp.centroids))
+    print(f"KM++ : E = {e_pp:.4e}  distances = {pp.distances:.3e}")
 
     print(f"-> BWKM reaches {(e_bwkm - e_pp) / e_pp * 100:+.2f}% of KM++ error "
-          f"with {d_pp / res.distances:.0f}x fewer distance computations")
+          f"with {pp.distances / res.distances:.0f}x fewer distance computations")
 
 
 if __name__ == "__main__":

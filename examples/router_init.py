@@ -30,7 +30,7 @@ def main():
     h = jnp.take(params["embed"], tokens, axis=0).reshape(-1, cfg.d_model)
     h = h.astype(jnp.float32)
 
-    res = bwkm.fit(
+    res = bwkm.fit_incore(
         jax.random.PRNGKey(2), h, bwkm.BWKMConfig(k=cfg.n_experts, max_iters=10)
     )
     # router logits ∝ h · centroid: centroids as router columns

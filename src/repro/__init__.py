@@ -1,4 +1,50 @@
-"""repro — a multi-pod JAX training/inference framework built around the
-Boundary Weighted K-means algorithm (Capó, Pérez, Lozano 2018)."""
+"""repro — "An efficient K-means clustering algorithm for massive data"
+(Capó, Pérez, Lozano 2018) as a scalable JAX/Pallas system.
 
-__version__ = "0.1.0"
+The public surface is the estimator facade: one :class:`BWKM` over the
+in-core, streaming, and distributed engines, with engine auto-selection by
+data type and size (docs/adr/0002-estimator-api.md)::
+
+    import repro
+    model = repro.BWKM(k=27).fit("shards/part-*.npy")  # auto → streaming
+    labels = model.predict("shards/part-*.npy")        # chunked, out-of-core
+
+Engine- and init-strategy registries are open: ``register_engine`` /
+``register_init`` plug new execution or seeding strategies into the same
+facade. Changing ``__all__`` below is a public-API change and is pinned by
+``tests/test_api_surface.py``.
+"""
+
+from repro.api import (
+    BWKM,
+    Engine,
+    FitResult,
+    InitStrategy,
+    get_engine,
+    list_engines,
+    list_inits,
+    register_engine,
+    register_init,
+    select_engine,
+)
+from repro.core.bwkm import BWKMConfig
+from repro.data.chunks import ChunkSource, as_chunk_source
+
+__version__ = "0.2.0"
+
+__all__ = [
+    "BWKM",
+    "BWKMConfig",
+    "ChunkSource",
+    "Engine",
+    "FitResult",
+    "InitStrategy",
+    "as_chunk_source",
+    "get_engine",
+    "list_engines",
+    "list_inits",
+    "register_engine",
+    "register_init",
+    "select_engine",
+    "__version__",
+]

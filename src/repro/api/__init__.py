@@ -1,0 +1,38 @@
+"""Unified estimator front-end: one ``repro.BWKM`` over every engine.
+
+The facade (DESIGN.md §9, docs/adr/0002-estimator-api.md) comprises:
+
+  * :class:`BWKM`          — the estimator (``fit/predict/score/transform``);
+  * ``engines``            — engine registry + ``engine="auto"`` selection;
+  * ``inits``              — name-based initialisation-strategy registry;
+  * ``adapters``           — array / path / glob / ChunkSource coercion;
+  * :class:`FitResult`     — the one result schema every engine reports.
+"""
+
+from repro.api.engines import (
+    Engine,
+    get_engine,
+    list_engines,
+    register_engine,
+    select_engine,
+)
+from repro.api.estimator import BWKM, DEFAULT_CHUNK_SIZE
+from repro.api.inits import InitStrategy, list_inits, register_init, resolve_init
+from repro.api.result import FitResult, TupleFitResult, from_driver_result
+
+__all__ = [
+    "BWKM",
+    "DEFAULT_CHUNK_SIZE",
+    "Engine",
+    "FitResult",
+    "InitStrategy",
+    "TupleFitResult",
+    "from_driver_result",
+    "get_engine",
+    "list_engines",
+    "list_inits",
+    "register_engine",
+    "register_init",
+    "resolve_init",
+    "select_engine",
+]

@@ -1,0 +1,65 @@
+"""Data-adapter layer: coerce anything callers hold into engine-native input.
+
+The facade accepts the union of what the three engines consume, and this
+module normalises it (DESIGN.md §9):
+
+  * ``jax.Array`` / ``np.ndarray`` / nested lists   — in-memory ``[n, d]``
+  * ``"points.npy"`` path                            — memory-mapped file
+  * ``"shards/part-*.npy"`` glob / directory / list  — sharded file set
+  * any :class:`repro.data.ChunkSource`              — already chunked
+
+``to_chunk_source`` feeds the streaming engine (and out-of-core
+``predict``/``score``/``transform``); ``to_array`` materialises for the
+resident engines. Everything funnels through ``repro.data.chunks`` — the
+facade adds only the path/glob/directory resolution on top.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.chunks import ChunkSource, as_chunk_source, is_path_list, resolve_paths
+
+__all__ = ["is_out_of_core", "to_chunk_source", "to_array", "resolve_paths"]
+
+
+def is_out_of_core(data: Any) -> bool:
+    """True when ``data`` names storage rather than holding points in memory
+    (paths, globs, shard lists, chunk sources)."""
+    return (
+        isinstance(data, (ChunkSource, str, os.PathLike)) or is_path_list(data)
+    )
+
+
+def to_chunk_source(data: Any, chunk_size: int) -> ChunkSource:
+    """Coerce any accepted input into a :class:`ChunkSource`.
+
+    One dispatch for every input kind — ``repro.as_chunk_source`` handles
+    paths/globs/directories/shard lists/sources, and in-memory data becomes
+    a zero-copy ``ArrayChunkSource`` view, so the chunked prediction path
+    works uniformly.
+    """
+    if not is_out_of_core(data):
+        data = np.asarray(data, np.float32)
+    return as_chunk_source(data, chunk_size)
+
+
+def to_array(data: Any) -> jnp.ndarray:
+    """Materialise any accepted input as a resident ``float32 [n, d]`` array.
+
+    Out-of-core inputs are loaded whole — only correct when the caller
+    explicitly picked a resident engine and the data fits in memory (the
+    auto-selector never routes out-of-core data here).
+    """
+    if isinstance(data, ChunkSource):
+        return jnp.asarray(np.concatenate(list(data.chunks())), jnp.float32)
+    if is_out_of_core(data):
+        # one round-trip through the chunk layer so globs/shard lists/memmaps
+        # all share the same loading code
+        src = to_chunk_source(data, chunk_size=1 << 16)
+        return jnp.asarray(np.concatenate(list(src.chunks())), jnp.float32)
+    return jnp.asarray(data, jnp.float32)

@@ -1,0 +1,165 @@
+"""Engine registry + auto-selection for the estimator facade (DESIGN.md §9).
+
+One BWKM algorithm, three execution engines:
+
+  * ``incore``      — ``core.bwkm.fit_incore`` over a resident array.
+  * ``streaming``   — ``streaming.fit_streaming`` over a ChunkSource;
+                      O(chunk + M·d) device memory, multi-pass.
+  * ``distributed`` — ``distributed.fit_distributed`` over mesh-sharded
+                      points (degenerates to single-device with no mesh).
+
+Selection rules for ``engine="auto"`` (docs/adr/0002-estimator-api.md):
+
+  1. an explicit engine name always wins;
+  2. out-of-core data (path / glob / directory / shard list / ChunkSource)
+     → ``streaming`` — nothing else can consume it without materialising;
+  3. in-memory data with an active mesh (``sharding.use_mesh``)
+     → ``distributed`` — the points get sharded where they stand;
+  4. in-memory data larger than ``incore_limit_bytes``
+     → ``streaming`` (chunked from host RAM; bounds device memory);
+  5. otherwise → ``incore``.
+
+Every engine's ``fit`` has the same signature and returns the unified
+:class:`~repro.api.result.FitResult`; engine-specific options travel in the
+shared keyword set (unused ones are ignored, so the facade stays generic).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable
+
+import numpy as np
+
+from repro.api import adapters
+from repro.api.result import FitResult, from_driver_result
+
+__all__ = [
+    "Engine",
+    "register_engine",
+    "get_engine",
+    "list_engines",
+    "select_engine",
+    "INCORE_LIMIT_BYTES",
+]
+
+#: auto-selection rule 4: resident arrays above this are streamed in chunks
+INCORE_LIMIT_BYTES = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    name: str
+    description: str
+    # (key, data, config, *, chunk_size, trace_centroids, checkpoint_dir)
+    fit: Callable[..., FitResult]
+
+
+_REGISTRY: dict[str, Engine] = {}
+
+
+def register_engine(engine: Engine) -> Engine:
+    _REGISTRY[engine.name] = engine
+    return engine
+
+
+def get_engine(name: str) -> Engine:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown engine {name!r}; known: {sorted(_REGISTRY)} (or 'auto')"
+        )
+    return _REGISTRY[name]
+
+
+def list_engines() -> dict[str, str]:
+    """``{name: description}`` for every registered engine."""
+    return {e.name: e.description for e in _REGISTRY.values()}
+
+
+def select_engine(
+    data: Any,
+    requested: str = "auto",
+    *,
+    incore_limit_bytes: int = INCORE_LIMIT_BYTES,
+) -> str:
+    """Apply the selection rules above; returns an engine name."""
+    if requested != "auto":
+        return get_engine(requested).name
+    if adapters.is_out_of_core(data):
+        return "streaming"
+    from repro.distributed import sharding as sh
+
+    if sh.current_mesh() is not None:
+        return "distributed"
+    nbytes = getattr(data, "nbytes", None)
+    if nbytes is None:
+        nbytes = np.asarray(data).nbytes
+    if nbytes > incore_limit_bytes:
+        return "streaming"
+    return "incore"
+
+
+# ----------------------------------------------------------- engine wrappers
+def _warn_dropped(engine: str, **options: Any) -> None:
+    """An explicitly-set option an engine cannot honour must not vanish
+    silently (``chunk_size`` is facade plumbing with a default, so engines
+    that don't chunk simply ignore it without warning)."""
+    for name, value in options.items():
+        if value:
+            warnings.warn(
+                f"the {engine!r} engine does not support {name}; the option "
+                "is ignored",
+                UserWarning,
+                stacklevel=4,
+            )
+
+
+def _fit_incore(key, data, config, *, chunk_size, trace_centroids, checkpoint_dir):
+    del chunk_size
+    _warn_dropped("incore", checkpoint_dir=checkpoint_dir,
+                  init_sample_size=config.init_sample_size)
+    from repro.core import bwkm as core_bwkm
+
+    x = adapters.to_array(data)
+    res = core_bwkm.fit_incore(key, x, config, trace_centroids=trace_centroids)
+    return from_driver_result(res, "incore")
+
+
+def _fit_streaming(key, data, config, *, chunk_size, trace_centroids, checkpoint_dir):
+    _warn_dropped("streaming", checkpoint_dir=checkpoint_dir)
+    from repro.streaming import stream_bwkm
+
+    source = adapters.to_chunk_source(data, chunk_size)
+    res = stream_bwkm.fit_streaming(key, source, config, trace_centroids=trace_centroids)
+    return from_driver_result(res, "streaming")
+
+
+def _fit_distributed(key, data, config, *, chunk_size, trace_centroids, checkpoint_dir):
+    del chunk_size
+    _warn_dropped("distributed", trace_centroids=trace_centroids,  # keeps no trace
+                  init_sample_size=config.init_sample_size)
+    from repro.distributed import dist_bwkm
+
+    x = dist_bwkm.shard_points(adapters.to_array(data))
+    res = dist_bwkm.fit_distributed(key, x, config, checkpoint_dir=checkpoint_dir)
+    return from_driver_result(res, "distributed")
+
+
+register_engine(Engine(
+    name="incore",
+    description="single-host Algorithm 5 over a resident array (core.bwkm)",
+    fit=_fit_incore,
+))
+register_engine(Engine(
+    name="streaming",
+    description="out-of-core Algorithm 5 over fixed-size chunks; device "
+    "memory stays O(chunk + M·d) (streaming.stream_bwkm)",
+    fit=_fit_streaming,
+))
+register_engine(Engine(
+    name="distributed",
+    description="mesh-sharded Algorithm 5; points stay put, block statistics "
+    "psum-combine (distributed.dist_bwkm)",
+    fit=_fit_distributed,
+))

@@ -1,0 +1,127 @@
+"""Name-based registry of initialisation strategies (DESIGN.md §9).
+
+The drivers used to hard-code their seeding: every BWKM driver called
+``weighted_kmeanspp`` over the partition representatives, the baselines each
+picked their own sampler, and the streaming driver's first-pass sample was a
+fixed reservoir. An :class:`InitStrategy` bundles the two places a driver
+needs randomness before Lloyd ever runs:
+
+  * ``seed_centroids(key, points, weights, k)`` — pick the K initial
+    centroids from a (weighted) point set. In BWKM the point set is the
+    partition's representatives; for the Lloyd baselines it is the dataset.
+  * ``sample(source, size, seed)`` — draw the first-pass uniform sample the
+    out-of-core engine builds its initial partition from (Algorithms 2–4
+    run on this resident sample; see streaming/init.py).
+
+``BWKMConfig.init`` selects a strategy by name, so the facade needs no
+engine-specific seeding kwargs. Strategies registered here are visible to
+every engine; ``register_init`` is the extension point.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+
+from repro.core import kmeanspp
+from repro.data.chunks import reservoir_sample
+
+__all__ = ["InitStrategy", "register_init", "resolve_init", "list_inits"]
+
+
+@dataclasses.dataclass(frozen=True)
+class InitStrategy:
+    name: str
+    description: str
+    seed_centroids: Callable  # (key, points [n,d], weights [n], k) -> [k,d]
+    sample: Callable = reservoir_sample  # (ChunkSource, size, seed) -> ndarray
+    supports_weights: bool = True
+
+
+def _kmeanspp_seed(key, x, w, k):
+    return kmeanspp.weighted_kmeanspp(key, x, w, k)
+
+
+def _forgy_seed(key, x, w, k):
+    return kmeanspp.forgy(key, x, k, w=w)
+
+
+def _afkmc2_seed(key, x, w, k):
+    # AFK-MC² is defined over an unweighted point set; multiplicities are
+    # ignored (acceptable on representatives — documented in the registry).
+    # Zero-weight rows are dropped first: partition.representatives() parks
+    # inactive rows at the origin with w == 0, and seeding phantom points
+    # would plant centroids at the origin.
+    return kmeanspp.afkmc2(key, x[w > 0], k)
+
+
+_REGISTRY: dict[str, InitStrategy] = {}
+_ALIASES: dict[str, str] = {}
+
+
+def register_init(strategy: InitStrategy, *aliases: str) -> InitStrategy:
+    """Make ``strategy`` resolvable by name (and ``aliases``) in every engine."""
+    _REGISTRY[strategy.name] = strategy
+    for a in aliases:
+        _ALIASES[a] = strategy.name
+    return strategy
+
+
+def resolve_init(name: str | InitStrategy) -> InitStrategy:
+    """Look up a strategy by name/alias; passes through strategy objects."""
+    if isinstance(name, InitStrategy):
+        return name
+    key = _ALIASES.get(name, name)
+    if key not in _REGISTRY:
+        known = sorted(set(_REGISTRY) | set(_ALIASES))
+        raise ValueError(f"unknown init strategy {name!r}; known: {known}")
+    return _REGISTRY[key]
+
+
+def list_inits() -> dict[str, str]:
+    """``{name: description}`` for every registered strategy."""
+    return {s.name: s.description for s in _REGISTRY.values()}
+
+
+register_init(
+    InitStrategy(
+        name="kmeans++",
+        description="weighted K-means++ over the (weighted) point set "
+        "(Arthur & Vassilvitskii 2007; the paper's Algorithm 5 Step 1)",
+        seed_centroids=_kmeanspp_seed,
+    ),
+    "kmeanspp",
+    "km++",
+)
+
+register_init(
+    InitStrategy(
+        name="forgy",
+        description="K rows drawn at random (weight-proportional when "
+        "weights are present; the paper's FKM seeding)",
+        seed_centroids=_forgy_seed,
+    ),
+)
+
+register_init(
+    InitStrategy(
+        name="afkmc2",
+        description="AFK-MC² MCMC approximation of K-means++ (Bachem et al. "
+        "2016); weights on representatives are ignored",
+        seed_centroids=_afkmc2_seed,
+        supports_weights=False,
+    ),
+    "kmc2",
+)
+
+register_init(
+    InitStrategy(
+        name="reservoir",
+        description="streaming-native name: single-pass reservoir sample for "
+        "the initial partition + weighted K-means++ seeding (identical to "
+        "'kmeans++' in-core, where no sampling pass exists)",
+        seed_centroids=_kmeanspp_seed,
+    ),
+)

@@ -1,13 +1,14 @@
 """BWKM core: the paper's contribution as composable JAX modules."""
 
-from repro.core.bwkm import BWKMConfig, BWKMResult, fit
+from repro.core.bwkm import BWKMConfig, BWKMResult, fit, fit_incore
 from repro.core.lloyd import LloydResult
 from repro.core.partition import Partition, create_partition, split_blocks
 
 __all__ = [
     "BWKMConfig",
     "BWKMResult",
-    "fit",
+    "fit",  # deprecated alias; fit_incore is the canonical entry point
+    "fit_incore",
     "LloydResult",
     "Partition",
     "create_partition",

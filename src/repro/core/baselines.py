@@ -8,8 +8,12 @@
   over a 2^{i·d}-cell grid sequence (cells realised sparsely by hashing the
   occupied integer coordinates — the dense grid is never materialised).
 
-Every routine returns ``(centroids, distance_computations)`` so the
-trade-off benchmark can reproduce the paper's cost axis.
+Every routine returns the unified :class:`repro.api.result.FitResult`
+schema (``centroids``, ``distances``, ``iterations``, ``stop_reason``,
+``engine="baseline:<name>"``), so the trade-off benchmark consumes one
+schema for every method. The old ``(centroids, distance_computations)``
+tuple unpacking still works through a deprecation shim
+(:class:`~repro.api.result.TupleFitResult`).
 """
 
 from __future__ import annotations
@@ -18,34 +22,53 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.result import TupleFitResult
 from repro.core import kmeanspp
 from repro.core.lloyd import lloyd, weighted_lloyd
 
 __all__ = ["forgy_kmeans", "kmeanspp_kmeans", "kmc2_kmeans", "minibatch_kmeans", "grid_rpkm"]
 
 
-def _run_lloyd(x, c0, max_iters, epsilon, extra_distances):
+def _result(name, centroids, distances, *, iterations=0, stop_reason="init-only",
+            **metadata):
+    return TupleFitResult(
+        centroids=centroids,
+        distances=float(distances),
+        iterations=int(iterations),
+        stop_reason=stop_reason,
+        engine=f"baseline:{name}",
+        metadata=metadata,
+    )
+
+
+def _run_lloyd(name, x, c0, max_iters, epsilon, extra_distances):
     res = lloyd(x, c0, max_iters=max_iters, epsilon=epsilon)
-    return res.centroids, float(res.distances) + extra_distances
+    iters = int(res.iters)
+    return _result(
+        name, res.centroids, float(res.distances) + extra_distances,
+        iterations=iters,
+        stop_reason="converged" if iters < max_iters else "max-iters",
+        error=float(res.error),
+    )
 
 
 def forgy_kmeans(key, x, k, *, max_iters=100, epsilon=1e-4):
     c0 = kmeanspp.forgy(key, x, k)
-    return _run_lloyd(x, c0, max_iters, epsilon, 0.0)
+    return _run_lloyd("forgy", x, c0, max_iters, epsilon, 0.0)
 
 
 def kmeanspp_kmeans(key, x, k, *, max_iters=100, epsilon=1e-4, init_only=False):
     c0 = kmeanspp.kmeanspp(key, x, k)
     seed_cost = float(x.shape[0] * k)  # K scans of the dataset (Section 1.2.1)
     if init_only:
-        return c0, seed_cost
-    return _run_lloyd(x, c0, max_iters, epsilon, seed_cost)
+        return _result("kmeans++_init", c0, seed_cost)
+    return _run_lloyd("kmeans++", x, c0, max_iters, epsilon, seed_cost)
 
 
 def kmc2_kmeans(key, x, k, *, chain_length=200, max_iters=100, epsilon=1e-4):
     c0 = kmeanspp.afkmc2(key, x, k, chain_length=chain_length)
     seed_cost = float(x.shape[0] + (k - 1) * chain_length * k)  # q(·) + chains
-    return _run_lloyd(x, c0, max_iters, epsilon, seed_cost)
+    return _run_lloyd("kmc2", x, c0, max_iters, epsilon, seed_cost)
 
 
 def minibatch_kmeans(key, x, k, *, batch=100, iters=500):
@@ -75,7 +98,10 @@ def minibatch_kmeans(key, x, k, *, batch=100, iters=500):
 
     subs = jax.random.split(key, iters)
     (c, _), _ = jax.lax.scan(body, (c, counts), subs)
-    return c, float(batch * k * iters)
+    return _result(
+        f"minibatch{batch}", c, float(batch * k * iters),
+        iterations=iters, stop_reason="iteration-budget", batch=batch,
+    )
 
 
 def grid_rpkm(key, x, k, *, max_level=6, max_cells=200_000, max_iters=100, epsilon=1e-4):
@@ -89,12 +115,15 @@ def grid_rpkm(key, x, k, *, max_level=6, max_cells=200_000, max_iters=100, epsil
     key, k0 = jax.random.split(key)
     c = kmeanspp.forgy(k0, x, k)
     distances = 0.0
+    stop_reason = "max-level"
+    levels = 0
     for level in range(1, max_level + 1):
         bins = 1 << level
         q = np.minimum(((xh - lo) / span * bins).astype(np.int64), bins - 1)
         _, inv, cnt = np.unique(q, axis=0, return_inverse=True, return_counts=True)
         m = cnt.shape[0]
         if m > min(max_cells, n // 2) and level > 1:
+            stop_reason = "grid-exhausted"
             break
         sums = np.zeros((m, d), np.float64)
         np.add.at(sums, inv, xh)
@@ -103,4 +132,7 @@ def grid_rpkm(key, x, k, *, max_level=6, max_cells=200_000, max_iters=100, epsil
         res = weighted_lloyd(reps, w, c, max_iters=max_iters, epsilon=epsilon)
         c = res.centroids
         distances += float(res.distances)
-    return c, distances
+        levels = level
+    return _result(
+        "grid-rpkm", c, distances, iterations=levels, stop_reason=stop_reason,
+    )

@@ -16,7 +16,7 @@ Stopping criteria implemented (paper Section 2.4.2):
 from __future__ import annotations
 
 import dataclasses
-import math
+import warnings
 from typing import Any
 
 import jax
@@ -24,10 +24,28 @@ import jax.numpy as jnp
 
 from repro.core import bounds, init_partition, lloyd, misassignment as mis
 from repro.core import partition as part_mod
-from repro.core.kmeanspp import weighted_kmeanspp
 from repro.core.partition import Partition
 
-__all__ = ["BWKMConfig", "BWKMResult", "fit"]
+__all__ = ["BWKMConfig", "BWKMResult", "fit", "fit_incore", "seed_centroids"]
+
+
+def seed_centroids(
+    name: str, key: jax.Array, reps: jax.Array, w: jax.Array, k: int
+) -> jax.Array:
+    """Seed K centroids from a weighted point set via the named strategy in
+    the ``repro.api.inits`` registry (imported lazily: the api layer imports
+    the core drivers, not vice versa)."""
+    from repro.api.inits import resolve_init
+
+    strategy = resolve_init(name)
+    if not strategy.supports_weights:
+        warnings.warn(
+            f"init strategy {strategy.name!r} ignores point weights; BWKM "
+            "representatives are seeded as if unweighted",
+            UserWarning,
+            stacklevel=2,
+        )
+    return strategy.seed_centroids(key, reps, w, k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +65,9 @@ class BWKMConfig:
     distance_budget: float | None = None
     displacement_epsilon: float | None = None  # Thm A.4's ε (on E^D scale)
     gap_bound_threshold: float | None = None  # Thm 2 stopping threshold
+    init: str = "kmeans++"  # seeding strategy name (repro.api.inits registry)
+    init_sample_size: int | None = None  # streaming first-pass sample rows;
+    # None = engine default (in-core/distributed engines ignore it)
 
     def resolve(self, n: int, d: int) -> dict[str, Any]:
         p = init_partition.default_params(n, self.k, d)
@@ -73,14 +94,18 @@ class BWKMResult:
     trace: list[dict]  # per-iteration snapshots for the trade-off benchmark
 
 
-def fit(
+def fit_incore(
     key: jax.Array,
     x: jax.Array,
     config: BWKMConfig,
     *,
     trace_centroids: bool = False,
 ) -> BWKMResult:
-    """Run BWKM on ``x [n, d]``. Returns centroids and the audit trail."""
+    """Run BWKM on ``x [n, d]``. Returns centroids and the audit trail.
+
+    This is the in-core engine behind the ``repro.BWKM`` facade; call the
+    facade unless you need driver-native access to the ``Partition``.
+    """
     n, d = x.shape
     p = config.resolve(n, d)
     k = config.k
@@ -95,7 +120,7 @@ def fit(
     distances = float(p["r"] * p["s"] * k + p["m"] * k)
 
     reps, w = part_mod.representatives(part)
-    c = weighted_kmeanspp(k_pp, reps, w, k)
+    c = seed_centroids(config.init, k_pp, reps, w, k)
     distances += float(int(part.n_blocks)) * k  # seeding distance cost
 
     weighted_errors: list[float] = []
@@ -179,3 +204,20 @@ def fit(
         stop_reason=stop_reason,
         trace=trace,
     )
+
+
+def fit(
+    key: jax.Array,
+    x: jax.Array,
+    config: BWKMConfig,
+    *,
+    trace_centroids: bool = False,
+) -> BWKMResult:
+    """Deprecated alias of :func:`fit_incore` — use ``repro.BWKM`` instead."""
+    warnings.warn(
+        "core.bwkm.fit is deprecated; use repro.BWKM(...).fit(x) "
+        "(engine='incore') or core.bwkm.fit_incore",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return fit_incore(key, x, config, trace_centroids=trace_centroids)

@@ -23,6 +23,7 @@ one is yielded — double buffering that overlaps H2D copy with compute.
 
 from __future__ import annotations
 
+import glob as _glob
 import os
 from typing import Iterator, Protocol, Sequence, runtime_checkable
 
@@ -36,6 +37,7 @@ __all__ = [
     "as_chunk_source",
     "padded_device_chunks",
     "reservoir_sample",
+    "resolve_paths",
     "write_npy_shards",
 ]
 
@@ -186,13 +188,55 @@ class ShardedFileSource:
             yield pending[0] if len(pending) == 1 else np.concatenate(pending)
 
 
+_GLOB_CHARS = ("*", "?", "[")
+
+
+def is_path_list(x) -> bool:
+    """True for a non-empty list/tuple made entirely of path-likes (a shard
+    list, as opposed to nested numeric data)."""
+    return (
+        isinstance(x, (list, tuple))
+        and bool(x)
+        and all(isinstance(p, (str, os.PathLike)) for p in x)
+    )
+
+
+def resolve_paths(path: str | os.PathLike) -> list[str] | str:
+    """Resolve a path-like: a glob pattern or directory becomes the sorted
+    shard list, a plain file stays a single path.
+
+    An exactly-existing path always wins over its interpretation as a glob
+    pattern, so a literal filename containing glob characters
+    (``data[1].npy``) resolves to itself — never to whatever the pattern
+    happens to match.
+    """
+    s = os.fspath(path)
+    if os.path.isdir(s):
+        paths = sorted(_glob.glob(os.path.join(s, "*.npy")))
+        if not paths:
+            raise FileNotFoundError(f"directory {s!r} contains no .npy shards")
+        return paths
+    if os.path.exists(s):
+        return s
+    if any(ch in s for ch in _GLOB_CHARS):
+        paths = sorted(_glob.glob(s))
+        if paths:
+            return paths
+        raise FileNotFoundError(f"glob {s!r} matched no files")
+    return s
+
+
 def as_chunk_source(x, chunk_size: int) -> ChunkSource:
-    """Coerce an array / path / list-of-paths / existing source to a source."""
+    """Coerce an array / path / glob / directory / list-of-paths / existing
+    source to a source."""
     if isinstance(x, ChunkSource):
         return x
     if isinstance(x, (str, os.PathLike)):
-        return MemmapChunkSource(x, chunk_size)
-    if isinstance(x, (list, tuple)):
+        resolved = resolve_paths(x)
+        if isinstance(resolved, list):
+            return ShardedFileSource(resolved, chunk_size)
+        return MemmapChunkSource(resolved, chunk_size)
+    if is_path_list(x):
         return ShardedFileSource(x, chunk_size)
     return ArrayChunkSource(np.asarray(x), chunk_size)
 

@@ -24,9 +24,8 @@ mesh shape → elastic restart).
 
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +34,12 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import bwkm as core_bwkm
 from repro.core import misassignment as mis
 from repro.core import partition as part_mod
-from repro.core.kmeanspp import weighted_kmeanspp
 from repro.core.lloyd import weighted_lloyd
 from repro.core.partition import Partition
 from repro.distributed import sharding as sh
 
 __all__ = ["shard_points", "dist_recompute_stats", "dist_route_points",
-           "dist_assign_step", "fit"]
+           "dist_assign_step", "fit", "fit_distributed"]
 
 _BIG = 3.0e38
 
@@ -176,7 +174,7 @@ def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
 
 
 # ------------------------------------------------------------------ driver
-def fit(
+def fit_distributed(
     key: jax.Array,
     x: jax.Array,
     config: core_bwkm.BWKMConfig,
@@ -185,9 +183,11 @@ def fit(
 ) -> core_bwkm.BWKMResult:
     """Distributed Algorithm 5. ``x`` should be placed with shard_points.
 
-    Matches core_bwkm.fit semantics; representatives/centroids are computed
-    replicated from psum'd statistics, so the trajectory is the single-host
-    one up to psum summation order.
+    This is the distributed engine behind the ``repro.BWKM`` facade (which
+    also handles the ``shard_points`` placement). Matches ``fit_incore``
+    semantics; representatives/centroids are computed replicated from psum'd
+    statistics, so the trajectory is the single-host one up to psum
+    summation order.
     """
     n, d = x.shape
     p = config.resolve(n, d)
@@ -214,7 +214,7 @@ def fit(
     part = dist_recompute_stats(sample_part, x, bid)
 
     reps, w = part_mod.representatives(part)
-    c = weighted_kmeanspp(k_pp, reps, w, k)
+    c = core_bwkm.seed_centroids(config.init, k_pp, reps, w, k)
     distances = float(p["r"] * p["s"] * k + p["m"] * k + int(part.n_blocks) * k)
 
     weighted_errors: list[float] = []
@@ -273,6 +273,23 @@ def fit(
         stop_reason=stop_reason,
         trace=[],
     )
+
+
+def fit(
+    key: jax.Array,
+    x: jax.Array,
+    config: core_bwkm.BWKMConfig,
+    *,
+    checkpoint_dir: str | None = None,
+) -> core_bwkm.BWKMResult:
+    """Deprecated alias of :func:`fit_distributed` — use ``repro.BWKM``."""
+    warnings.warn(
+        "distributed.dist_bwkm.fit is deprecated; use repro.BWKM(...) "
+        "(engine='distributed') or fit_distributed",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return fit_distributed(key, x, config, checkpoint_dir=checkpoint_dir)
 
 
 def _dist_split(part: Partition, x, bid, chosen):

@@ -20,6 +20,7 @@ __all__ = [
     "assign_top2",
     "assign_top2_chunk",
     "cluster_sums",
+    "pairwise_sqdist_chunk",
     "pallas_available",
     "set_default_impl",
 ]
@@ -76,13 +77,42 @@ def assign_top2_chunk(
     result; they cost ``(chunk_size − n)·K`` wasted distance lanes on the
     tail chunk only.
     """
+    n, x = _pad_to_chunk(x, chunk_size)
+    assign, d1, d2 = assign_top2(x, c, impl=impl)
+    return assign[:n], d1[:n], d2[:n]
+
+
+def _pad_to_chunk(x: jax.Array, chunk_size: int) -> tuple[int, jax.Array]:
+    """The shared chunk-padding contract: zero-pad a ragged ``[n <= chunk_size,
+    d]`` chunk to the static shape; callers slice the first ``n`` result rows
+    off. One place to change if a Pallas variant needs different alignment."""
     n = x.shape[0]
     if n > chunk_size:
         raise ValueError(f"chunk of {n} rows exceeds chunk_size={chunk_size}")
     if n < chunk_size:
         x = jnp.pad(x, ((0, chunk_size - n), (0, 0)))
-    assign, d1, d2 = assign_top2(x, c, impl=impl)
-    return assign[:n], d1[:n], d2[:n]
+    return n, x
+
+
+def pairwise_sqdist_chunk(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    chunk_size: int,
+    impl: str | None = None,
+) -> jax.Array:
+    """Chunk-shaped full ``[n, K]`` squared-distance matrix (the facade's
+    ``transform``). Same padding contract as :func:`assign_top2_chunk`: a
+    ragged tail chunk is padded to the static shape so one compiled program
+    serves the whole out-of-core pass, and padding rows are sliced off.
+
+    Currently always the jnp oracle (``ref.pairwise_sqdist`` is already one
+    MXU-friendly matmul); ``impl`` is accepted for parity with the other
+    entry points so a Pallas variant can slot in without caller changes.
+    """
+    del impl
+    n, x = _pad_to_chunk(x, chunk_size)
+    return ref.pairwise_sqdist(x, c)[:n]
 
 
 def cluster_sums(

@@ -46,9 +46,9 @@ def main(argv: list[str] | None = None) -> dict:
         mesh = make_smoke_mesh()
         with sh.use_mesh(mesh):
             xs = dist_bwkm.shard_points(x)
-            res = dist_bwkm.fit(key, xs, cfg, checkpoint_dir=args.ckpt_dir)
+            res = dist_bwkm.fit_distributed(key, xs, cfg, checkpoint_dir=args.ckpt_dir)
     else:
-        res = bwkm.fit(key, x, cfg)
+        res = bwkm.fit_incore(key, x, cfg)
     e_bwkm = float(metrics.kmeans_error(x, res.centroids))
     out = {
         "bwkm": {
@@ -72,10 +72,10 @@ def main(argv: list[str] | None = None) -> dict:
             "grid-rpkm": lambda k_: baselines.grid_rpkm(k_, x, args.k),
         }
         for i, (name, fn) in enumerate(runs.items()):
-            c, d = fn(jax.random.PRNGKey(args.seed + 100 + i))
-            e = float(metrics.kmeans_error(x, c))
-            out[name] = {"error": e, "distances": d}
-            print(f"[cluster] {name:10s} E={e:.4e} distances={d:.3e}")
+            r = fn(jax.random.PRNGKey(args.seed + 100 + i))  # unified FitResult
+            e = float(metrics.kmeans_error(x, r.centroids))
+            out[name] = {"error": e, "distances": r.distances}
+            print(f"[cluster] {name:10s} E={e:.4e} distances={r.distances:.3e}")
         errs = {k: v["error"] for k, v in out.items()}
         rel = metrics.relative_errors(errs)
         for k in out:

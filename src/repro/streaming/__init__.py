@@ -12,13 +12,15 @@ from repro.streaming.init import streaming_initial_partition
 from repro.streaming.stream_bwkm import (
     StreamBWKMResult,
     StreamStats,
-    fit,
+    fit,  # deprecated alias; fit_streaming is the canonical entry point
+    fit_streaming,
     streaming_error,
     streaming_lloyd_step,
 )
 
 __all__ = [
     "fit",
+    "fit_streaming",
     "streaming_error",
     "streaming_lloyd_step",
     "streaming_initial_partition",

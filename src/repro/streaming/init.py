@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import init_partition
 from repro.core.partition import Partition
-from repro.data.chunks import ChunkSource, reservoir_sample
+from repro.data.chunks import ChunkSource
 
 __all__ = ["streaming_initial_partition", "default_init_sample_size"]
 
@@ -41,17 +41,24 @@ def streaming_initial_partition(
     r: int,
     capacity: int,
     sample_size: int,
+    init: str = "kmeans++",
 ) -> Partition:
     """Algorithm 2 over a one-pass uniform sample of ``source``.
+
+    ``init`` names the strategy in the ``repro.api.inits`` registry whose
+    ``sample`` hook draws the first-pass sample (the default strategies all
+    use the vectorised reservoir).
 
     The returned partition's boxes/active rows describe the spatial
     partition; its statistics and ``block_id`` reflect only the sample. The
     caller must re-route the full stream through the boxes and replace the
     statistics (``stream_bwkm._routing_pass``) before using them.
     """
+    from repro.api.inits import resolve_init
+
     key, k_seed = jax.random.split(key)
     seed = int(jax.random.randint(k_seed, (), 0, 2**31 - 1))
-    sample = reservoir_sample(source, sample_size, seed)
+    sample = resolve_init(init).sample(source, sample_size, seed)
     return init_partition.build_initial_partition(
         key,
         jnp.asarray(sample),

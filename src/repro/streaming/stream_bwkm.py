@@ -29,6 +29,7 @@ per-chunk assignment work dispatches through ``kernels.ops`` — the Pallas
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -37,14 +38,19 @@ import numpy as np
 
 from repro.core import bounds, bwkm as core_bwkm, misassignment as mis
 from repro.core import partition as part_mod
-from repro.core.kmeanspp import weighted_kmeanspp
 from repro.core.lloyd import weighted_lloyd
 from repro.core.partition import BlockStats, Partition
 from repro.data.chunks import ChunkSource, padded_device_chunks
 from repro.kernels import ops
 from repro.streaming import init as stream_init
 
-__all__ = ["StreamStats", "fit", "streaming_error", "streaming_lloyd_step"]
+__all__ = [
+    "StreamStats",
+    "fit",
+    "fit_streaming",
+    "streaming_error",
+    "streaming_lloyd_step",
+]
 
 _BIG = 3.0e38
 
@@ -185,16 +191,20 @@ class StreamBWKMResult(core_bwkm.BWKMResult):
     stream: StreamStats | None = None
 
 
-def fit(
+def fit_streaming(
     key: jax.Array,
     source: ChunkSource,
     config: core_bwkm.BWKMConfig,
     *,
-    init_sample_size: int | None = None,
     trace_centroids: bool = False,
 ) -> StreamBWKMResult:
-    """Algorithm 5 over a chunked stream. Mirrors ``core.bwkm.fit`` step for
-    step; only the dataset passes differ (see module docstring).
+    """Algorithm 5 over a chunked stream. Mirrors ``core.bwkm.fit_incore``
+    step for step; only the dataset passes differ (see module docstring).
+
+    This is the streaming engine behind the ``repro.BWKM`` facade. All
+    knobs — including the first-pass sample size (``init_sample_size``) and
+    the seeding strategy (``init``) — live on :class:`BWKMConfig`, so the
+    facade needs no engine-specific kwargs.
 
     The returned ``partition.block_id`` is empty — full-length memberships
     are internal host state. ``result.stream`` records pass counts.
@@ -205,20 +215,20 @@ def fit(
     stats = StreamStats(n_chunks=source.n_chunks, chunk_size=source.chunk_size)
 
     key, k_init, k_pp = jax.random.split(key, 3)
-    s_init = init_sample_size or stream_init.default_init_sample_size(n, p)
+    s_init = config.init_sample_size or stream_init.default_init_sample_size(n, p)
     part = stream_init.streaming_initial_partition(
         k_init, source, k,
         m=p["m"], m_prime=p["m_prime"], s=p["s"], r=p["r"],
-        capacity=p["capacity"], sample_size=s_init,
+        capacity=p["capacity"], sample_size=s_init, init=config.init,
     )
     stats.passes += 1  # the reservoir-sample pass
     stats.points_streamed += n
     part, bids = _routing_pass(source, part, stats)
-    # Init cost: same units core.bwkm.fit charges (Thm A.3 dominant term).
+    # Init cost: same units the in-core driver charges (Thm A.3 dominant term).
     distances = float(p["r"] * p["s"] * k + p["m"] * k)
 
     reps, w = part_mod.representatives(part)
-    c = weighted_kmeanspp(k_pp, reps, w, k)
+    c = core_bwkm.seed_centroids(config.init, k_pp, reps, w, k)
     distances += float(int(part.n_blocks)) * k
 
     weighted_errors: list[float] = []
@@ -302,6 +312,32 @@ def fit(
         trace=trace,
         stream=stats,
     )
+
+
+def fit(
+    key: jax.Array,
+    source: ChunkSource,
+    config: core_bwkm.BWKMConfig,
+    *,
+    init_sample_size: int | None = None,
+    trace_centroids: bool = False,
+) -> StreamBWKMResult:
+    """Deprecated alias of :func:`fit_streaming` — use ``repro.BWKM``.
+
+    The ``init_sample_size`` keyword side channel is deprecated too: set
+    ``BWKMConfig.init_sample_size`` instead (it still wins here for
+    backward compatibility).
+    """
+    warnings.warn(
+        "streaming.stream_bwkm.fit is deprecated; use repro.BWKM(...) "
+        "(engine='streaming') or fit_streaming with "
+        "BWKMConfig(init_sample_size=...)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    if init_sample_size is not None:
+        config = dataclasses.replace(config, init_sample_size=init_sample_size)
+    return fit_streaming(key, source, config, trace_centroids=trace_centroids)
 
 
 # ------------------------------------------------- full-stream evaluation

@@ -1,0 +1,272 @@
+"""Estimator-facade contract: every engine, one schema (ISSUE 2).
+
+* the same tiny dataset through every engine -> identical ``FitResult``
+  schema and near-identical clustering quality;
+* engine auto-selection by data type (array / path / glob / ChunkSource);
+* out-of-core ``predict``/``score``/``transform`` through the chunked kernel;
+* init-strategy registry wired through ``BWKMConfig.init``;
+* the deprecated entry points still work and warn.
+"""
+
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.api.result import FitResult, TupleFitResult
+from repro.core import baselines, bwkm
+from repro.data import chunks as ck
+from repro.distributed import dist_bwkm
+from repro.streaming import stream_bwkm
+
+from helpers import error_f64, gmm
+
+ENGINES = ["incore", "streaming", "distributed"]
+
+
+def _points(seed=0, n=6000, d=3, k=4):
+    """Well-separated GMM: every engine converges to the same optimum, so
+    cross-engine equivalence shows up as near-identical error."""
+    return np.asarray(gmm(jax.random.PRNGKey(seed), n, d, k, spread=30.0, noise=0.5))
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    """The same data through every engine, fitted once per module."""
+    x = _points()
+    models = {
+        e: repro.BWKM(k=4, engine=e, max_iters=10, chunk_size=2048, seed=0).fit(x)
+        for e in ENGINES
+    }
+    return x, models
+
+
+# ------------------------------------------------------------- contract
+def test_every_engine_reports_the_same_schema(fitted):
+    x, models = fitted
+    fields = None
+    for name, m in models.items():
+        res = m.result_
+        assert isinstance(res, FitResult)
+        assert res.engine == name == m.engine_
+        assert res.centroids.shape == (4, x.shape[1])
+        assert res.distances > 0
+        assert res.iterations >= 1
+        assert isinstance(res.stop_reason, str) and res.stop_reason
+        assert isinstance(res.trace, list)
+        assert isinstance(res.metadata, dict)
+        assert res.k == 4
+        fields = fields or res.schema()
+        assert res.schema() == fields
+
+
+def test_every_engine_reaches_the_same_quality(fitted):
+    x, models = fitted
+    errors = {e: error_f64(x, m.centroids_) for e, m in models.items()}
+    base = errors["incore"]
+    for e, err in errors.items():
+        assert abs(err - base) / base < 1e-3, (e, errors)
+
+
+def test_streaming_metadata_records_passes(fitted):
+    _, models = fitted
+    meta = models["streaming"].result_.metadata
+    assert meta["passes"] >= 2
+    assert meta["points_streamed"] >= 2 * 6000
+    assert models["incore"].result_.metadata.get("passes") is None
+
+
+# ------------------------------------------------------- engine selection
+def test_auto_selects_incore_for_arrays():
+    x = _points(n=1500)
+    m = repro.BWKM(k=4, max_iters=4).fit(x)
+    assert m.engine_ == "incore"
+    assert repro.select_engine(x) == "incore"
+    assert repro.select_engine(jnp.asarray(x)) == "incore"
+
+
+def test_auto_selects_streaming_for_paths_and_sources(tmp_path):
+    x = _points(n=2000)
+    p = os.path.join(tmp_path, "x.npy")
+    np.save(p, x)
+    assert repro.select_engine(p) == "streaming"
+    assert repro.select_engine([p, p]) == "streaming"
+    assert repro.select_engine(repro.as_chunk_source(x, 512)) == "streaming"
+    # size rule: resident arrays above the in-core limit stream from host RAM
+    assert repro.select_engine(x, incore_limit_bytes=1024) == "streaming"
+
+    m = repro.BWKM(k=4, max_iters=4, chunk_size=512).fit(p)
+    assert m.engine_ == "streaming"
+    assert m.result_.stop_reason
+
+
+def test_fit_on_npy_path_glob_and_chunk_source(tmp_path):
+    """Acceptance: fit succeeds on a memmap path, a shard glob, and a
+    ChunkSource without the caller ever naming an engine."""
+    x = _points(seed=2, n=4000)
+    p = os.path.join(tmp_path, "points.npy")
+    np.save(p, x)
+    paths = ck.write_npy_shards(x, tmp_path / "shards", rows_per_shard=900)
+    del paths
+    glob_pat = os.path.join(tmp_path, "shards", "*.npy")
+    inputs = [p, glob_pat, ck.ArrayChunkSource(x, 1024)]
+
+    e_ref = None
+    for data in inputs:
+        m = repro.BWKM(k=4, max_iters=8, chunk_size=1024, seed=1).fit(data)
+        assert m.engine_ == "streaming"
+        err = m.score(data)
+        e_ref = e_ref or err
+        assert abs(err - e_ref) / e_ref < 1e-3
+
+    with pytest.raises(ValueError, match="unknown engine"):
+        repro.BWKM(k=4, engine="warp-drive")
+
+
+# ----------------------------------------------- chunked inference methods
+def test_predict_score_transform_out_of_core(tmp_path):
+    x = _points(seed=3, n=3000)
+    p = os.path.join(tmp_path, "x.npy")
+    np.save(p, x)
+    m = repro.BWKM(k=4, max_iters=6, chunk_size=700).fit(p)
+
+    labels = m.predict(p)  # chunked: 5 chunks incl. ragged tail
+    assert labels.shape == (3000,) and labels.dtype == np.int32
+    # labels must equal the exact nearest-centroid assignment
+    d2 = ((x[:, None, :] - np.asarray(m.centroids_)[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(labels, d2.argmin(axis=1))
+
+    score = m.score(p)
+    np.testing.assert_allclose(score, d2.min(axis=1).sum(), rtol=1e-4)
+
+    t = m.transform(p)
+    assert t.shape == (3000, 4)
+    np.testing.assert_allclose(t, d2, rtol=1e-3, atol=1e-2)
+
+    with pytest.raises(RuntimeError, match="not fitted"):
+        repro.BWKM(k=4).predict(x)
+
+
+# ------------------------------------------------------------ init registry
+def test_init_registry_names_resolve_in_config():
+    x = _points(seed=4, n=2000)
+    for init in ["kmeans++", "forgy", "afkmc2"]:
+        m = repro.BWKM(k=4, init=init, max_iters=6, seed=2).fit(x)
+        err = error_f64(x, m.centroids_)
+        assert np.isfinite(err)
+    with pytest.raises(ValueError, match="unknown init"):
+        repro.BWKM(k=4, init="nope")
+    assert set(repro.list_inits()) >= {"kmeans++", "forgy", "afkmc2", "reservoir"}
+
+
+def test_config_level_init_sample_size():
+    """ISSUE 2 satellite: the streaming first-pass sample size is plain
+    config, no keyword side channel."""
+    x = _points(seed=5, n=3000)
+    src = ck.ArrayChunkSource(x, 1024)
+    cfg = bwkm.BWKMConfig(k=4, max_iters=5, init_sample_size=512)
+    res = stream_bwkm.fit_streaming(jax.random.PRNGKey(0), src, cfg)
+    assert res.stop_reason
+    m = repro.BWKM(k=4, max_iters=5, init_sample_size=512, chunk_size=1024).fit(src)
+    assert m.result_.stop_reason
+
+
+# --------------------------------------------------------- deprecation shims
+def test_deprecated_fit_entry_points_still_work_and_warn():
+    x = jnp.asarray(_points(seed=6, n=1200))
+    cfg = bwkm.BWKMConfig(k=3, max_iters=2)
+    with pytest.warns(DeprecationWarning, match="core.bwkm.fit is deprecated"):
+        res = bwkm.fit(jax.random.PRNGKey(0), x, cfg)
+    assert res.centroids.shape == (3, 3)
+
+    src = ck.ArrayChunkSource(np.asarray(x), 512)
+    with pytest.warns(DeprecationWarning, match="stream_bwkm.fit is deprecated"):
+        res = stream_bwkm.fit(jax.random.PRNGKey(0), src, cfg, init_sample_size=256)
+    assert res.stream.passes >= 2
+
+    with pytest.warns(DeprecationWarning, match="dist_bwkm.fit is deprecated"):
+        res = dist_bwkm.fit(jax.random.PRNGKey(0), x, cfg)
+    assert res.centroids.shape == (3, 3)
+
+
+def test_baselines_return_unified_schema_with_tuple_shim():
+    x = jnp.asarray(_points(seed=7, n=1500))
+    res = baselines.kmeanspp_kmeans(jax.random.PRNGKey(0), x, 3, max_iters=5)
+    assert isinstance(res, TupleFitResult)
+    assert res.engine == "baseline:kmeans++"
+    assert res.stop_reason in ("converged", "max-iters")
+    assert res.iterations >= 1
+
+    with pytest.warns(DeprecationWarning, match="tuple access"):
+        c, d = res
+    assert c is res.centroids and d == res.distances
+    with pytest.warns(DeprecationWarning, match="tuple access"):
+        assert res[0] is res.centroids
+
+
+# -------------------------------------------------------------- constructor
+def test_constructor_validation():
+    with pytest.raises(ValueError, match="requires k"):
+        repro.BWKM()
+    with pytest.raises(TypeError, match="unknown BWKMConfig fields"):
+        repro.BWKM(k=3, max_itters=5)
+    cfg = bwkm.BWKMConfig(k=3)
+    with pytest.raises(ValueError, match="conflicts"):
+        repro.BWKM(k=4, config=cfg)
+    with pytest.raises(ValueError, match="not both"):
+        repro.BWKM(config=cfg, max_iters=5)
+    m = repro.BWKM(config=cfg)
+    assert m.k == 3
+
+
+def test_unsupported_engine_options_warn_instead_of_vanishing():
+    x = _points(seed=8, n=1200)
+    with pytest.warns(UserWarning, match="does not support trace_centroids"):
+        m = repro.BWKM(k=3, engine="distributed", max_iters=2, trace=True).fit(x)
+    assert m.result_.trace == []
+    with pytest.warns(UserWarning, match="does not support checkpoint_dir"):
+        repro.BWKM(k=3, max_iters=2, checkpoint_dir="/tmp/nope").fit(x)
+
+
+def test_weight_blind_init_strategy_warns():
+    x = _points(seed=9, n=1200)
+    with pytest.warns(UserWarning, match="ignores point weights"):
+        repro.BWKM(k=3, init="afkmc2", max_iters=2).fit(x)
+
+
+def test_afkmc2_seeding_never_picks_zero_weight_padding_rows():
+    """representatives() parks inactive rows at the origin with w == 0; a
+    seeding strategy must never plant a centroid on one of them."""
+    rng = np.random.RandomState(0)
+    reps = np.zeros((256, 3), np.float32)  # mostly padding, like a Partition
+    reps[:8] = rng.normal(size=(8, 3)).astype(np.float32) + 50.0
+    w = np.zeros((256,), np.float32)
+    w[:8] = 10.0
+    with pytest.warns(UserWarning, match="ignores point weights"):
+        c = bwkm.seed_centroids(
+            "afkmc2", jax.random.PRNGKey(0), jnp.asarray(reps), jnp.asarray(w), 3
+        )
+    assert np.linalg.norm(np.asarray(c), axis=1).min() > 1.0  # no origin seeds
+
+
+def test_paths_with_literal_glob_chars_and_globbing_sources(tmp_path):
+    x = _points(seed=10, n=800)
+    literal = os.path.join(tmp_path, "data[1].npy")
+    np.save(literal, x)
+    src = repro.as_chunk_source(literal, 256)  # '[1]' stays literal
+    assert src.n_points == 800
+    ck.write_npy_shards(x, tmp_path / "sh", rows_per_shard=300)
+    src = repro.as_chunk_source(os.path.join(tmp_path, "sh", "*.npy"), 256)
+    assert src.n_points == 800  # the exported coercion handles globs too
+
+
+def test_prebuilt_config_init_is_preserved():
+    cfg = bwkm.BWKMConfig(k=3, init="forgy")
+    assert repro.BWKM(config=cfg).config.init == "forgy"  # None keeps it
+    assert repro.BWKM(config=cfg, init="afkmc2").config.init == "afkmc2"
+    with pytest.raises(ValueError, match="unknown init"):
+        repro.BWKM(config=bwkm.BWKMConfig(k=3, init="nope"))

@@ -1,0 +1,57 @@
+"""Public-API snapshot: accidental surface changes must fail the build.
+
+``repro.__all__`` is the contract the facade exposes (ISSUE 2). Changing it
+is sometimes right — but never by accident: update EXPECTED_SURFACE in the
+same PR that deliberately changes the surface, and record why.
+"""
+
+import repro
+
+EXPECTED_SURFACE = [
+    "BWKM",
+    "BWKMConfig",
+    "ChunkSource",
+    "Engine",
+    "FitResult",
+    "InitStrategy",
+    "__version__",
+    "as_chunk_source",
+    "get_engine",
+    "list_engines",
+    "list_inits",
+    "register_engine",
+    "register_init",
+    "select_engine",
+]
+
+EXPECTED_ENGINES = ["distributed", "incore", "streaming"]
+EXPECTED_INITS = ["afkmc2", "forgy", "kmeans++", "reservoir"]
+
+
+def test_public_surface_is_pinned():
+    assert sorted(repro.__all__) == EXPECTED_SURFACE
+
+
+def test_every_exported_name_resolves():
+    for name in repro.__all__:
+        assert getattr(repro, name) is not None, name
+
+
+def test_builtin_registries_are_pinned():
+    assert sorted(repro.list_engines()) == EXPECTED_ENGINES
+    assert sorted(repro.list_inits()) == EXPECTED_INITS
+
+
+def test_fit_result_schema_is_pinned():
+    import dataclasses
+
+    fields = [f.name for f in dataclasses.fields(repro.FitResult)]
+    assert fields == [
+        "centroids",
+        "distances",
+        "iterations",
+        "stop_reason",
+        "engine",
+        "trace",
+        "metadata",
+    ]

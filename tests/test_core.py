@@ -133,8 +133,9 @@ def test_sample_boundary_empty_eps_selects_nothing():
 # ---------------------------------------------------------------- BWKM driver
 def test_bwkm_reaches_kmpp_quality_with_fewer_distances():
     x = gmm(jax.random.PRNGKey(20), 30000, 5, 9, spread=10.0)
-    res = bwkm.fit(jax.random.PRNGKey(21), x, bwkm.BWKMConfig(k=9, max_iters=25))
-    c_pp, d_pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(22), x, 9)
+    res = bwkm.fit_incore(jax.random.PRNGKey(21), x, bwkm.BWKMConfig(k=9, max_iters=25))
+    pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(22), x, 9)
+    c_pp, d_pp = pp.centroids, pp.distances
     e_b = error_f64(x, res.centroids)
     e_pp = error_f64(x, c_pp)
     rel = (e_b - e_pp) / e_pp
@@ -144,7 +145,7 @@ def test_bwkm_reaches_kmpp_quality_with_fewer_distances():
 
 def test_bwkm_distance_budget_stops():
     x = gmm(jax.random.PRNGKey(23), 5000, 3, 4)
-    res = bwkm.fit(
+    res = bwkm.fit_incore(
         jax.random.PRNGKey(24),
         x,
         bwkm.BWKMConfig(k=4, max_iters=50, distance_budget=20000.0),
@@ -154,14 +155,14 @@ def test_bwkm_distance_budget_stops():
 
 def test_bwkm_blocks_grow_monotonically():
     x = gmm(jax.random.PRNGKey(25), 8000, 4, 5)
-    res = bwkm.fit(jax.random.PRNGKey(26), x, bwkm.BWKMConfig(k=5, max_iters=10))
+    res = bwkm.fit_incore(jax.random.PRNGKey(26), x, bwkm.BWKMConfig(k=5, max_iters=10))
     assert all(b2 >= b1 for b1, b2 in zip(res.n_blocks, res.n_blocks[1:]))
     assert res.n_blocks[0] >= 5  # at least K blocks after init
 
 
 def test_bwkm_trace_for_benchmark():
     x = gmm(jax.random.PRNGKey(27), 4000, 3, 3)
-    res = bwkm.fit(
+    res = bwkm.fit_incore(
         jax.random.PRNGKey(28), x, bwkm.BWKMConfig(k=3, max_iters=6),
         trace_centroids=True,
     )
@@ -183,7 +184,8 @@ def test_bwkm_trace_for_benchmark():
 )
 def test_baselines_return_finite_solutions(fn, kwargs):
     x = gmm(jax.random.PRNGKey(30), 3000, 4, 5)
-    c, d = fn(jax.random.PRNGKey(31), x, 5, **kwargs)
+    res = fn(jax.random.PRNGKey(31), x, 5, **kwargs)
+    c, d = res.centroids, res.distances
     assert c.shape == (5, 4)
     assert np.isfinite(np.asarray(c)).all()
     assert d > 0

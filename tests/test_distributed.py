@@ -27,8 +27,8 @@ def test_dist_bwkm_trivial_mesh_matches_quality():
     x = gmm(jax.random.PRNGKey(0), 8000, 4, 5)
     with sh.use_mesh(make_smoke_mesh()):
         xs = dist_bwkm.shard_points(x)
-        res = dist_bwkm.fit(jax.random.PRNGKey(1), xs, bwkm.BWKMConfig(k=5, max_iters=20))
-    res_core = bwkm.fit(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=20))
+        res = dist_bwkm.fit_distributed(jax.random.PRNGKey(1), xs, bwkm.BWKMConfig(k=5, max_iters=20))
+    res_core = bwkm.fit_incore(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=20))
     e_dist = error_f64(x, res.centroids)
     e_core = error_f64(x, res_core.centroids)
     best = min(e_dist, e_core)
@@ -72,11 +72,11 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
     with sh.use_mesh(mesh):
         xs = dist_bwkm.shard_points(x)
         assert len(set(d.id for d in xs.devices())) == 8
-        res = dist_bwkm.fit(jax.random.PRNGKey(1), xs,
+        res = dist_bwkm.fit_distributed(jax.random.PRNGKey(1), xs,
                             bwkm.BWKMConfig(k=5, max_iters=15))
         c1, err = dist_bwkm.dist_assign_step(xs, res.centroids)
     e = float(metrics.kmeans_error(x, res.centroids))
-    res_core = bwkm.fit(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=15))
+    res_core = bwkm.fit_incore(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=15))
     e_core = float(metrics.kmeans_error(x, res_core.centroids))
     print(json.dumps({"e_dist": e, "e_core": e_core,
                       "stop": res.stop_reason, "err_step": float(err)}))

@@ -180,8 +180,8 @@ def test_stream_bwkm_matches_core_bwkm_error():
     src = ck.ArrayChunkSource(x, 4096)
     assert src.n_chunks == 5
 
-    res_s = streaming.fit(jax.random.PRNGKey(2), src, cfg)
-    res_c = bwkm.fit(jax.random.PRNGKey(2), jnp.asarray(x), cfg)
+    res_s = streaming.fit_streaming(jax.random.PRNGKey(2), src, cfg)
+    res_c = bwkm.fit_incore(jax.random.PRNGKey(2), jnp.asarray(x), cfg)
 
     e_s = streaming.streaming_error(src, res_s.centroids)
     e_c = streaming.streaming_error(src, res_c.centroids)
@@ -200,8 +200,8 @@ def test_stream_bwkm_from_sharded_files(tmp_path):
     assert src.n_chunks == 8
 
     cfg = bwkm.BWKMConfig(k=5, max_iters=12)
-    res_s = streaming.fit(jax.random.PRNGKey(4), src, cfg)
-    res_c = bwkm.fit(jax.random.PRNGKey(4), jnp.asarray(x), cfg)
+    res_s = streaming.fit_streaming(jax.random.PRNGKey(4), src, cfg)
+    res_c = bwkm.fit_incore(jax.random.PRNGKey(4), jnp.asarray(x), cfg)
 
     e_s = streaming.streaming_error(src, res_s.centroids)
     e_c = streaming.streaming_error(src, res_c.centroids)
@@ -213,7 +213,7 @@ def test_stream_bwkm_from_sharded_files(tmp_path):
 def test_stream_bwkm_distance_budget():
     x = _points(seed=5, n=8_000, d=3, k=4)
     src = ck.ArrayChunkSource(x, 2048)
-    res = streaming.fit(
+    res = streaming.fit_streaming(
         jax.random.PRNGKey(6),
         src,
         bwkm.BWKMConfig(k=4, max_iters=50, distance_budget=20000.0),

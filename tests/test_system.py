@@ -62,10 +62,11 @@ def test_paper_headline_tradeoff():
     k = 9
     e_pp, d_pp, e_bw, d_bw = [], [], [], []
     for seed in range(3):
-        c, d = baselines.kmeanspp_kmeans(jax.random.PRNGKey(seed), x, k)
+        pp = baselines.kmeanspp_kmeans(jax.random.PRNGKey(seed), x, k)
+        c, d = pp.centroids, pp.distances
         e_pp.append(float(metrics.kmeans_error(x, c)))
         d_pp.append(d)
-        res = bwkm.fit(
+        res = bwkm.fit_incore(
             jax.random.PRNGKey(100 + seed), x, bwkm.BWKMConfig(k=k, max_iters=25)
         )
         e_bw.append(float(metrics.kmeans_error(x, res.centroids)))

@@ -83,7 +83,7 @@ def test_theorem_a2_monotone_descent_when_well_assigned(seed):
 def test_theorem3_fixed_point_transfer():
     """BWKM stopping with an empty boundary is a Lloyd fixed point on D."""
     x = gmm(jax.random.PRNGKey(0), 5000, 3, 4)
-    res = bwkm.fit(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=4, max_iters=40))
+    res = bwkm.fit_incore(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=4, max_iters=40))
     assert res.stop_reason == "boundary-empty"
     c = np.asarray(res.centroids, np.float64)
     xs = np.asarray(x, np.float64)
@@ -126,7 +126,7 @@ def test_theorem_a1_grid_coreset_bound():
     # a strong solution as the OPT estimate (OPT_hat >= OPT makes the test stricter)
     from repro.core import baselines
 
-    c_good, _ = baselines.kmeanspp_kmeans(jax.random.PRNGKey(8), x, 3)
+    c_good = baselines.kmeanspp_kmeans(jax.random.PRNGKey(8), x, 3).centroids
     opt_hat = error_f64(xs, np.asarray(c_good))
     c_rand = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (3, 2)) * 5, np.float64)
     span = np.where(hi > lo, hi - lo, 1.0)
