@@ -19,6 +19,7 @@ fit in memory regardless of which engine fitted the model.
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Any
 
 import jax
@@ -40,12 +41,14 @@ DEFAULT_CHUNK_SIZE = 65_536
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(BWKMConfig)}
 
 
-@jax.jit
-def _chunk_error(x, nv, c):
+@partial(jax.jit, static_argnames=("impl",))
+def _chunk_error(x, nv, c, *, impl):
     """One chunk's contribution to E^D(C): Σ d1 over the valid row prefix.
     Error-only — unlike ``streaming_lloyd_step`` it skips the cluster
-    sums/counts reductions ``score`` would discard."""
-    _, d1, _ = ops.assign_top2_chunk(x, c, chunk_size=x.shape[0])
+    sums/counts reductions ``score`` would discard. ``impl`` is static so
+    flipping the session kernel default retraces instead of reusing the
+    cached program."""
+    _, d1, _ = ops.assign_top2_chunk(x, c, chunk_size=x.shape[0], impl=impl)
     valid = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
     return jnp.sum(valid * d1)
 
@@ -194,9 +197,10 @@ class BWKM:
         self._require_fitted()
         src = adapters.to_chunk_source(data, self.chunk_size)
         c = self.centroids_
+        impl = ops.resolve_impl(None)
         err = jnp.zeros((), jnp.float32)  # device-side: no per-chunk host sync
         for x_dev, nv in padded_device_chunks(src):
-            err = err + _chunk_error(x_dev, nv, c)
+            err = err + _chunk_error(x_dev, nv, c, impl=impl)
         return float(err)
 
     def transform(self, data: Any) -> np.ndarray:

@@ -9,7 +9,18 @@ misassignment function (Definition 3) consumes: the paper stores "the two
 closest centroids to the representative" from the last weighted Lloyd
 iteration (Section 2.3).
 
-Everything is a single jitted ``lax.while_loop`` with static shapes.
+Every iteration is ONE data pass through ``kernels.ops.assign_update`` —
+the fused assign+accumulate kernel on the Pallas path — which yields the
+assignment, the top-2 distances, the weighted error, AND the cluster
+sums/counts under the current centroids. The next centroids are then a
+cheap elementwise divide of those statistics; no second pass over the
+points. This is the shared hot path of all three engines (the streaming
+driver folds the same op per chunk, the distributed driver per shard).
+
+Everything is a single jitted ``lax.while_loop`` with static shapes. The
+kernel implementation is resolved OUTSIDE jit and baked in as a static
+argument, so flipping ``ops.set_default_impl``/``REPRO_KERNEL_IMPL``
+between calls retraces instead of silently reusing the cached program.
 """
 
 from __future__ import annotations
@@ -36,16 +47,13 @@ class LloydResult(NamedTuple):
     max_shift: jax.Array  # scalar f32: ||C - C'||_inf of the last update
 
 
-def _update_centroids(x, w, assign, k, old_c):
-    sums, counts = ops.cluster_sums(x, w, assign, k)
+def _next_centroids(sums, counts, old_c):
     occupied = counts > 0
-    new_c = jnp.where(
+    return jnp.where(
         occupied[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], old_c
     )
-    return new_c
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
 def weighted_lloyd(
     x: jax.Array,
     w: jax.Array,
@@ -53,6 +61,7 @@ def weighted_lloyd(
     *,
     max_iters: int = 100,
     epsilon: float = 1e-4,
+    impl: str | None = None,
 ) -> LloydResult:
     """Weighted Lloyd iterations with the Eq.-2 stopping rule.
 
@@ -62,18 +71,33 @@ def weighted_lloyd(
     The stopping rule compares *relative* weighted-error change against
     ``epsilon`` (|E - E'| <= epsilon · E), the practical form of Eq. 2; the
     distance counter charges ``active_points · K`` per assignment step, the
-    unit the paper reports (Section 3).
+    unit the paper reports (Section 3). ``impl`` selects the kernel
+    implementation (``None`` = session default).
     """
+    return _weighted_lloyd(
+        x, w, init_centroids,
+        max_iters=max_iters, epsilon=epsilon, impl=ops.resolve_impl(impl),
+    )
+
+
+@partial(jax.jit, static_argnames=("max_iters", "impl"))
+def _weighted_lloyd(
+    x: jax.Array,
+    w: jax.Array,
+    init_centroids: jax.Array,
+    *,
+    max_iters: int,
+    epsilon: float,
+    impl: str,
+) -> LloydResult:
     k = init_centroids.shape[0]
     w = w.astype(jnp.float32)
     n_active = jnp.sum((w > 0).astype(jnp.float32))
 
-    def assign_and_measure(c):
-        assign, d1, d2 = ops.assign_top2(x, c)
-        err = jnp.sum(w * d1)
-        return assign, d1, d2, err
+    def step(c):
+        return ops.assign_update(x, w, c, impl=impl)
 
-    assign, d1, d2, err = assign_and_measure(init_centroids)
+    fu = step(init_centroids)
 
     class State(NamedTuple):
         c: jax.Array
@@ -82,17 +106,21 @@ def weighted_lloyd(
         assign: jax.Array
         d1: jax.Array
         d2: jax.Array
+        sums: jax.Array
+        counts: jax.Array
         it: jax.Array
         dists: jax.Array
         max_shift: jax.Array
 
     init = State(
         init_centroids,
-        err,
+        fu.err,
         jnp.asarray(jnp.inf, jnp.float32),
-        assign,
-        d1,
-        d2,
+        fu.assign,
+        fu.d1,
+        fu.d2,
+        fu.sums,
+        fu.counts,
         jnp.asarray(0, jnp.int32),
         n_active * k,  # the initial assignment above
         jnp.asarray(jnp.inf, jnp.float32),
@@ -103,16 +131,18 @@ def weighted_lloyd(
         return (s.it < max_iters) & rel_gap
 
     def body(s: State):
-        c_new = _update_centroids(x, w, s.assign, k, s.c)
-        assign, d1, d2, err = assign_and_measure(c_new)
+        c_new = _next_centroids(s.sums, s.counts, s.c)
+        fu = step(c_new)
         shift = jnp.max(jnp.linalg.norm(c_new - s.c, axis=-1))
         return State(
             c_new,
-            err,
+            fu.err,
             s.err,
-            assign,
-            d1,
-            d2,
+            fu.assign,
+            fu.d1,
+            fu.d2,
+            fu.sums,
+            fu.counts,
             s.it + 1,
             s.dists + n_active * k,
             shift,
@@ -137,6 +167,7 @@ def lloyd(
     *,
     max_iters: int = 100,
     epsilon: float = 1e-4,
+    impl: str | None = None,
 ) -> LloydResult:
     """Plain (unweighted) Lloyd — the baseline algorithms' refinement stage."""
     return weighted_lloyd(
@@ -145,4 +176,5 @@ def lloyd(
         init_centroids,
         max_iters=max_iters,
         epsilon=epsilon,
+        impl=impl,
     )

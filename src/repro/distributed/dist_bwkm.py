@@ -129,38 +129,39 @@ def dist_route_points(
     return fn(x, bid, fits, axis, mid, right_row)
 
 
-def _assign_body(x_loc, c, w_loc, *, k):
+def _assign_body(x_loc, c, w_loc, *, impl):
     """One full-dataset assignment + partial cluster stats (for the
-    distributed Lloyd baseline / final refinement)."""
-    from repro.kernels import ref
+    distributed Lloyd baseline / final refinement). The per-shard body is
+    the same fused ``kernels.ops.assign_update`` pass the in-core Lloyd and
+    the streaming chunk fold run; the psum quartet is the cross-shard
+    combine."""
+    from repro.kernels import ops
 
-    assign, d1, _ = ref.assign_top2(x_loc, c)
-    wx = x_loc * w_loc[:, None]
-    sums = jax.ops.segment_sum(wx, assign, num_segments=k)
-    counts = jax.ops.segment_sum(w_loc, assign, num_segments=k)
-    err = jnp.sum(w_loc * d1)
+    fu = ops.assign_update(x_loc, w_loc, c, impl=impl)
     axes = _data_axes()
     return (
-        jax.lax.psum(sums, axes),
-        jax.lax.psum(counts, axes),
-        jax.lax.psum(err, axes),
-        assign,
+        jax.lax.psum(fu.sums, axes),
+        jax.lax.psum(fu.counts, axes),
+        jax.lax.psum(fu.err, axes),
+        fu.assign,
     )
 
 
 def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
     """Distributed Lloyd iteration over the full dataset (the scalable
     baseline the paper compares against): returns (new_c, error)."""
+    from repro.kernels import ops
+
     mesh = sh.current_mesh()
     n, d = x.shape
-    k = c.shape[0]
+    impl = ops.resolve_impl(None)
     w = jnp.ones(n, jnp.float32) if w is None else w
     if mesh is None:
-        sums, counts, err, _ = _assign_body(x, c, w, k=k)
+        sums, counts, err, _ = _assign_body(x, c, w, impl=impl)
     else:
         row_spec = sh.logical_to_spec(("batch", None), (n, d))
         fn = sh.shard_map(
-            partial(_assign_body, k=k),
+            partial(_assign_body, impl=impl),
             mesh=mesh,
             in_specs=(row_spec, P(None, None), sh.logical_to_spec(("batch",), (n,))),
             out_specs=(P(None, None), P(None), P(), sh.logical_to_spec(("batch",), (n,))),

@@ -1,4 +1,6 @@
-"""Pallas TPU kernels for the paper's compute hot-spot: the K-means
-assignment step (fused distances + top-2 + argmin) and the weighted
-cluster update (on-the-fly one-hot MXU matmul). ``ops`` dispatches,
-``ref`` holds the pure-jnp oracles."""
+"""Pallas TPU kernels for the paper's compute hot-spot. The hot path is the
+fused single-pass assign+accumulate kernel (``fused_assign_update``):
+top-2 distances + argmin AND weighted cluster statistics in one HBM read
+of x. ``distance_assign`` / ``cluster_update`` remain as the two-pass
+building blocks (and the fallback when the [K, d] accumulator exceeds
+VMEM); ``ops`` dispatches, ``ref`` holds the pure-jnp oracles."""

@@ -15,13 +15,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.ref import AssignUpdate
 
 __all__ = [
+    "AssignUpdate",
     "assign_top2",
     "assign_top2_chunk",
+    "assign_update",
+    "assign_update_chunk",
     "cluster_sums",
     "pairwise_sqdist_chunk",
     "pallas_available",
+    "resolve_impl",
     "set_default_impl",
 ]
 
@@ -42,11 +47,22 @@ def pallas_available() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def _resolve(impl: str | None) -> str:
+def resolve_impl(impl: str | None) -> str:
+    """Resolve ``impl``/the session default to a concrete ``"pallas"``/``"ref"``.
+
+    Jitted callers that bake the kernel choice into a compiled program (e.g.
+    ``core.lloyd.weighted_lloyd``) must resolve BEFORE entering jit and pass
+    the result as a static argument — resolving inside the traced function
+    would freeze whatever the session default was at first trace into the
+    jit cache.
+    """
     impl = impl or _DEFAULT_IMPL
     if impl == "auto":
         return "pallas" if pallas_available() else "ref"
     return impl
+
+
+_resolve = resolve_impl  # internal alias, kept for existing call sites
 
 
 def assign_top2(
@@ -132,3 +148,76 @@ def cluster_sums(
             x, w, assign, num_clusters, interpret=interpret
         )
     return ref.cluster_sums(x, w, assign, num_clusters)
+
+
+def assign_update(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    *,
+    impl: str | None = None,
+) -> AssignUpdate:
+    """One weighted Lloyd data pass: top-2 assignment + weighted cluster
+    statistics + weighted error, all against the same centroids.
+
+    This is THE shared hot path of all three engines (in-core Lloyd,
+    streaming per-chunk fold, distributed per-shard body). On the Pallas
+    path it runs as the single-pass fused kernel — x read from HBM once —
+    whenever the ``[K, d]`` accumulator fits the kernel VMEM budget;
+    otherwise it degrades to the two-pass composition (Pallas top-2 kernel +
+    the XLA segment-sum update), which is also the ``ref`` semantics.
+    Zero-weight rows are inert in sums/counts/err.
+    """
+    if _resolve(impl) == "pallas":
+        from repro.kernels import cluster_update, distance_assign, fused_assign_update
+
+        k, d = c.shape
+        interpret = jax.default_backend() != "tpu"
+        if fused_assign_update.fused_supported(d, k):
+            return AssignUpdate(
+                *fused_assign_update.fused_assign_update_pallas(
+                    x, w, c, interpret=interpret
+                )
+            )
+        # Two-pass fallback (ADR 0003): the fused kernel's accumulator
+        # budget is exceeded, so assignment runs the top-2 kernel alone and
+        # the update runs as the standalone one-hot Pallas kernel — which
+        # tolerates a [K, d] block up to the full 8 MB — degrading to the
+        # XLA segment-sum only beyond that.
+        assign, d1, d2 = distance_assign.assign_top2_pallas(
+            x, c, interpret=interpret
+        )
+        kp, dp = -(-k // 8) * 8, -(-d // 128) * 128
+        if kp * dp * 4 <= 8 * 1024 * 1024:  # cluster_sums_pallas's own bound
+            sums, counts = cluster_update.cluster_sums_pallas(
+                x, w, assign, k, interpret=interpret
+            )
+        else:
+            sums, counts = ref.cluster_sums(x, w, assign, k)
+        err = jnp.sum(w.astype(jnp.float32) * d1)
+        return AssignUpdate(assign, d1, d2, sums, counts, err)
+    return ref.assign_update(x, w, c)
+
+
+def assign_update_chunk(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    *,
+    chunk_size: int,
+    impl: str | None = None,
+) -> AssignUpdate:
+    """Chunk-shaped :func:`assign_update` for streaming passes.
+
+    Same padding contract as :func:`assign_top2_chunk`, with the addition
+    that padding rows enter the kernel with weight 0 — so the accumulated
+    sums/counts/err are EXACTLY those of the ``n`` real rows (no phantom
+    points from ``_pad_to_chunk``; pinned by the padding regression test in
+    tests/test_kernels_properties.py). Per-row outputs are sliced to ``n``.
+    """
+    n, x = _pad_to_chunk(x, chunk_size)
+    w = jnp.pad(w.astype(jnp.float32), (0, chunk_size - n))
+    out = assign_update(x, w, c, impl=impl)
+    return AssignUpdate(
+        out.assign[:n], out.d1[:n], out.d2[:n], out.sums, out.counts, out.err
+    )

@@ -12,10 +12,33 @@ top-2 squared distances alongside the argmin.
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["pairwise_sqdist", "assign_top2", "cluster_sums", "weighted_error"]
+__all__ = [
+    "AssignUpdate",
+    "pairwise_sqdist",
+    "assign_top2",
+    "assign_update",
+    "cluster_sums",
+    "weighted_error",
+]
+
+
+class AssignUpdate(NamedTuple):
+    """Everything one weighted Lloyd step needs from one data pass: the
+    per-point top-2 assignment plus the per-cluster sufficient statistics.
+    Produced in a single pass by the fused Pallas kernel; this oracle
+    composes the two-pass reference semantics."""
+
+    assign: jax.Array  # [n] i32
+    d1: jax.Array  # [n] f32, squared distance to closest centroid
+    d2: jax.Array  # [n] f32, squared distance to second closest
+    sums: jax.Array  # [K, d] f32, Σ 1[assign==k]·w·x
+    counts: jax.Array  # [K] f32, Σ 1[assign==k]·w
+    err: jax.Array  # scalar f32, Σ w·d1 (the weighted error E^P)
 
 
 def pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -67,6 +90,17 @@ def cluster_sums(
     sums = jax.ops.segment_sum(wx, assign, num_segments=num_clusters)
     counts = jax.ops.segment_sum(w, assign, num_segments=num_clusters)
     return sums, counts
+
+
+def assign_update(x: jax.Array, w: jax.Array, c: jax.Array) -> AssignUpdate:
+    """Two-pass reference for the fused assign+accumulate kernel: assignment
+    then weighted cluster statistics, over the SAME centroids — exactly the
+    per-pass work of one weighted Lloyd step. Zero-weight rows still receive
+    an assignment but contribute nothing to sums/counts/err."""
+    assign, d1, d2 = assign_top2(x, c)
+    sums, counts = cluster_sums(x, w, assign, c.shape[0])
+    err = jnp.sum(w.astype(jnp.float32) * d1)
+    return AssignUpdate(assign, d1, d2, sums, counts, err)
 
 
 def weighted_error(

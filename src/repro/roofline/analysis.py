@@ -31,6 +31,90 @@ PEAK_FLOPS = 197e12  # bf16 per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
 
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM (TPU v4/v5 class)
+#: what a single kernel may plan for: half of VMEM, leaving room for the
+#: pipelined (double-buffered) input blocks Mosaic allocates behind the grid
+KERNEL_VMEM_BUDGET = VMEM_BYTES // 2
+
+
+def _ceil_to(x: int, q: int) -> int:
+    return -(-x // q) * q
+
+
+def assign_update_blocking(
+    d: int,
+    k: int,
+    *,
+    bn: int | None = None,
+    bk: int = 128,
+    vmem_budget_bytes: int = KERNEL_VMEM_BUDGET,
+) -> dict[str, Any]:
+    """Block-size selection for the fused assign+accumulate kernel
+    (``kernels/fused_assign_update.py``; ADR 0003).
+
+    The kernel keeps three resident f32 buffers per grid step: the ``[bn, dp]``
+    x tile, one ``[bk, dp]`` centroid tile, and the ``[kp, dp]`` cluster-sum
+    accumulator that lives in VMEM across the *whole* grid. The heuristic
+    spends the budget on ``bn`` (bigger row tiles amortise the accumulator
+    flush and the per-tile top-2 merge) after reserving the accumulator and
+    centroid tile, and reports ``fused_ok`` — whether the accumulator fits at
+    all. When it does not, callers select the two-pass path instead
+    (``ops.assign_update`` documents the fallback).
+    """
+    dp = _ceil_to(max(d, 1), 128)
+    kp_acc = _ceil_to(max(k, 1), 8)  # sums/counts accumulator rows
+    kp_dist = _ceil_to(max(k, 1), bk)  # centroid tiles for the distance grid
+    acc_bytes = 4 * kp_acc * (dp + 1)  # sums [kp, dp] + counts [kp, 1]
+    ctile_bytes = 4 * bk * dp
+    # the accumulator may use at most half the kernel budget: the x tile must
+    # keep enough rows for the one-hot contraction to be MXU-shaped
+    fused_ok = acc_bytes <= vmem_budget_bytes // 2
+    if bn is None:
+        avail = max(vmem_budget_bytes - acc_bytes - ctile_bytes, 0)
+        bn = max(8, min(512, (avail // (4 * dp)) // 8 * 8))
+    vmem_bytes = acc_bytes + ctile_bytes + 4 * bn * dp + 4 * 4 * bn  # + row outs
+    return {
+        "bn": bn,
+        "bk": bk,
+        "dp": dp,
+        "kp_acc": kp_acc,
+        "kp_dist": kp_dist,
+        "acc_bytes": acc_bytes,
+        "vmem_bytes": vmem_bytes,
+        "fused_ok": fused_ok,
+    }
+
+
+def assign_update_hbm_bytes(
+    n: int, d: int, k: int, *, fused: bool, bn: int = 512, dtype_bytes: int = 4
+) -> dict[str, float]:
+    """Analytic per-iteration HBM traffic of the assignment+update step.
+
+    Two-pass (today's default before this kernel): ``assign_top2`` reads x
+    and writes (assign, d1, d2); ``cluster_sums`` re-reads x plus the
+    assignment and weights. Fused: x is read ONCE and the ``(n, K)`` distance
+    intermediate never exists; the only extra traffic is the centroid tile
+    re-fetch per row block (``ceil(n/bn)·K·d``, shared by both variants).
+    ``bench_kernels`` persists both so the ≈2× cut in x reads is tracked.
+    """
+    x_bytes = dtype_bytes * n * d
+    c_refetch = dtype_bytes * -(-n // bn) * k * d
+    row_out = 3 * 4 * n  # assign, d1, d2
+    stats_out = 4 * (k * d + k)
+    if fused:
+        reads = x_bytes + 4 * n + c_refetch  # x + w + centroid tiles
+        writes = row_out + stats_out + 4
+    else:
+        # pass 1: x + centroids -> assign/d1/d2; pass 2: x + w + assign -> stats
+        reads = 2 * x_bytes + 4 * n + 4 * n + c_refetch
+        writes = row_out + stats_out
+    return {
+        "x_read_bytes": (1 if fused else 2) * x_bytes,
+        "read_bytes": float(reads),
+        "write_bytes": float(writes),
+        "total_bytes": float(reads + writes),
+    }
+
 _COLLECTIVES = (
     "all-gather",
     "all-reduce",

@@ -98,17 +98,17 @@ def _split_route_stats(x, bid, nv, plan, *, m):
 _combine = jax.jit(part_mod.combine_block_stats)
 
 
-@jax.jit
-def _chunk_assign_stats(x, nv, c):
-    """Per-chunk Lloyd sufficient statistics over the full dataset: cluster
-    sums/counts and error contribution. Dispatches through the chunk-shaped
-    kernel entry point (the Pallas ``assign_top2`` kernel on TPU); ``x`` is
+@partial(jax.jit, static_argnames=("impl",))
+def _chunk_assign_stats(x, nv, c, *, impl):
+    """Per-chunk Lloyd sufficient statistics over the full dataset, in ONE
+    fused pass through ``kernels.ops.assign_update_chunk`` — the same shared
+    hot path the in-core Lloyd and the distributed shard body use. The
+    validity prefix doubles as the weight vector, so padding rows are inert
+    in sums/counts/err by the kernel's zero-weight contract; ``x`` is
     already padded to the static chunk shape, so the pad inside is a no-op."""
-    assign, d1, _d2 = ops.assign_top2_chunk(x, c, chunk_size=x.shape[0])
     wv = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
-    sums = jax.ops.segment_sum(x * wv[:, None], assign, num_segments=c.shape[0])
-    counts = jax.ops.segment_sum(wv, assign, num_segments=c.shape[0])
-    return sums, counts, jnp.sum(wv * d1)
+    fu = ops.assign_update_chunk(x, wv, c, chunk_size=x.shape[0], impl=impl)
+    return fu.sums, fu.counts, fu.err
 
 
 # ------------------------------------------------------------ data passes
@@ -351,11 +351,12 @@ def streaming_lloyd_step(
     mesh, each host streams its shard's chunks and the psum runs unchanged).
     """
     k, d = c.shape
+    impl = ops.resolve_impl(None)  # resolve once per pass, outside jit
     sums = jnp.zeros((k, d), jnp.float32)
     counts = jnp.zeros((k,), jnp.float32)
     err = jnp.zeros((), jnp.float32)  # device-side: no per-chunk host sync
     for x_dev, nv in padded_device_chunks(source):
-        s_, c_, e_ = _chunk_assign_stats(x_dev, nv, c)
+        s_, c_, e_ = _chunk_assign_stats(x_dev, nv, c, impl=impl)
         sums, counts, err = sums + s_, counts + c_, err + e_
     new_c = jnp.where(
         (counts > 0)[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], c

@@ -5,7 +5,10 @@
 * engine auto-selection by data type (array / path / glob / ChunkSource);
 * out-of-core ``predict``/``score``/``transform`` through the chunked kernel;
 * init-strategy registry wired through ``BWKMConfig.init``;
-* the deprecated entry points still work and warn.
+* the deprecated entry points still work and warn;
+* the engine × init × kernel-impl equivalence matrix (ISSUE 3): all three
+  engines agree under the fused Pallas path (interpret mode) too, not just
+  under the default jnp oracle.
 """
 
 import os
@@ -18,6 +21,7 @@ import pytest
 
 import repro
 from repro.api.result import FitResult, TupleFitResult
+from repro.kernels import ops as kops
 from repro.core import baselines, bwkm
 from repro.data import chunks as ck
 from repro.distributed import dist_bwkm
@@ -206,6 +210,42 @@ def test_baselines_return_unified_schema_with_tuple_shim():
     assert c is res.centroids and d == res.distances
     with pytest.warns(DeprecationWarning, match="tuple access"):
         assert res[0] is res.centroids
+
+
+# ---------------------------------------- engine × init × kernel-impl matrix
+@pytest.fixture
+def _restore_kernel_impl():
+    yield
+    kops.set_default_impl("auto")
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas"])
+@pytest.mark.parametrize("init", ["kmeans++", "forgy"])
+def test_engine_matrix_agrees_under_every_kernel_impl(
+    impl, init, _restore_kernel_impl
+):
+    """ISSUE 3 satellite: fit_incore/fit_streaming/fit_distributed agreement
+    must hold under the fused Pallas kernel (interpret mode on CPU) exactly
+    as under the jnp oracle — same well-separated optimum for every cell of
+    the engine × init × impl matrix. ``weighted_lloyd``/the chunk programs
+    key their jit caches on the resolved impl, so flipping the session
+    default here exercises real retraces, not stale compilations.
+
+    Data seed chosen so every cell converges to the shared optimum: with
+    random-row inits (forgy) BWKM is seed-dependent on unlucky draws even on
+    well-separated data (k-means local minima — see the verify notes)."""
+    x = _points(seed=13, n=1500)
+    kops.set_default_impl(impl)
+    errors = {}
+    for engine in ENGINES:
+        m = repro.BWKM(
+            k=4, engine=engine, init=init, max_iters=4, chunk_size=512, seed=0
+        ).fit(x)
+        assert m.result_.stop_reason
+        errors[engine] = error_f64(x, m.centroids_)
+    base = errors["incore"]
+    for engine, err in errors.items():
+        assert abs(err - base) / base < 1e-3, (impl, init, errors)
 
 
 # -------------------------------------------------------------- constructor

@@ -1,0 +1,220 @@
+"""Property-based parity: fused assign+update Pallas kernel ≡ ref oracle.
+
+The fused kernel (`kernels/fused_assign_update.py`) is the hot path of all
+three engines, so its contract gets its own suite: hypothesis strategies
+over (n, d, K, dtype, weights) — including n not divisible by the block
+size, K smaller than one centroid tile, duplicate points, and zero-weight
+rows — plus deterministic regressions for the edges the strategies can't
+guarantee to hit (chunk padding, K == 1, the two-pass fallback). Pallas
+runs in interpret mode: the Python interpreter executes the same
+blocking/masking logic Mosaic would lower for TPU.
+
+Tolerances are dtype-appropriate: both paths cast inputs to f32 and
+accumulate in f32, so f32 parity is tight (the 1e-5 the acceptance
+criteria pin); bf16 inputs only loosen the *input* quantisation, not the
+accumulation, so a mildly wider tolerance suffices.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.kernels import ops, ref
+from repro.kernels.fused_assign_update import (
+    fused_assign_update_pallas,
+    fused_supported,
+)
+
+TOL = {jnp.float32: dict(rtol=1e-5, atol=1e-5), jnp.bfloat16: dict(rtol=1e-3, atol=1e-3)}
+
+
+def _data(n, d, k, dtype, seed=0, wmode="uniform"):
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = (jax.random.normal(kx, (n, d)) * 3).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 3).astype(dtype)
+    if wmode == "ones":
+        w = jnp.ones((n,), jnp.float32)
+    elif wmode == "zeros-some":  # ~half the rows are inert
+        w = jnp.where(jax.random.uniform(kw, (n,)) < 0.5, 0.0, 1.5)
+    else:
+        w = jax.random.uniform(kw, (n,), minval=0.0, maxval=3.0)
+    return x, w, c
+
+
+def _assert_parity(x, w, c, fused_out, tol):
+    """Fused outputs ≡ two-pass ref oracle. Assignments are compared through
+    the distance matrix so exact fp ties between distinct centroids (legal
+    either way) don't flake."""
+    a, d1, d2, sums, counts, err = fused_out
+    r = ref.assign_update(x, w, c)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(r.d1), **tol)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(r.d2), **tol)
+    dd = np.asarray(ref.pairwise_sqdist(x, c))
+    n = x.shape[0]
+    np.testing.assert_allclose(
+        dd[np.arange(n), np.asarray(a)], dd.min(axis=1), **tol
+    )
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), **tol)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(r.counts), **tol)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=max(tol["rtol"], 1e-5))
+
+
+# ------------------------------------------------------------ property suite
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 150),  # deliberately not multiples of bn=32
+    d=st.integers(1, 40),
+    k=st.integers(1, 70),  # spans K < one bk=16 tile and K > several tiles
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+    wmode=st.sampled_from(["uniform", "ones", "zeros-some"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_fused_matches_ref(n, d, k, dtype, wmode, seed):
+    x, w, c = _data(n, d, k, dtype, seed=seed, wmode=wmode)
+    out = fused_assign_update_pallas(x, w, c, interpret=True, bn=32, bk=16)
+    _assert_parity(x, w, c, out, TOL[dtype])
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(2, 100),
+    d=st.integers(1, 20),
+    k=st.integers(2, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_duplicate_points_and_centroids(n, d, k, seed):
+    """Duplicating rows and centroids must not break the top-2 merge or the
+    accumulators: a duplicated centroid yields d2 == d1 for its members."""
+    x, w, c = _data(n, d, k, jnp.float32, seed=seed)
+    x = jnp.concatenate([x, x[: n // 2 + 1]])  # duplicate points
+    w = jnp.concatenate([w, w[: n // 2 + 1]])
+    c = jnp.concatenate([c, c[:1]])  # duplicate centroid 0 as centroid k
+    out = fused_assign_update_pallas(x, w, c, interpret=True, bn=32, bk=16)
+    _assert_parity(x, w, c, out, TOL[jnp.float32])
+    a, d1, d2 = np.asarray(out[0]), np.asarray(out[1]), np.asarray(out[2])
+    members = a == 0  # closest to the duplicated centroid
+    np.testing.assert_allclose(d2[members], d1[members], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    d=st.integers(1, 24),
+    k=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_mass_conservation(n, d, k, seed):
+    """Σ_k sums == Σ_i w·x and Σ_k counts == Σ_i w, for any shape/weights."""
+    x, w, c = _data(n, d, k, jnp.float32, seed=seed, wmode="zeros-some")
+    _, _, _, sums, counts, err = fused_assign_update_pallas(
+        x, w, c, interpret=True, bn=32, bk=16
+    )
+    np.testing.assert_allclose(
+        np.asarray(sums.sum(0)), np.asarray((x * w[:, None]).sum(0)),
+        rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_allclose(float(counts.sum()), float(w.sum()), rtol=1e-5, atol=1e-6)
+    assert float(err) >= 0.0
+
+
+# ------------------------------------------------- deterministic regressions
+@pytest.mark.parametrize(
+    "n,d,k,wmode",
+    [
+        (70, 10, 40, "uniform"),  # n % bn != 0, k spans tiles
+        (33, 7, 3, "uniform"),  # K smaller than one bk tile
+        (64, 5, 1, "ones"),  # K == 1: d2 must be inf
+        (128, 19, 27, "zeros-some"),  # zero-weight rows are inert
+    ],
+)
+def test_fused_matches_ref_examples(n, d, k, wmode):
+    x, w, c = _data(n, d, k, jnp.float32, seed=11, wmode=wmode)
+    out = fused_assign_update_pallas(x, w, c, interpret=True, bn=32, bk=16)
+    _assert_parity(x, w, c, out, TOL[jnp.float32])
+    if k == 1:
+        assert bool(jnp.all(jnp.isinf(out[2])))
+
+
+def test_zero_weight_rows_are_inert_but_assigned():
+    """Zero-weight rows still get a valid assignment (BWKM's inactive
+    representative rows rely on it) while contributing nothing to stats."""
+    x, _, c = _data(50, 6, 5, jnp.float32, seed=3)
+    w = jnp.zeros((50,)).at[:10].set(2.0)
+    a, d1, _, sums, counts, err = fused_assign_update_pallas(
+        x, w, c, interpret=True, bn=16, bk=8
+    )
+    r = ref.assign_update(x, w, c)
+    dd = np.asarray(ref.pairwise_sqdist(x, c))
+    np.testing.assert_allclose(dd[np.arange(50), np.asarray(a)], dd.min(1), rtol=1e-5)
+    np.testing.assert_allclose(float(counts.sum()), 20.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=1e-5)
+
+
+def test_chunk_padding_contributes_no_phantom_points():
+    """Regression (ISSUE 3 satellite): a chunk that is mostly `_pad_to_chunk`
+    padding must yield sums/counts/err of the real rows ONLY — padding rows
+    enter the kernel with weight 0, so phantom contributions would show up
+    as counts.sum() > w.sum() (pad rows are all-zero points that would
+    otherwise pile into whichever cluster owns the origin)."""
+    n, chunk = 5, 256  # 98% padding
+    x = jax.random.normal(jax.random.PRNGKey(7), (n, 6), jnp.float32) + 10.0
+    w = jnp.full((n,), 2.0)
+    c = jax.random.normal(jax.random.PRNGKey(8), (3, 6), jnp.float32)
+    r = ref.assign_update(x, w, c)
+    for impl in ("ref", "pallas"):
+        out = ops.assign_update_chunk(x, w, c, chunk_size=chunk, impl=impl)
+        assert out.assign.shape == (n,)
+        np.testing.assert_allclose(float(out.counts.sum()), float(w.sum()), rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(out.sums), np.asarray(r.sums), rtol=1e-5, atol=1e-5
+        )
+        np.testing.assert_allclose(float(out.err), float(r.err), rtol=1e-5)
+
+
+def test_ops_dispatch_fused_equals_ref():
+    """The ops-layer entry point: impl='pallas' (fused) ≡ impl='ref'."""
+    x, w, c = _data(128, 24, 10, jnp.float32, seed=9)
+    a = ops.assign_update(x, w, c, impl="ref")
+    b = ops.assign_update(x, w, c, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(a.assign), np.asarray(b.assign))
+    np.testing.assert_allclose(np.asarray(a.sums), np.asarray(b.sums), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(a.counts), np.asarray(b.counts), rtol=1e-5)
+    np.testing.assert_allclose(float(a.err), float(b.err), rtol=1e-5)
+
+
+def test_two_pass_fallback_when_accumulator_exceeds_vmem(monkeypatch):
+    """When `fused_supported` says the [K, d] accumulator won't fit, the ops
+    layer must silently select the two-pass path — same results."""
+    from repro.kernels import fused_assign_update as fau
+
+    x, w, c = _data(96, 16, 8, jnp.float32, seed=4)
+    monkeypatch.setattr(fau, "fused_supported", lambda d, k: False)
+    out = ops.assign_update(x, w, c, impl="pallas")
+    r = ref.assign_update(x, w, c)
+    np.testing.assert_allclose(np.asarray(out.sums), np.asarray(r.sums), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(out.err), float(r.err), rtol=1e-5)
+    # and the real capacity rule: a genuinely oversized K·d reports not-ok
+    monkeypatch.undo()
+    assert not fused_supported(8192, 4096)
+    assert fused_supported(19, 27)
+    with pytest.raises(ValueError, match="VMEM budget"):
+        fused_assign_update_pallas(
+            jnp.zeros((8, 8192)), jnp.ones((8,)), jnp.zeros((4096, 8192)),
+            interpret=True,
+        )
+
+
+def test_blocking_heuristic_reserves_accumulator_first():
+    """The roofline-driven block heuristic: bn shrinks as the [K, d]
+    accumulator grows, and never violates alignment floors."""
+    from repro.roofline import analysis
+
+    small = analysis.assign_update_blocking(19, 27)
+    big = analysis.assign_update_blocking(1024, 512)
+    assert small["bn"] >= big["bn"] >= 8
+    assert small["bn"] % 8 == 0 and big["bn"] % 8 == 0
+    assert small["fused_ok"]
+    assert not analysis.assign_update_blocking(8192, 4096)["fused_ok"]
