@@ -8,6 +8,7 @@ Emits ``name,us_per_call,derived`` CSV:
   * tradeoff_*  — Figures 2–6 (distances vs relative error, per dataset × K)
   * assign_*    — the assignment-kernel micro-bench
   * stream_*    — out-of-core streaming driver vs in-memory (throughput)
+  * lloyd_*     — drift-bound pruned Lloyd vs dense (distance-op trajectory)
 """
 
 from __future__ import annotations
@@ -21,7 +22,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_streaming, bench_tradeoff
+    from benchmarks import bench_kernels, bench_lloyd, bench_streaming, bench_tradeoff
 
     if args.quick:
         bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "--reps", "1"])
@@ -37,6 +38,7 @@ def main() -> None:
         bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "27", "--reps", "1"])
         bench_streaming.main([])
     bench_kernels.main([])
+    bench_lloyd.main([])
 
 
 if __name__ == "__main__":

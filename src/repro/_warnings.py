@@ -1,0 +1,47 @@
+"""Process-wide once-only warnings for the deprecated entry points.
+
+The legacy ``fit()`` shims sit in repeated-fit loops (benchmarks, sweeps,
+notebooks re-running cells), where a per-call ``DeprecationWarning`` is
+pure noise — Python's default filter dedupes per *call site*, but ``-W``
+configs, pytest and ``simplefilter("always")`` users see every call. This
+helper guarantees at most one emission per key per process, independent of
+the active filter, while keeping ``stacklevel`` pointing at the caller of
+the deprecated function (not at this module).
+
+Tests that need to observe a warning again call :func:`reset`.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["reset", "warn_once"]
+
+_seen: set[str] = set()
+
+
+def warn_once(
+    key: str,
+    message: str,
+    category: type[Warning] = DeprecationWarning,
+    *,
+    stacklevel: int = 2,
+) -> None:
+    """Emit ``message`` at most once per process for this ``key``.
+
+    ``stacklevel`` counts from the *caller* of ``warn_once`` exactly like a
+    direct ``warnings.warn`` would: the shim passes ``stacklevel=2`` and the
+    warning points at the shim's caller.
+    """
+    if key in _seen:
+        return
+    _seen.add(key)
+    warnings.warn(message, category, stacklevel=stacklevel + 1)
+
+
+def reset(key: str | None = None) -> None:
+    """Forget emitted keys (all of them when ``key`` is None) — test hook."""
+    if key is None:
+        _seen.clear()
+    else:
+        _seen.discard(key)

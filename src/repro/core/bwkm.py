@@ -68,6 +68,8 @@ class BWKMConfig:
     init: str = "kmeans++"  # seeding strategy name (repro.api.inits registry)
     init_sample_size: int | None = None  # streaming first-pass sample rows;
     # None = engine default (in-core/distributed engines ignore it)
+    prune: bool | None = None  # drift-bound pruned Lloyd (ADR 0004);
+    # None = session default (REPRO_LLOYD_PRUNE, on unless set to 0)
 
     def resolve(self, n: int, d: int) -> dict[str, Any]:
         p = init_partition.default_params(n, self.k, d)
@@ -143,6 +145,7 @@ def fit_incore(
         res = lloyd.weighted_lloyd(
             reps, w, c,
             max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
+            prune=config.prune,
         )
         c = res.centroids
         distances += float(res.distances)
@@ -213,8 +216,15 @@ def fit(
     *,
     trace_centroids: bool = False,
 ) -> BWKMResult:
-    """Deprecated alias of :func:`fit_incore` — use ``repro.BWKM`` instead."""
-    warnings.warn(
+    """Deprecated alias of :func:`fit_incore` — use ``repro.BWKM`` instead.
+
+    Warns once per process (``repro._warnings``): repeated-fit loops hit
+    this shim per call and a per-call warning is pure noise.
+    """
+    from repro import _warnings
+
+    _warnings.warn_once(
+        "core.bwkm.fit",
         "core.bwkm.fit is deprecated; use repro.BWKM(...).fit(x) "
         "(engine='incore') or core.bwkm.fit_incore",
         DeprecationWarning,

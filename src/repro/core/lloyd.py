@@ -9,22 +9,45 @@ misassignment function (Definition 3) consumes: the paper stores "the two
 closest centroids to the representative" from the last weighted Lloyd
 iteration (Section 2.3).
 
-Every iteration is ONE data pass through ``kernels.ops.assign_update`` —
-the fused assign+accumulate kernel on the Pallas path — which yields the
-assignment, the top-2 distances, the weighted error, AND the cluster
-sums/counts under the current centroids. The next centroids are then a
-cheap elementwise divide of those statistics; no second pass over the
-points. This is the shared hot path of all three engines (the streaming
-driver folds the same op per chunk, the distributed driver per shard).
+Two execution modes share one contract (identical assignments, centroids,
+error trajectory — only cost differs):
+
+* **dense** — every iteration is ONE data pass through
+  ``kernels.ops.assign_update`` (the fused assign+accumulate kernel on the
+  Pallas path), which yields the assignment, the top-2 distances, the
+  weighted error, AND the cluster sums/counts under the current centroids.
+* **pruned** (default; ADR 0004) — per-row drift bounds persist across
+  iterations inside the ``while_loop``: an upper bound on the distance to
+  the own centroid and a lower bound on the distance to every other
+  centroid. After each centroid update the upper bound inflates by the own
+  centroid's drift and the lower bound deflates by the largest drift (the
+  second largest when the own centroid IS the arg-max — the Elkan-style
+  tightening from the per-centroid drift vector). Rows whose bounds still
+  separate provably keep their assignment and skip all K distance
+  computations; only "active" rows re-run the top-2 scan through
+  ``kernels.ops.assign_update_pruned``. Skipped rows' statistics
+  contribution rides the cached assignment through the SAME one-hot MXU
+  contraction (same accumulation order) the dense kernel runs, so the next
+  centroids are bit-identical to the dense path's whenever the assignments
+  agree, and the exact weighted error comes from the algebraic identity
+  ``E = Σ w‖x‖² − 2·Σ_k c_k·S_k + Σ_k ‖c_k‖²·N_k`` — so the Eq.-2 stopping
+  rule sees the same numbers the dense pass would produce. One dense
+  finishing pass at the final centroids recovers the exact top-2 distances
+  Definition 3 needs.
 
 Everything is a single jitted ``lax.while_loop`` with static shapes. The
-kernel implementation is resolved OUTSIDE jit and baked in as a static
-argument, so flipping ``ops.set_default_impl``/``REPRO_KERNEL_IMPL``
-between calls retraces instead of silently reusing the cached program.
+kernel implementation AND the prune flag are resolved OUTSIDE jit and baked
+in as static arguments, so flipping ``ops.set_default_impl`` /
+``set_default_prune`` (or passing ``impl=``/``prune=`` per call) between
+calls retraces instead of silently reusing the cached program. The
+``REPRO_KERNEL_IMPL`` / ``REPRO_LLOYD_PRUNE`` environment variables only
+seed those session defaults at import time — mutating ``os.environ``
+afterwards has no effect; use the setters.
 """
 
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import NamedTuple
 
@@ -33,7 +56,34 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-__all__ = ["LloydResult", "weighted_lloyd", "lloyd"]
+__all__ = [
+    "LloydResult",
+    "drift_bound_update",
+    "lloyd",
+    "resolve_prune",
+    "set_default_prune",
+    "stats_error",
+    "weighted_lloyd",
+    "weighted_lloyd_trace",
+]
+
+# "1"/"0" via REPRO_LLOYD_PRUNE; pruning is semantics-preserving, so it is
+# on by default — the dense path stays reachable for A/B runs and CI.
+_DEFAULT_PRUNE = os.environ.get("REPRO_LLOYD_PRUNE", "1").lower() not in (
+    "0", "false", "off",
+)
+
+
+def set_default_prune(flag: bool) -> None:
+    """Set the session default for drift-bound pruning (see module docs)."""
+    global _DEFAULT_PRUNE
+    _DEFAULT_PRUNE = bool(flag)
+
+
+def resolve_prune(prune: bool | None) -> bool:
+    """Resolve ``prune``/the session default to a concrete bool — OUTSIDE
+    jit, like ``ops.resolve_impl`` (the flag is a static jit argument)."""
+    return _DEFAULT_PRUNE if prune is None else bool(prune)
 
 
 class LloydResult(NamedTuple):
@@ -43,8 +93,8 @@ class LloydResult(NamedTuple):
     assign: jax.Array  # [n] i32, final assignment
     d1: jax.Array  # [n] f32, squared distance to closest centroid
     d2: jax.Array  # [n] f32, squared distance to second closest
-    distances: jax.Array  # scalar i64-ish f32: distance computations done
-    max_shift: jax.Array  # scalar f32: ||C - C'||_inf of the last update
+    distances: jax.Array  # scalar f32: distance computations done
+    max_shift: jax.Array  # scalar f32: max_k ‖c_k − c'_k‖ of the last update
 
 
 def _next_centroids(sums, counts, old_c):
@@ -52,6 +102,44 @@ def _next_centroids(sums, counts, old_c):
     return jnp.where(
         occupied[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], old_c
     )
+
+
+def drift_bound_update(
+    ub: jax.Array, lb: jax.Array, assign: jax.Array, drift: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Hamerly-style bound maintenance from a per-centroid drift vector.
+
+    ``ub [n]`` upper-bounds each row's distance to its cached centroid,
+    ``lb [n]`` lower-bounds its distance to every OTHER centroid, ``drift
+    [K]`` is ``‖c'_k − c_k‖``. The upper bound inflates by the own
+    centroid's drift; the lower bound deflates by ``max_{k≠a} drift_k``,
+    evaluated per row as the global max drift — or the second largest when
+    the row's own centroid is the arg-max (the Elkan-style tightening: the
+    one centroid excluded from "every other" is exactly the row's own).
+    A row with ``ub' < lb'`` provably keeps its argmin (DESIGN.md §11).
+    """
+    k = drift.shape[0]
+    dmax = jnp.max(drift)
+    amax = jnp.argmax(drift)
+    d2nd = jnp.max(jnp.where(jnp.arange(k) == amax, -jnp.inf, drift))
+    ub_new = ub + drift[assign]
+    lb_new = lb - jnp.where(assign == amax, d2nd, dmax)
+    return ub_new, lb_new
+
+
+def stats_error(
+    w2sum: jax.Array, c: jax.Array, sums: jax.Array, counts: jax.Array
+) -> jax.Array:
+    """Exact weighted error from sufficient statistics:
+    ``E = Σ w‖x‖² − 2·Σ_k c_k·S_k + Σ_k ‖c_k‖²·N_k`` where ``S/N`` are the
+    weighted cluster sums/counts under the CURRENT assignment and ``c`` the
+    centroids the assignment was made against. This is how the pruned path
+    sees the same error the dense kernel reduces row-by-row — no per-row
+    work, O(K·d)."""
+    c = c.astype(jnp.float32)
+    cross = jnp.sum(c * sums)
+    cn = jnp.sum(c * c, axis=-1)
+    return jnp.maximum(w2sum - 2.0 * cross + jnp.sum(cn * counts), 0.0)
 
 
 def weighted_lloyd(
@@ -62,6 +150,7 @@ def weighted_lloyd(
     max_iters: int = 100,
     epsilon: float = 1e-4,
     impl: str | None = None,
+    prune: bool | None = None,
 ) -> LloydResult:
     """Weighted Lloyd iterations with the Eq.-2 stopping rule.
 
@@ -69,18 +158,36 @@ def weighted_lloyd(
     (zero-weight rows are inert), ``init_centroids [K,d]``.
 
     The stopping rule compares *relative* weighted-error change against
-    ``epsilon`` (|E - E'| <= epsilon · E), the practical form of Eq. 2; the
-    distance counter charges ``active_points · K`` per assignment step, the
-    unit the paper reports (Section 3). ``impl`` selects the kernel
-    implementation (``None`` = session default).
+    ``epsilon`` (|E - E'| <= epsilon · E). ``impl`` selects the kernel
+    implementation and ``prune`` the drift-bound pruned iteration (``None``
+    = session defaults). ``LloydResult.distances`` is the kernel-reported
+    distance-computation count, the unit the paper reports (Section 3):
+    ``active_rows · K`` per pass — with pruning, rows whose bounds hold are
+    not charged, and the count includes the one dense finishing pass that
+    recovers the exact top-2 distances.
     """
     return _weighted_lloyd(
         x, w, init_centroids,
-        max_iters=max_iters, epsilon=epsilon, impl=ops.resolve_impl(impl),
+        max_iters=max_iters, epsilon=epsilon,
+        impl=ops.resolve_impl(impl), prune=resolve_prune(prune),
     )
 
 
-@partial(jax.jit, static_argnames=("max_iters", "impl"))
+class _State(NamedTuple):
+    c: jax.Array
+    err: jax.Array
+    prev_err: jax.Array
+    assign: jax.Array
+    d1: jax.Array  # dense: exact; pruned: ub (Euclidean, not squared)
+    d2: jax.Array  # dense: exact; pruned: lb (Euclidean, not squared)
+    sums: jax.Array
+    counts: jax.Array
+    it: jax.Array
+    dists: jax.Array
+    max_shift: jax.Array
+
+
+@partial(jax.jit, static_argnames=("max_iters", "impl", "prune"))
 def _weighted_lloyd(
     x: jax.Array,
     w: jax.Array,
@@ -89,66 +196,79 @@ def _weighted_lloyd(
     max_iters: int,
     epsilon: float,
     impl: str,
+    prune: bool,
 ) -> LloydResult:
-    k = init_centroids.shape[0]
     w = w.astype(jnp.float32)
-    n_active = jnp.sum((w > 0).astype(jnp.float32))
 
-    def step(c):
-        return ops.assign_update(x, w, c, impl=impl)
+    fu = ops.assign_update(x, w, init_centroids, impl=impl)
+    if prune:
+        # Per-row bound state seeds from the exact initial top-2; the error
+        # identity needs Σ w‖x‖² once (no distance computations involved).
+        w2sum = jnp.sum(w * jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))
+        row1 = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
+        row2 = jnp.sqrt(jnp.maximum(fu.d2, 0.0))  # inf for K == 1
+    else:
+        row1, row2 = fu.d1, fu.d2
 
-    fu = step(init_centroids)
-
-    class State(NamedTuple):
-        c: jax.Array
-        err: jax.Array
-        prev_err: jax.Array
-        assign: jax.Array
-        d1: jax.Array
-        d2: jax.Array
-        sums: jax.Array
-        counts: jax.Array
-        it: jax.Array
-        dists: jax.Array
-        max_shift: jax.Array
-
-    init = State(
+    init = _State(
         init_centroids,
         fu.err,
         jnp.asarray(jnp.inf, jnp.float32),
         fu.assign,
-        fu.d1,
-        fu.d2,
+        row1,
+        row2,
         fu.sums,
         fu.counts,
         jnp.asarray(0, jnp.int32),
-        n_active * k,  # the initial assignment above
+        fu.n_dist,
         jnp.asarray(jnp.inf, jnp.float32),
     )
 
-    def cond(s: State):
+    def cond(s: _State):
         rel_gap = jnp.abs(s.prev_err - s.err) > epsilon * jnp.maximum(s.err, 1e-30)
         return (s.it < max_iters) & rel_gap
 
-    def body(s: State):
+    def dense_body(s: _State):
         c_new = _next_centroids(s.sums, s.counts, s.c)
-        fu = step(c_new)
+        fu = ops.assign_update(x, w, c_new, impl=impl)
         shift = jnp.max(jnp.linalg.norm(c_new - s.c, axis=-1))
-        return State(
-            c_new,
-            fu.err,
-            s.err,
-            fu.assign,
-            fu.d1,
-            fu.d2,
-            fu.sums,
-            fu.counts,
-            s.it + 1,
-            s.dists + n_active * k,
-            shift,
+        return _State(
+            c_new, fu.err, s.err, fu.assign, fu.d1, fu.d2, fu.sums, fu.counts,
+            s.it + 1, s.dists + fu.n_dist, shift,
         )
 
-    s = jax.lax.while_loop(cond, body, init)
+    def pruned_body(s: _State):
+        c_new = _next_centroids(s.sums, s.counts, s.c)
+        drift = jnp.linalg.norm(c_new - s.c, axis=-1)  # [K]
+        ub, lb = drift_bound_update(s.d1, s.d2, s.assign, drift)
+        active = ub >= lb  # strict skip: ub < lb ⇒ argmin provably unique
+        fu = ops.assign_update_pruned(x, w, c_new, s.assign, active, impl=impl)
+        err = stats_error(w2sum, c_new, fu.sums, fu.counts)
+        ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
+        lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
+        return _State(
+            c_new, err, s.err, fu.assign, ub, lb, fu.sums, fu.counts,
+            s.it + 1, s.dists + fu.n_dist, jnp.max(drift),
+        )
+
+    s = jax.lax.while_loop(cond, pruned_body if prune else dense_body, init)
+
+    if prune:
+        # One dense finishing pass: the loop's d1/d2 are bounds, but the
+        # misassignment function (Definition 3) needs the exact top-2 at
+        # the final centroids — the same numbers the dense path's last
+        # in-loop pass produced.
+        fin = ops.assign_update(x, w, s.c, impl=impl)
+        return LloydResult(
+            centroids=s.c,
+            error=fin.err,
+            iters=s.it,
+            assign=fin.assign,
+            d1=fin.d1,
+            d2=fin.d2,
+            distances=s.dists + fin.n_dist,
+            max_shift=s.max_shift,
+        )
     return LloydResult(
         centroids=s.c,
         error=s.err,
@@ -161,6 +281,102 @@ def _weighted_lloyd(
     )
 
 
+def weighted_lloyd_trace(
+    x: jax.Array,
+    w: jax.Array,
+    init_centroids: jax.Array,
+    *,
+    max_iters: int = 100,
+    epsilon: float = 1e-4,
+    impl: str | None = None,
+    prune: bool | None = None,
+) -> tuple[LloydResult, list[dict]]:
+    """Eager mirror of :func:`weighted_lloyd` that records per-iteration
+    cost telemetry: ``(result, trace)`` where each trace row carries
+    ``iteration, active_rows, rows, pruned_fraction, n_dist, error``.
+
+    Runs the SAME ops/bound helpers as the jitted ``while_loop`` (one
+    Python-level iteration per Lloyd step), so the counts it reports are
+    the counts the jitted path pays — this is what ``bench_lloyd`` and the
+    roofline section of BENCHMARKS.md consume. Not a hot path: use
+    :func:`weighted_lloyd` unless you need the trajectory.
+    """
+    impl = ops.resolve_impl(impl)
+    prune = resolve_prune(prune)
+    w = jnp.asarray(w, jnp.float32)
+    n = x.shape[0]
+    n_rows = int(jnp.sum(w > 0))
+
+    fu = ops.assign_update(x, w, init_centroids, impl=impl)
+    c = init_centroids
+    err, prev_err = fu.err, jnp.inf
+    assign, sums, counts = fu.assign, fu.sums, fu.counts
+    dists = float(fu.n_dist)
+    w2sum = jnp.sum(w * jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))
+    ub = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
+    lb = jnp.sqrt(jnp.maximum(fu.d2, 0.0))
+    d1, d2 = fu.d1, fu.d2
+    max_shift = jnp.inf
+
+    trace = [{
+        "iteration": 0, "active_rows": n_rows, "rows": n_rows,
+        "pruned_fraction": 0.0, "n_dist": float(fu.n_dist),
+        "error": float(err),
+    }]
+    it = 0
+    while it < max_iters and abs(float(prev_err) - float(err)) > (
+        epsilon * max(float(err), 1e-30)
+    ):
+        c_new = _next_centroids(sums, counts, c)
+        drift = jnp.linalg.norm(c_new - c, axis=-1)
+        max_shift = float(jnp.max(drift))
+        if prune:
+            ub, lb = drift_bound_update(ub, lb, assign, drift)
+            active = ub >= lb
+            fu = ops.assign_update_pruned(x, w, c_new, assign, active, impl=impl)
+            sums, counts = fu.sums, fu.counts
+            prev_err, err = err, stats_error(w2sum, c_new, sums, counts)
+            ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
+            lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
+            n_active = int(jnp.sum(active & (w > 0)))
+        else:
+            fu = ops.assign_update(x, w, c_new, impl=impl)
+            sums, counts = fu.sums, fu.counts
+            prev_err, err = err, fu.err
+            d1, d2 = fu.d1, fu.d2
+            n_active = n_rows
+        assign = fu.assign
+        c = c_new
+        dists += float(fu.n_dist)
+        it += 1
+        trace.append({
+            "iteration": it, "active_rows": n_active, "rows": n_rows,
+            "pruned_fraction": 1.0 - n_active / max(n_rows, 1),
+            "n_dist": float(fu.n_dist), "error": float(err),
+        })
+
+    if prune:
+        fin = ops.assign_update(x, w, c, impl=impl)
+        dists += float(fin.n_dist)
+        err, assign, d1, d2 = fin.err, fin.assign, fin.d1, fin.d2
+        trace.append({
+            "iteration": it, "active_rows": n_rows, "rows": n_rows,
+            "pruned_fraction": 0.0, "n_dist": float(fin.n_dist),
+            "error": float(err), "finishing_pass": True,
+        })
+    result = LloydResult(
+        centroids=c,
+        error=jnp.asarray(err, jnp.float32),
+        iters=jnp.asarray(it, jnp.int32),
+        assign=assign,
+        d1=d1,
+        d2=d2,
+        distances=jnp.asarray(dists, jnp.float32),
+        max_shift=jnp.asarray(max_shift, jnp.float32),
+    )
+    return result, trace
+
+
 def lloyd(
     x: jax.Array,
     init_centroids: jax.Array,
@@ -168,6 +384,7 @@ def lloyd(
     max_iters: int = 100,
     epsilon: float = 1e-4,
     impl: str | None = None,
+    prune: bool | None = None,
 ) -> LloydResult:
     """Plain (unweighted) Lloyd — the baseline algorithms' refinement stage."""
     return weighted_lloyd(
@@ -177,4 +394,5 @@ def lloyd(
         max_iters=max_iters,
         epsilon=epsilon,
         impl=impl,
+        prune=prune,
     )

@@ -24,14 +24,15 @@ mesh shape → elastic restart).
 
 from __future__ import annotations
 
-import warnings
 from functools import partial
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bwkm as core_bwkm
+from repro.core import lloyd as lloyd_mod
 from repro.core import misassignment as mis
 from repro.core import partition as part_mod
 from repro.core.lloyd import weighted_lloyd
@@ -39,7 +40,8 @@ from repro.core.partition import Partition
 from repro.distributed import sharding as sh
 
 __all__ = ["shard_points", "dist_recompute_stats", "dist_route_points",
-           "dist_assign_step", "fit", "fit_distributed"]
+           "dist_assign_step", "dist_lloyd", "DistLloydResult",
+           "fit", "fit_distributed"]
 
 _BIG = 3.0e38
 
@@ -174,6 +176,149 @@ def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
     return new_c, err
 
 
+# ---------------------------------------- pruned distributed Lloyd (ADR 0004)
+def _dense_full_body(x_loc, c, w_loc, *, impl):
+    """Seeding pass for :func:`dist_lloyd`: the fused dense pass plus the
+    per-shard bound state (sqrt of the exact top-2) and the Σ w‖x‖² term of
+    the algebraic error identity. Stats/err/w2/n_dist psum; per-row state
+    stays shard-local."""
+    from repro.kernels import ops
+
+    fu = ops.assign_update(x_loc, w_loc, c, impl=impl)
+    axes = _data_axes()
+    w2 = jnp.sum(w_loc * jnp.sum(x_loc.astype(jnp.float32) ** 2, axis=-1))
+    return (
+        jax.lax.psum(fu.sums, axes),
+        jax.lax.psum(fu.counts, axes),
+        jax.lax.psum(fu.err, axes),
+        jax.lax.psum(fu.n_dist, axes),
+        jax.lax.psum(w2, axes),
+        fu.assign,
+        jnp.sqrt(jnp.maximum(fu.d1, 0.0)),
+        jnp.sqrt(jnp.maximum(fu.d2, 0.0)),
+    )
+
+
+def _pruned_body(x_loc, c_new, w_loc, a_loc, ub_loc, lb_loc, drift, *, impl):
+    """One pruned Lloyd iteration per shard: the drift vector arrives
+    replicated (it derives from the psum'd statistics, so every shard
+    computes the identical centroids and drift), bounds update locally,
+    only unsettled rows rescan, and the composed-assignment statistics
+    psum back — points never leave their shard, per-iteration traffic stays
+    O(K·d)."""
+    from repro.kernels import ops
+
+    ub, lb = lloyd_mod.drift_bound_update(ub_loc, lb_loc, a_loc, drift)
+    active = ub >= lb
+    fu = ops.assign_update_pruned(x_loc, w_loc, c_new, a_loc, active, impl=impl)
+    ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
+    lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
+    axes = _data_axes()
+    return (
+        jax.lax.psum(fu.sums, axes),
+        jax.lax.psum(fu.counts, axes),
+        jax.lax.psum(fu.n_dist, axes),
+        fu.assign,
+        ub,
+        lb,
+    )
+
+
+class DistLloydResult(NamedTuple):
+    centroids: jax.Array  # [K, d] replicated
+    error: float  # exact weighted error at the final centroids
+    iters: int
+    distances: float  # kernel-reported, summed over shards
+
+
+def dist_lloyd(
+    x: jax.Array,
+    c: jax.Array,
+    *,
+    w: jax.Array | None = None,
+    max_iters: int = 50,
+    epsilon: float = 1e-4,
+    impl: str | None = None,
+    prune: bool | None = None,
+) -> DistLloydResult:
+    """Full-dataset distributed Lloyd with drift-bound pruning (ADR 0004).
+
+    The sharded analogue of ``core.lloyd.weighted_lloyd``'s pruned loop:
+    per-row (assignment, upper, lower) bound state lives sharded alongside
+    the points across iterations, the drift vector is replicated for free
+    (centroids are computed from psum'd statistics), and each iteration
+    psums the composed-assignment statistics plus the kernel-reported
+    distance count. ``prune=False`` degrades to iterated
+    :func:`dist_assign_step` semantics.
+    """
+    from repro.kernels import ops
+
+    mesh = sh.current_mesh()
+    n, d = x.shape
+    k = c.shape[0]
+    impl = ops.resolve_impl(impl)
+    prune = lloyd_mod.resolve_prune(prune)
+    w = jnp.ones(n, jnp.float32) if w is None else w.astype(jnp.float32)
+
+    row_spec = sh.logical_to_spec(("batch", None), (n, d))
+    vec_spec = sh.logical_to_spec(("batch",), (n,))
+
+    if mesh is None:
+        seed = partial(_dense_full_body, impl=impl)
+        step = partial(_pruned_body, impl=impl)
+        dense_step = partial(_assign_body, impl=impl)
+    else:
+        seed = sh.shard_map(
+            partial(_dense_full_body, impl=impl),
+            mesh=mesh,
+            in_specs=(row_spec, P(None, None), vec_spec),
+            out_specs=(P(None, None), P(None), P(), P(), P(),
+                       vec_spec, vec_spec, vec_spec),
+            check_vma=False,
+        )
+        step = sh.shard_map(
+            partial(_pruned_body, impl=impl),
+            mesh=mesh,
+            in_specs=(row_spec, P(None, None), vec_spec, vec_spec, vec_spec,
+                      vec_spec, P(None)),
+            out_specs=(P(None, None), P(None), P(), vec_spec, vec_spec,
+                       vec_spec),
+            check_vma=False,
+        )
+        dense_step = sh.shard_map(
+            partial(_assign_body, impl=impl),
+            mesh=mesh,
+            in_specs=(row_spec, P(None, None), vec_spec),
+            out_specs=(P(None, None), P(None), P(), vec_spec),
+            check_vma=False,
+        )
+
+    sums, counts, err, n_dist, w2sum, assign, ub, lb = seed(x, c, w)
+    distances = float(n_dist)
+    prev_err = jnp.inf
+    it = 0
+    while it < max_iters and abs(float(prev_err) - float(err)) > (
+        epsilon * max(float(err), 1e-30)
+    ):
+        c_new = lloyd_mod._next_centroids(sums, counts, c)
+        drift = jnp.linalg.norm(c_new - c, axis=-1)
+        if prune:
+            sums, counts, n_dist, assign, ub, lb = step(
+                x, c_new, w, assign, ub, lb, drift
+            )
+        else:
+            sums, counts, _, assign = dense_step(x, c_new, w)
+            n_dist = jnp.sum((w > 0).astype(jnp.float32)) * k
+        c = c_new
+        prev_err, err = err, lloyd_mod.stats_error(w2sum, c_new, sums, counts)
+        distances += float(n_dist)
+        it += 1
+
+    return DistLloydResult(
+        centroids=c, error=float(err), iters=it, distances=distances
+    )
+
+
 # ------------------------------------------------------------------ driver
 def fit_distributed(
     key: jax.Array,
@@ -225,7 +370,8 @@ def fit_distributed(
     it = 0
     for it in range(1, config.max_iters + 1):
         res = weighted_lloyd(
-            reps, w, c, max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon
+            reps, w, c, max_iters=config.lloyd_max_iters,
+            epsilon=config.lloyd_epsilon, prune=config.prune,
         )
         c = res.centroids
         distances += float(res.distances)
@@ -283,8 +429,14 @@ def fit(
     *,
     checkpoint_dir: str | None = None,
 ) -> core_bwkm.BWKMResult:
-    """Deprecated alias of :func:`fit_distributed` — use ``repro.BWKM``."""
-    warnings.warn(
+    """Deprecated alias of :func:`fit_distributed` — use ``repro.BWKM``.
+
+    Warns once per process (``repro._warnings``).
+    """
+    from repro import _warnings
+
+    _warnings.warn_once(
+        "distributed.dist_bwkm.fit",
         "distributed.dist_bwkm.fit is deprecated; use repro.BWKM(...) "
         "(engine='distributed') or fit_distributed",
         DeprecationWarning,

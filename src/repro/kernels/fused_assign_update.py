@@ -45,7 +45,11 @@ from jax.experimental import pallas as pl
 from repro.kernels._compat import compiler_params
 from repro.roofline import analysis
 
-__all__ = ["fused_assign_update_pallas", "fused_supported"]
+__all__ = [
+    "fused_assign_update_pallas",
+    "fused_assign_update_pruned_pallas",
+    "fused_supported",
+]
 
 _BIG = 3.0e38  # python float: pallas kernels must not capture traced constants
 
@@ -197,3 +201,186 @@ def fused_assign_update_pallas(
     d2 = d2[:n, 0]
     d2 = jnp.where(d2 >= _BIG, inf, d2)  # K == 1: no second centroid
     return assign[:n, 0], d1, d2, sums[:k, :d], counts[:k, 0], err[0, 0]
+
+
+def _pruned_kernel(
+    x_ref,
+    w_ref,
+    cached_ref,
+    act_ref,
+    flag_ref,
+    c_ref,
+    assign_ref,
+    d1_ref,
+    d2_ref,
+    sums_ref,
+    counts_ref,
+    err_ref,
+    *,
+    k_actual: int,
+    bk: int,
+    nk: int,
+):
+    """Drift-bound-pruned variant of ``_kernel`` (ADR 0004).
+
+    ``cached_ref [bn, 1]`` holds the previous assignment, ``act_ref [bn, 1]``
+    the per-row active mask, and ``flag_ref [1, 1]`` the precomputed
+    any-active flag of the whole row block. A fully skipped block runs NO
+    distance work — its rows keep the cached assignment — but every block
+    still folds its weighted one-hot statistics contraction with the
+    composed assignment, in the identical order the dense kernel uses, so
+    the accumulated sums/counts (and hence the next centroids) are
+    bit-identical to a dense pass whenever the assignments agree. Pruning
+    therefore cuts the distance FLOPs (the paper's cost metric), not the
+    HBM traffic: x is read once per iteration either way (see
+    ``analysis.assign_update_pruned_cost``).
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init_row_block():
+        assign_ref[...] = cached_ref[...]
+        d1_ref[...] = jnp.full_like(d1_ref, _BIG)
+        d2_ref[...] = jnp.full_like(d2_ref, _BIG)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_accumulators():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        err_ref[...] = jnp.zeros_like(err_ref)
+
+    blk_active = flag_ref[0, 0] > 0
+    xb = x_ref[...].astype(jnp.float32)  # [bn, dp]
+
+    @pl.when(blk_active)
+    def _distance_tile():
+        # Identical to the dense kernel's top-2 merge; rows in an active
+        # block that are themselves inactive get a recomputed argmin too
+        # (bound soundness guarantees it equals the cache), and the final
+        # compose below masks them back anyway.
+        cb = c_ref[...].astype(jnp.float32)  # [bk, dp]
+        xn = jnp.sum(xb * xb, axis=-1, keepdims=True)
+        cn = jnp.sum(cb * cb, axis=-1)
+        dots = jax.lax.dot_general(
+            xb, cb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        dist = jnp.maximum(xn - 2.0 * dots + cn[None, :], 0.0)
+        col = j * bk + jax.lax.broadcasted_iota(jnp.int32, dist.shape, 1)
+        dist = jnp.where(col < k_actual, dist, _BIG)
+        m1 = jnp.min(dist, axis=1, keepdims=True)
+        a1 = jnp.min(
+            jnp.where(dist == m1, col, jnp.int32(2**30)), axis=1, keepdims=True
+        )
+        dist_wo = jnp.where(col == a1, _BIG, dist)
+        m2 = jnp.min(dist_wo, axis=1, keepdims=True)
+        r1, r2, ra = d1_ref[...], d2_ref[...], assign_ref[...]
+        # j == 0 overwrites the cached-assignment init with the first tile's
+        # argmin so stale cache ids can never win the merge on active rows.
+        first = j == 0
+        d1_ref[...] = jnp.minimum(r1, m1)
+        d2_ref[...] = jnp.minimum(jnp.maximum(r1, m1), jnp.minimum(r2, m2))
+        assign_ref[...] = jnp.where(first | (m1 < r1), a1, ra)
+
+    @pl.when(j == nk - 1)
+    def _accumulate_block_stats():
+        act = act_ref[...] > 0  # [bn, 1]
+        final = jnp.where(act, assign_ref[...], cached_ref[...])
+        assign_ref[...] = final
+        wb = w_ref[...].astype(jnp.float32)  # [bn, 1]
+        kp = sums_ref.shape[0]
+        onehot = (
+            final == jax.lax.broadcasted_iota(jnp.int32, (xb.shape[0], kp), 1)
+        ).astype(jnp.float32) * wb  # [bn, kp] weighted one-hot, in-registers
+        sums_ref[...] += jax.lax.dot_general(
+            onehot, xb, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [kp, dp] via MXU — identical contraction to the dense kernel
+        counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).T
+        err_ref[0, 0] += jnp.sum(jnp.where(act, wb * d1_ref[...], 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "bn", "bk"))
+def fused_assign_update_pruned_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    assign: jax.Array,
+    active: jax.Array,
+    *,
+    interpret: bool = False,
+    bn: int | None = None,
+    bk: int = 128,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Single-pass ``ref.assign_update_pruned``:
+    ``(assign, d1, d2, dsums, dcounts, err)``.
+
+    ``assign [n] i32`` cached assignments, ``active [n]`` bool/int mask of
+    rows whose drift bounds could not prove the assignment unchanged.
+    ``d1``/``d2``/``err`` are defined only where active (see the ref
+    oracle); sums/counts are FULL statistics under the composed assignment,
+    accumulated in the dense kernel's order — see the kernel docstring.
+    """
+    n, d = x.shape
+    k = c.shape[0]
+
+    blk = analysis.assign_update_blocking(d, k, bn=bn, bk=bk)
+    if not blk["fused_ok"]:
+        raise ValueError(
+            f"[K={k}, d={d}] accumulator exceeds the kernel VMEM budget; "
+            "use the two-pass path (ops.assign_update_pruned falls back "
+            "automatically)"
+        )
+    bn, dp, kp_acc, kp_dist = blk["bn"], blk["dp"], blk["kp_acc"], blk["kp_dist"]
+    np_ = pl.cdiv(n, bn) * bn
+    nk = kp_dist // bk
+
+    xpad = jnp.pad(x, ((0, np_ - n), (0, dp - d)))
+    wpad = jnp.pad(w.astype(jnp.float32), (0, np_ - n))[:, None]
+    apad = jnp.pad(assign.astype(jnp.int32), (0, np_ - n))[:, None]
+    # padding rows are never active: they keep cached id 0 with weight 0
+    actpad = jnp.pad(active.astype(jnp.int32), (0, np_ - n))[:, None]
+    flags = (
+        jnp.max(actpad.reshape(np_ // bn, bn), axis=1, keepdims=True)
+    ).astype(jnp.int32)  # [n_blocks, 1] any-active per row block
+    cpad = jnp.pad(c, ((0, kp_dist - k), (0, dp - d)))
+
+    grid = (np_ // bn, nk)
+    assign_o, d1, d2, sums, counts, err = pl.pallas_call(
+        functools.partial(_pruned_kernel, k_actual=k, bk=bk, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, dp), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp_acc, dp), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp_acc, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, 1), jnp.int32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((np_, 1), jnp.float32),
+            jax.ShapeDtypeStruct((kp_acc, dp), jnp.float32),
+            jax.ShapeDtypeStruct((kp_acc, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        compiler_params=compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(xpad, wpad, apad, actpad, flags, cpad)
+
+    inf = jnp.float32(jnp.inf)
+    d1 = d1[:n, 0]
+    d2 = d2[:n, 0]
+    d2 = jnp.where(d2 >= _BIG, inf, d2)  # K == 1 / skipped rows: no second
+    return assign_o[:n, 0], d1, d2, sums[:k, :d], counts[:k, 0], err[0, 0]

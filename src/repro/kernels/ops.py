@@ -15,14 +15,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ref import AssignUpdate
+from repro.kernels.ref import AssignUpdate, PrunedAssignUpdate
 
 __all__ = [
     "AssignUpdate",
+    "PrunedAssignUpdate",
     "assign_top2",
     "assign_top2_chunk",
     "assign_update",
     "assign_update_chunk",
+    "assign_update_pruned",
+    "assign_update_pruned_chunk",
     "cluster_sums",
     "pairwise_sqdist_chunk",
     "pallas_available",
@@ -167,9 +170,25 @@ def assign_update(
     otherwise it degrades to the two-pass composition (Pallas top-2 kernel +
     the XLA segment-sum update), which is also the ``ref`` semantics.
     Zero-weight rows are inert in sums/counts/err.
+
+    ``n_dist`` on the result is the pass's distance-computation count in
+    the paper's unit — ``active_points · K`` with ``active = w > 0`` — and
+    is the same number for every ``impl`` (it accounts what the algorithm
+    *requires*, so ``FitResult.distances`` can't drift with kernel choice).
     """
-    if _resolve(impl) == "pallas":
-        from repro.kernels import cluster_update, distance_assign, fused_assign_update
+    out = _assign_update_impl(x, w, c, impl=_resolve(impl))
+    return out._replace(n_dist=_dense_dist_count(w, c.shape[0]))
+
+
+def _dense_dist_count(w: jax.Array, k: int) -> jax.Array:
+    return jnp.sum((w > 0).astype(jnp.float32)) * k
+
+
+def _assign_update_impl(
+    x: jax.Array, w: jax.Array, c: jax.Array, *, impl: str
+) -> AssignUpdate:
+    if impl == "pallas":
+        from repro.kernels import distance_assign, fused_assign_update
 
         k, d = c.shape
         interpret = jax.default_backend() != "tpu"
@@ -187,16 +206,108 @@ def assign_update(
         assign, d1, d2 = distance_assign.assign_top2_pallas(
             x, c, interpret=interpret
         )
-        kp, dp = -(-k // 8) * 8, -(-d // 128) * 128
-        if kp * dp * 4 <= 8 * 1024 * 1024:  # cluster_sums_pallas's own bound
-            sums, counts = cluster_update.cluster_sums_pallas(
-                x, w, assign, k, interpret=interpret
-            )
-        else:
-            sums, counts = ref.cluster_sums(x, w, assign, k)
+        sums, counts = _two_pass_cluster_sums(x, w, assign, k, interpret)
         err = jnp.sum(w.astype(jnp.float32) * d1)
         return AssignUpdate(assign, d1, d2, sums, counts, err)
     return ref.assign_update(x, w, c)
+
+
+def _two_pass_cluster_sums(x, w, assign, k, interpret):
+    """The two-pass fallback's update stage, shared by the dense and pruned
+    paths so their kernel selection can never diverge: the one-hot Pallas
+    kernel while its [K, d] block fits its own 8 MB bound, XLA segment-sum
+    beyond."""
+    from repro.kernels import cluster_update
+
+    d = x.shape[1]
+    kp, dp = -(-k // 8) * 8, -(-d // 128) * 128
+    if kp * dp * 4 <= 8 * 1024 * 1024:  # cluster_sums_pallas's own bound
+        return cluster_update.cluster_sums_pallas(
+            x, w, assign, k, interpret=interpret
+        )
+    return ref.cluster_sums(x, w, assign, k)
+
+
+def assign_update_pruned(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    assign: jax.Array,
+    active: jax.Array,
+    *,
+    impl: str | None = None,
+) -> PrunedAssignUpdate:
+    """One drift-bound-pruned weighted Lloyd pass (ADR 0004).
+
+    ``assign`` is the cached assignment, ``active`` the mask of rows whose
+    bounds could not prove it unchanged. Statistics are FULL sums/counts
+    under the composed assignment, produced by the same accumulation (same
+    order) as :func:`assign_update` — pruned centroids are bit-identical to
+    dense ones whenever the assignments agree. ``d1``/``d2``/``err`` are
+    defined only where active.
+
+    ``n_dist`` charges ``K`` distance evaluations per *active* row with
+    ``w > 0`` — the count a faithful row-level implementation needs, and
+    (deliberately) the same number for every ``impl``: the ref oracle is
+    vectorized-dense and the Pallas kernel skips at row-block granularity,
+    but the algorithmic cost the paper reports is per-row.
+    """
+    n_dist = (
+        jnp.sum((active.astype(bool) & (w > 0)).astype(jnp.float32)) * c.shape[0]
+    )
+    if _resolve(impl) == "pallas":
+        from repro.kernels import fused_assign_update
+
+        k, d = c.shape
+        interpret = jax.default_backend() != "tpu"
+        if fused_assign_update.fused_supported(d, k):
+            out = PrunedAssignUpdate(
+                *fused_assign_update.fused_assign_update_pruned_pallas(
+                    x, w, c, assign, active, interpret=interpret
+                )
+            )
+            return out._replace(n_dist=n_dist)
+        # Two-pass fallback: dense Pallas top-2 for the assignment, full
+        # statistics under the composed assignment through the SAME update
+        # dispatch as the dense fallback (shared helper — the two paths'
+        # kernel selection cannot diverge).
+        from repro.kernels import distance_assign
+
+        a_new, d1, d2 = distance_assign.assign_top2_pallas(
+            x, c, interpret=interpret
+        )
+        w32 = w.astype(jnp.float32)
+        a = jnp.where(active.astype(bool), a_new, assign)
+        sums, counts = _two_pass_cluster_sums(x, w, a, k, interpret)
+        err = jnp.sum(jnp.where(active.astype(bool), w32 * d1, 0.0))
+        return PrunedAssignUpdate(a, d1, d2, sums, counts, err, n_dist)
+    out = ref.assign_update_pruned(x, w, c, assign, active)
+    return out._replace(n_dist=n_dist)
+
+
+def assign_update_pruned_chunk(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    assign: jax.Array,
+    active: jax.Array,
+    *,
+    chunk_size: int,
+    impl: str | None = None,
+) -> PrunedAssignUpdate:
+    """Chunk-shaped :func:`assign_update_pruned` for streaming passes.
+
+    Padding contract of :func:`assign_update_chunk` plus: padding rows are
+    never active and carry weight 0 and cached id 0, so they are inert in
+    the statistics deltas and the per-row outputs slice back to ``n``.
+    """
+    n, x = _pad_to_chunk(x, chunk_size)
+    pad = chunk_size - n
+    w = jnp.pad(w.astype(jnp.float32), (0, pad))
+    assign = jnp.pad(assign.astype(jnp.int32), (0, pad))
+    active = jnp.pad(active.astype(bool), (0, pad))
+    out = assign_update_pruned(x, w, c, assign, active, impl=impl)
+    return out._replace(assign=out.assign[:n], d1=out.d1[:n], d2=out.d2[:n])
 
 
 def assign_update_chunk(
@@ -218,6 +329,4 @@ def assign_update_chunk(
     n, x = _pad_to_chunk(x, chunk_size)
     w = jnp.pad(w.astype(jnp.float32), (0, chunk_size - n))
     out = assign_update(x, w, c, impl=impl)
-    return AssignUpdate(
-        out.assign[:n], out.d1[:n], out.d2[:n], out.sums, out.counts, out.err
-    )
+    return out._replace(assign=out.assign[:n], d1=out.d1[:n], d2=out.d2[:n])

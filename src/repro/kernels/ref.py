@@ -19,9 +19,11 @@ import jax.numpy as jnp
 
 __all__ = [
     "AssignUpdate",
+    "PrunedAssignUpdate",
     "pairwise_sqdist",
     "assign_top2",
     "assign_update",
+    "assign_update_pruned",
     "cluster_sums",
     "weighted_error",
 ]
@@ -39,6 +41,36 @@ class AssignUpdate(NamedTuple):
     sums: jax.Array  # [K, d] f32, Σ 1[assign==k]·w·x
     counts: jax.Array  # [K] f32, Σ 1[assign==k]·w
     err: jax.Array  # scalar f32, Σ w·d1 (the weighted error E^P)
+    n_dist: jax.Array | None = None  # scalar f32: point-centroid distance
+    # evaluations this pass REQUIRED (the paper's cost unit, Section 3).
+    # Filled by the ops layer — identical across impls by construction, so
+    # `FitResult.distances` doesn't depend on which kernel ran.
+
+
+class PrunedAssignUpdate(NamedTuple):
+    """One drift-bound-pruned weighted Lloyd pass (ADR 0004).
+
+    The cluster statistics are FULL sums/counts under the composed
+    assignment (argmin where ``active``, cached elsewhere), accumulated by
+    the exact same one-hot contraction — in the same order — as the dense
+    kernel, so pruning can never move the next centroids by even an ulp:
+    skipped rows' contribution rides the cached assignment, only active
+    rows pay the top-2 scan.
+
+    ``d1``/``d2``/``err`` are defined ONLY where ``active`` was set — for
+    skipped rows the caller owns tighter information (its drift-inflated
+    bounds) and the kernel is free to leave garbage there (``err`` is the
+    partial ``Σ_active w·d1``; the exact full error comes from the
+    algebraic identity in ``core.lloyd.stats_error``).
+    """
+
+    assign: jax.Array  # [n] i32: argmin where active, cached elsewhere
+    d1: jax.Array  # [n] f32, exact where active; garbage elsewhere
+    d2: jax.Array  # [n] f32, exact where active; garbage elsewhere
+    sums: jax.Array  # [K, d] f32, Σ 1[assign==k]·w·x (composed assignment)
+    counts: jax.Array  # [K] f32, Σ 1[assign==k]·w
+    err: jax.Array  # scalar f32, Σ_{active} w·d1 (partial error)
+    n_dist: jax.Array | None = None  # scalar f32, filled by the ops layer
 
 
 def pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:
@@ -101,6 +133,33 @@ def assign_update(x: jax.Array, w: jax.Array, c: jax.Array) -> AssignUpdate:
     sums, counts = cluster_sums(x, w, assign, c.shape[0])
     err = jnp.sum(w.astype(jnp.float32) * d1)
     return AssignUpdate(assign, d1, d2, sums, counts, err)
+
+
+def assign_update_pruned(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    assign: jax.Array,
+    active: jax.Array,
+) -> PrunedAssignUpdate:
+    """Reference semantics for the drift-bound-pruned pass (ADR 0004).
+
+    ``assign [n] i32`` is the cached assignment from the previous iteration;
+    ``active [n] bool`` marks rows whose bounds could not prove the
+    assignment unchanged. Skipped rows keep their cached assignment; active
+    rows re-run the full top-2 scan; the statistics run over ALL rows under
+    the composed assignment — the identical ``cluster_sums`` accumulation
+    the dense pass does. As a vectorized oracle this computes everything
+    densely — the *semantics* (not the cost) are the contract the pruned
+    Pallas kernel must reproduce.
+    """
+    w = w.astype(jnp.float32)
+    active = active.astype(bool)
+    a_new, d1, d2 = assign_top2(x, c)
+    a = jnp.where(active, a_new, assign)
+    sums, counts = cluster_sums(x, w, a, c.shape[0])
+    err = jnp.sum(jnp.where(active, w * d1, 0.0))
+    return PrunedAssignUpdate(a, d1, d2, sums, counts, err)
 
 
 def weighted_error(

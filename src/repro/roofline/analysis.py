@@ -115,6 +115,50 @@ def assign_update_hbm_bytes(
         "total_bytes": float(reads + writes),
     }
 
+def assign_update_pruned_cost(
+    n: int,
+    d: int,
+    k: int,
+    active_rows: int,
+    *,
+    bn: int | None = None,
+    skipped_block_fraction: float = 0.0,
+    dtype_bytes: int = 4,
+) -> dict[str, float]:
+    """Analytic cost of one drift-bound-pruned pass (ADR 0004).
+
+    Pruning targets the paper's cost metric and the MXU: the ``2·n·K·d``
+    distance term shrinks to ``2·active·K·d``, while the one-hot statistics
+    contraction still runs over every row (that is what keeps pruned
+    centroids bit-identical to dense ones). HBM traffic is therefore NOT
+    reduced at row granularity — x is read once per iteration either way —
+    plus ~24 B/row of bound state (assign/ub/lb read+write, the active
+    mask). ``skipped_block_fraction`` models the scalar-prefetch variant
+    that elides the x DMA for fully-skipped row blocks (the current kernel
+    keeps the fetch and skips only the compute; see the kernel docstring):
+    pass the measured fraction to see the achievable traffic floor.
+    """
+    blk = assign_update_blocking(d, k, **({"bn": bn} if bn else {}))
+    base = assign_update_hbm_bytes(n, d, k, fused=True, bn=blk["bn"],
+                                   dtype_bytes=dtype_bytes)
+    bound_state = 4.0 * n * 3  # assign, ub, lb
+    x_bytes = dtype_bytes * n * d
+    reads = base["read_bytes"] + bound_state + 4.0 * n  # + active mask
+    reads -= skipped_block_fraction * x_bytes
+    writes = base["write_bytes"] + bound_state
+    return {
+        "distance_ops": float(active_rows) * k,
+        "distance_ops_dense": float(n) * k,
+        "flops_distance": 2.0 * active_rows * k * d,
+        "flops_stats": 2.0 * n * k * d,
+        "flops_dense": 2.0 * n * k * d + 2.0 * n * k * d,
+        "read_bytes": float(reads),
+        "write_bytes": float(writes),
+        "total_bytes": float(reads + writes),
+        "x_read_bytes": float(x_bytes * (1.0 - skipped_block_fraction)),
+    }
+
+
 _COLLECTIVES = (
     "all-gather",
     "all-reduce",

@@ -11,10 +11,12 @@ the (tiny) representative set.
 from repro.streaming.init import streaming_initial_partition
 from repro.streaming.stream_bwkm import (
     StreamBWKMResult,
+    StreamingLloydResult,
     StreamStats,
     fit,  # deprecated alias; fit_streaming is the canonical entry point
     fit_streaming,
     streaming_error,
+    streaming_lloyd,
     streaming_lloyd_step,
 )
 
@@ -22,8 +24,10 @@ __all__ = [
     "fit",
     "fit_streaming",
     "streaming_error",
+    "streaming_lloyd",
     "streaming_lloyd_step",
     "streaming_initial_partition",
     "StreamBWKMResult",
+    "StreamingLloydResult",
     "StreamStats",
 ]

@@ -29,14 +29,16 @@ per-chunk assignment work dispatches through ``kernels.ops`` — the Pallas
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from typing import NamedTuple
+
 from repro.core import bounds, bwkm as core_bwkm, misassignment as mis
+from repro.core import lloyd as lloyd_mod
 from repro.core import partition as part_mod
 from repro.core.lloyd import weighted_lloyd
 from repro.core.partition import BlockStats, Partition
@@ -46,9 +48,11 @@ from repro.streaming import init as stream_init
 
 __all__ = [
     "StreamStats",
+    "StreamingLloydResult",
     "fit",
     "fit_streaming",
     "streaming_error",
+    "streaming_lloyd",
     "streaming_lloyd_step",
 ]
 
@@ -248,6 +252,7 @@ def fit_streaming(
         res = weighted_lloyd(
             reps, w, c,
             max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
+            prune=config.prune,
         )
         c = res.centroids
         distances += float(res.distances)
@@ -326,9 +331,12 @@ def fit(
 
     The ``init_sample_size`` keyword side channel is deprecated too: set
     ``BWKMConfig.init_sample_size`` instead (it still wins here for
-    backward compatibility).
+    backward compatibility). Warns once per process (``repro._warnings``).
     """
-    warnings.warn(
+    from repro import _warnings
+
+    _warnings.warn_once(
+        "streaming.stream_bwkm.fit",
         "streaming.stream_bwkm.fit is deprecated; use repro.BWKM(...) "
         "(engine='streaming') or fit_streaming with "
         "BWKMConfig(init_sample_size=...)",
@@ -368,3 +376,131 @@ def streaming_error(source: ChunkSource, c: jax.Array) -> float:
     """Exact K-means error E^D(C) (Eq. 1) computed in one streaming pass."""
     _, err = streaming_lloyd_step(source, c)
     return err
+
+
+# --------------------------------------- pruned full-stream Lloyd (ADR 0004)
+@partial(jax.jit, static_argnames=("impl",))
+def _chunk_dense_full(x, nv, c, *, impl):
+    """Initial dense chunk pass for :func:`streaming_lloyd`: per-row top-2
+    (seeding the drift bounds) + the fold statistics + Σ w‖x‖² for the
+    algebraic error identity."""
+    wv = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
+    fu = ops.assign_update(x, wv, c, impl=impl)
+    w2 = jnp.sum(wv * jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))
+    ub = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
+    lb = jnp.sqrt(jnp.maximum(fu.d2, 0.0))
+    return fu.assign, ub, lb, fu.sums, fu.counts, fu.err, fu.n_dist, w2
+
+
+@partial(jax.jit, static_argnames=("impl", "prune"))
+def _chunk_pruned_stats(x, nv, c_new, assign, ub, lb, drift, *, impl, prune):
+    """One pruned Lloyd chunk fold: update this chunk's carried bounds from
+    the centroid drift, rescan only the rows the bounds can't settle, and
+    return the chunk's full statistics under the composed assignment —
+    exactly the in-core ``pruned_body`` with the bound state living on the
+    host between passes instead of in the ``while_loop`` carry."""
+    valid = jnp.arange(x.shape[0]) < nv
+    wv = valid.astype(jnp.float32)
+    if prune:
+        ub, lb = lloyd_mod.drift_bound_update(ub, lb, assign, drift)
+        active = (ub >= lb) & valid
+        fu = ops.assign_update_pruned(x, wv, c_new, assign, active, impl=impl)
+        ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
+        lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
+        return fu.assign, ub, lb, fu.sums, fu.counts, fu.n_dist
+    fu = ops.assign_update(x, wv, c_new, impl=impl)
+    ub = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
+    lb = jnp.sqrt(jnp.maximum(fu.d2, 0.0))
+    return fu.assign, ub, lb, fu.sums, fu.counts, fu.n_dist
+
+
+class StreamingLloydResult(NamedTuple):
+    centroids: jax.Array  # [K, d]
+    error: float  # exact weighted error at the final centroids
+    iters: int  # Lloyd iterations executed (excludes the seeding pass)
+    distances: float  # kernel-reported distance computations
+    active_fractions: list[float]  # per-iteration fraction of rescanned rows
+
+
+def streaming_lloyd(
+    source: ChunkSource,
+    c: jax.Array,
+    *,
+    max_iters: int = 50,
+    epsilon: float = 1e-4,
+    impl: str | None = None,
+    prune: bool | None = None,
+) -> StreamingLloydResult:
+    """Full-stream Lloyd with drift-bound pruning carried ACROSS chunk folds.
+
+    The in-core pruned loop keeps (assignment, upper bound, lower bound)
+    per row in the ``while_loop`` carry; out-of-core the same state lives
+    on the host as one compact f32/i32 array per chunk (12 bytes/point) and
+    is re-fed to the jitted chunk program each pass. Drift is computed once
+    per iteration from the folded statistics, so after the first pass most
+    chunks rescan only their boundary rows — the paper's
+    distance-computation metric drops exactly as in-core, while the chunk
+    pipeline (static shapes, one compiled program per pass) is unchanged.
+
+    Stops on the Eq.-2 relative error change (the error is exact via the
+    ``core.lloyd.stats_error`` identity). Returns kernel-reported distance
+    counts and the per-iteration active fraction for the benchmarks.
+    """
+    impl = ops.resolve_impl(impl)
+    prune = lloyd_mod.resolve_prune(prune)
+    k = c.shape[0]
+
+    # --- seeding pass: dense, records per-chunk bound state on the host
+    assigns: list[np.ndarray] = []
+    ubs: list[np.ndarray] = []
+    lbs: list[np.ndarray] = []
+    sums = jnp.zeros((k, c.shape[1]), jnp.float32)
+    counts = jnp.zeros((k,), jnp.float32)
+    err = jnp.zeros((), jnp.float32)
+    w2sum = jnp.zeros((), jnp.float32)
+    distances = 0.0
+    for x_dev, nv in padded_device_chunks(source):
+        a_, ub_, lb_, s_, n_, e_, nd_, w2_ = _chunk_dense_full(
+            x_dev, nv, c, impl=impl
+        )
+        assigns.append(np.asarray(a_, np.int32))
+        ubs.append(np.asarray(ub_, np.float32))
+        lbs.append(np.asarray(lb_, np.float32))
+        sums, counts, err, w2sum = sums + s_, counts + n_, err + e_, w2sum + w2_
+        distances += float(nd_)
+
+    prev_err, err = jnp.inf, err
+    active_fractions: list[float] = []
+    it = 0
+    while it < max_iters and abs(float(prev_err) - float(err)) > (
+        epsilon * max(float(err), 1e-30)
+    ):
+        c_new = lloyd_mod._next_centroids(sums, counts, c)
+        drift = jnp.linalg.norm(c_new - c, axis=-1)
+        sums = jnp.zeros_like(sums)
+        counts = jnp.zeros_like(counts)
+        n_dist_iter = 0.0
+        for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
+            a_, ub_, lb_, s_, n_, nd_ = _chunk_pruned_stats(
+                x_dev, nv, c_new,
+                jnp.asarray(assigns[i]), jnp.asarray(ubs[i]), jnp.asarray(lbs[i]),
+                drift, impl=impl, prune=prune,
+            )
+            assigns[i] = np.asarray(a_, np.int32)
+            ubs[i] = np.asarray(ub_, np.float32)
+            lbs[i] = np.asarray(lb_, np.float32)
+            sums, counts = sums + s_, counts + n_
+            n_dist_iter += float(nd_)
+        c = c_new
+        prev_err, err = err, lloyd_mod.stats_error(w2sum, c_new, sums, counts)
+        distances += n_dist_iter
+        active_fractions.append(n_dist_iter / max(k * source.n_points, 1))
+        it += 1
+
+    return StreamingLloydResult(
+        centroids=c,
+        error=float(err),
+        iters=it,
+        distances=distances,
+        active_fractions=active_fractions,
+    )

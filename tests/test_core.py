@@ -85,11 +85,91 @@ def test_lloyd_empty_cluster_keeps_centroid():
 
 
 def test_lloyd_counts_distances():
+    """Kernel-reported counts (ISSUE 4 satellite): the dense path charges
+    exactly active_rows·K per pass; the pruned path charges only rescanned
+    rows plus the seeding and finishing passes — never more than dense + one
+    pass, and strictly less once the bounds start settling rows."""
     x = gmm(jax.random.PRNGKey(11), 200, 2, 3)
     c0 = forgy(jax.random.PRNGKey(12), x, 3)
-    res = lloyd(x, c0, max_iters=5, epsilon=0.0)
+    res = lloyd(x, c0, max_iters=5, epsilon=0.0, prune=False)
     expected = 200 * 3 * (int(res.iters) + 1)  # +1 for the initial assignment
     assert float(res.distances) == expected
+
+    pruned = lloyd(x, c0, max_iters=5, epsilon=0.0, prune=True)
+    assert int(pruned.iters) == int(res.iters)
+    # seeding + per-iteration active + finishing: bounded by dense + 1 pass
+    assert float(pruned.distances) <= expected + 200 * 3
+    assert float(pruned.distances) >= 2 * 200 * 3  # seed + finish at least
+
+    # zero-weight rows are never charged, pruned or dense
+    w = jnp.ones(200).at[:50].set(0.0)
+    r = weighted_lloyd(x, w, c0, max_iters=1, epsilon=0.0, prune=False)
+    assert float(r.distances) == 150 * 3 * (int(r.iters) + 1)
+
+
+def test_weighted_lloyd_pruned_equals_dense():
+    """ADR 0004 acceptance: pruning changes cost, never results — identical
+    assignments/centroids/error on both kernel impls, with a real saving."""
+    x = gmm(jax.random.PRNGKey(40), 4000, 5, 6, spread=20.0, noise=1.0)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(41), (4000,))) + 0.1
+    c0 = forgy(jax.random.PRNGKey(42), x, 6)
+    for impl in ("ref", "pallas"):
+        dn = weighted_lloyd(x, w, c0, max_iters=40, impl=impl, prune=False)
+        pr = weighted_lloyd(x, w, c0, max_iters=40, impl=impl, prune=True)
+        assert int(dn.iters) == int(pr.iters)
+        np.testing.assert_array_equal(np.asarray(dn.assign), np.asarray(pr.assign))
+        np.testing.assert_allclose(
+            np.asarray(dn.centroids), np.asarray(pr.centroids), rtol=0, atol=1e-5
+        )
+        np.testing.assert_allclose(float(dn.error), float(pr.error), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(dn.d1), np.asarray(pr.d1),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(dn.d2), np.asarray(pr.d2),
+                                   rtol=1e-6, atol=1e-6)
+        if int(dn.iters) >= 3:
+            assert float(pr.distances) < float(dn.distances)
+
+
+def test_drift_bound_soundness():
+    """The maintained bounds stay valid: after a drift update, ub ≥ the true
+    own-centroid distance and lb ≤ the true second-closest distance — so a
+    skipped row's argmin provably cannot have changed (DESIGN.md §11)."""
+    from repro.core.lloyd import drift_bound_update
+    from repro.kernels import ref as kref
+
+    for seed in range(5):
+        key = jax.random.PRNGKey(seed)
+        kx, kc, kd = jax.random.split(key, 3)
+        x = jax.random.normal(kx, (300, 4)) * 5
+        c = jax.random.normal(kc, (8, 4)) * 5
+        a, d1, d2 = kref.assign_top2(x, c)
+        ub = jnp.sqrt(d1)
+        lb = jnp.sqrt(d2)
+        c_new = c + 0.3 * jax.random.normal(kd, c.shape)
+        drift = jnp.linalg.norm(c_new - c, axis=-1)
+        ub2, lb2 = drift_bound_update(ub, lb, a, drift)
+        dd = np.sqrt(np.asarray(kref.pairwise_sqdist(x, c_new)))
+        own = dd[np.arange(300), np.asarray(a)]
+        others = np.where(
+            np.arange(8)[None] == np.asarray(a)[:, None], np.inf, dd
+        ).min(axis=1)
+        assert (np.asarray(ub2) >= own - 1e-5).all()
+        assert (np.asarray(lb2) <= others + 1e-5).all()
+
+
+def test_stats_error_identity_matches_rowwise():
+    """stats_error ≡ Σ w·d1 (f64 oracle) under any assignment's stats."""
+    from repro.core.lloyd import stats_error
+    from repro.kernels import ref as kref
+
+    x = gmm(jax.random.PRNGKey(43), 1000, 3, 4)
+    w = jnp.abs(jax.random.normal(jax.random.PRNGKey(44), (1000,))) + 0.2
+    c = forgy(jax.random.PRNGKey(45), x, 4)
+    fu = kref.assign_update(x, w, c)
+    w2 = jnp.sum(w * jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))
+    e_alg = float(stats_error(w2, c, fu.sums, fu.counts))
+    e_row = weighted_error_f64(x, w, c)
+    np.testing.assert_allclose(e_alg, e_row, rtol=5e-5)
 
 
 # ---------------------------------------------------------------- misassignment

@@ -50,6 +50,35 @@ def test_dist_assign_step_matches_single_host():
     np.testing.assert_allclose(float(err), float(jnp.sum(d1)), rtol=1e-5)
 
 
+def test_dist_lloyd_pruned_matches_dense_on_mesh():
+    """ADR 0004 sharded: bound state carried shard-local across iterations,
+    drift replicated, psum'd stats — pruned ≡ dense to 1e-5, fewer
+    kernel-reported distance ops, and both match the in-core loop."""
+    from repro.core.lloyd import weighted_lloyd
+
+    x = gmm(jax.random.PRNGKey(7), 6000, 4, 5, spread=25.0, noise=0.8)
+    c0 = x[:5] + 0.25
+    with sh.use_mesh(make_smoke_mesh()):
+        xs = dist_bwkm.shard_points(x)
+        pruned = dist_bwkm.dist_lloyd(xs, c0, max_iters=30, epsilon=1e-5,
+                                      prune=True)
+        dense = dist_bwkm.dist_lloyd(xs, c0, max_iters=30, epsilon=1e-5,
+                                     prune=False)
+    assert pruned.iters == dense.iters
+    np.testing.assert_allclose(
+        np.asarray(pruned.centroids), np.asarray(dense.centroids),
+        rtol=0, atol=1e-5,
+    )
+    assert pruned.distances < dense.distances
+
+    incore = weighted_lloyd(x, jnp.ones(6000), c0, max_iters=30, epsilon=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(pruned.centroids), np.asarray(incore.centroids),
+        rtol=1e-4, atol=1e-3,
+    )
+    np.testing.assert_allclose(pruned.error, float(incore.error), rtol=1e-4)
+
+
 _MULTIDEV_SCRIPT = textwrap.dedent(
     """
     import os
@@ -75,11 +104,20 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
         res = dist_bwkm.fit_distributed(jax.random.PRNGKey(1), xs,
                             bwkm.BWKMConfig(k=5, max_iters=15))
         c1, err = dist_bwkm.dist_assign_step(xs, res.centroids)
+        # ADR 0004: pruned dist_lloyd on real shards — bounds live with the
+        # points, drift replicated, psum'd stats; must equal its dense mode
+        ll_p = dist_bwkm.dist_lloyd(xs, x[:5] + 0.25, max_iters=20,
+                                    epsilon=1e-5, prune=True)
+        ll_d = dist_bwkm.dist_lloyd(xs, x[:5] + 0.25, max_iters=20,
+                                    epsilon=1e-5, prune=False)
+    cdiff = float(jnp.abs(ll_p.centroids - ll_d.centroids).max())
     e = float(metrics.kmeans_error(x, res.centroids))
     res_core = bwkm.fit_incore(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=15))
     e_core = float(metrics.kmeans_error(x, res_core.centroids))
     print(json.dumps({"e_dist": e, "e_core": e_core,
-                      "stop": res.stop_reason, "err_step": float(err)}))
+                      "stop": res.stop_reason, "err_step": float(err),
+                      "lloyd_cdiff": cdiff, "lloyd_iters": [ll_p.iters, ll_d.iters],
+                      "lloyd_dist": [ll_p.distances, ll_d.distances]}))
     """
 )
 
@@ -98,6 +136,8 @@ def test_dist_bwkm_on_8_fake_devices():
     rel = abs(out["e_dist"] - out["e_core"]) / min(out["e_dist"], out["e_core"])
     assert rel < 0.05, out
     assert out["stop"] in ("boundary-empty", "max-iters")
+    assert out["lloyd_cdiff"] <= 1e-5, out  # pruned ≡ dense on 8 shards
+    assert out["lloyd_dist"][0] < out["lloyd_dist"][1], out  # real saving
 
 
 def test_checkpoint_roundtrip_and_elastic_restore(tmp_path):

@@ -24,6 +24,7 @@ from _hypothesis_compat import given, settings, st
 from repro.kernels import ops, ref
 from repro.kernels.fused_assign_update import (
     fused_assign_update_pallas,
+    fused_assign_update_pruned_pallas,
     fused_supported,
 )
 
@@ -185,6 +186,133 @@ def test_ops_dispatch_fused_equals_ref():
     np.testing.assert_allclose(float(a.err), float(b.err), rtol=1e-5)
 
 
+# ------------------------------------------- pruned kernel parity (ADR 0004)
+def _pruned_inputs(n, d, k, seed=0, active_p=0.5):
+    """Inputs with a *plausible* cached assignment (argmin at slightly moved
+    centroids) and a random active mask — the oracle contract must hold for
+    ANY mask, sound or not, so random is the stronger test."""
+    x, w, c = _data(n, d, k, jnp.float32, seed=seed)
+    c_old = c + 0.05 * jax.random.normal(jax.random.PRNGKey(seed + 71), c.shape)
+    cached, _, _ = ref.assign_top2(x, c_old)
+    active = jax.random.uniform(jax.random.PRNGKey(seed + 72), (n,)) < active_p
+    return x, w, c, cached, active
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 150),
+    d=st.integers(1, 40),
+    k=st.integers(1, 70),
+    active_p=st.sampled_from([0.0, 0.3, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_pruned_matches_oracle(n, d, k, active_p, seed):
+    x, w, c, cached, active = _pruned_inputs(n, d, k, seed=seed % 10_000,
+                                             active_p=active_p)
+    r = ref.assign_update_pruned(x, w, c, cached, active)
+    out = fused_assign_update_pruned_pallas(
+        x, w, c, cached, active, interpret=True, bn=32, bk=16
+    )
+    a, d1, d2, sums, counts, err = out
+    act = np.asarray(active)
+    # assignments: composed — cached where skipped, argmin-equivalent where
+    # active (fp ties between distinct centroids are legal either way)
+    np.testing.assert_array_equal(np.asarray(a)[~act], np.asarray(cached)[~act])
+    dd = np.asarray(ref.pairwise_sqdist(x, c))
+    rows = np.where(act)[0]
+    np.testing.assert_allclose(
+        dd[rows, np.asarray(a)[rows]], dd[rows].min(axis=1) if rows.size else
+        np.zeros(0), rtol=1e-5, atol=1e-5
+    )
+    # d1/d2/err are defined only where active
+    np.testing.assert_allclose(np.asarray(d1)[act], np.asarray(r.d1)[act],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(d2)[act], np.asarray(r.d2)[act],
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=1e-5, atol=1e-5)
+    # full statistics under the composed assignment
+    s_ref, c_ref = ref.cluster_sums(x, w, np.asarray(a), c.shape[0])
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(c_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pruned_all_active_equals_dense():
+    """active=ones degrades to the dense fused kernel — same everything."""
+    x, w, c = _data(120, 12, 20, jnp.float32, seed=5)
+    cached = jnp.zeros((120,), jnp.int32)  # garbage cache must not matter
+    dn = fused_assign_update_pallas(x, w, c, interpret=True, bn=32, bk=16)
+    pr = fused_assign_update_pruned_pallas(
+        x, w, c, cached, jnp.ones((120,), bool), interpret=True, bn=32, bk=16
+    )
+    for a, b in zip(dn, pr):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pruned_all_inactive_is_skip_safe_and_bitwise():
+    """active=zeros: every block skips its distance tiles, keeps the cached
+    assignment, and the statistics contraction still produces BIT-identical
+    sums/counts to the dense kernel run whose argmin the cache equals —
+    the invariant that makes pruned centroids exactly dense centroids."""
+    x, w, c = _data(100, 9, 17, jnp.float32, seed=6)
+    dn = fused_assign_update_pallas(x, w, c, interpret=True, bn=32, bk=16)
+    cached = dn[0]
+    pr = fused_assign_update_pruned_pallas(
+        x, w, c, cached, jnp.zeros((100,), bool), interpret=True, bn=32, bk=16
+    )
+    np.testing.assert_array_equal(np.asarray(pr[0]), np.asarray(cached))
+    assert (np.asarray(pr[3]) == np.asarray(dn[3])).all()  # sums bitwise
+    assert (np.asarray(pr[4]) == np.asarray(dn[4])).all()  # counts bitwise
+    np.testing.assert_allclose(float(pr[5]), 0.0)  # err only over active
+
+
+def test_ops_pruned_dispatch_and_n_dist():
+    """ops-layer contract: ref ≡ pallas for the pruned op, and n_dist
+    charges active·K identically for every impl (plus the chunk variant's
+    padding rows stay inert and inactive)."""
+    x, w, c, cached, active = _pruned_inputs(90, 8, 11, seed=3)
+    outs = {
+        impl: ops.assign_update_pruned(x, w, c, cached, active, impl=impl)
+        for impl in ("ref", "pallas")
+    }
+    n_act = int(jnp.sum(active & (w > 0)))
+    for impl, out in outs.items():
+        assert float(out.n_dist) == n_act * 11, impl
+    np.testing.assert_array_equal(
+        np.asarray(outs["ref"].assign), np.asarray(outs["pallas"].assign)
+    )
+    np.testing.assert_allclose(
+        np.asarray(outs["ref"].sums), np.asarray(outs["pallas"].sums),
+        rtol=1e-4, atol=1e-4,
+    )
+    # chunk variant: mostly padding; stats must cover only the real rows
+    n, chunk = 7, 128
+    xs, ws = x[:n], w[:n]
+    r = ref.assign_update_pruned(xs, ws, c, cached[:n], active[:n])
+    for impl in ("ref", "pallas"):
+        out = ops.assign_update_pruned_chunk(
+            xs, ws, c, cached[:n], active[:n], chunk_size=chunk, impl=impl
+        )
+        assert out.assign.shape == (n,)
+        np.testing.assert_allclose(
+            float(out.counts.sum()), float(ws.sum()), rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.sums), np.asarray(r.sums), rtol=1e-5, atol=1e-5
+        )
+        assert float(out.n_dist) == int(jnp.sum(active[:n] & (ws > 0))) * 11
+
+
+def test_dense_n_dist_reported_by_ops_layer():
+    """Satellite (ISSUE 4): the dense op reports actual distance ops —
+    zero-weight rows are not charged, and the number is impl-independent."""
+    x, w, c = _data(80, 6, 9, jnp.float32, seed=8, wmode="zeros-some")
+    for impl in ("ref", "pallas"):
+        fu = ops.assign_update(x, w, c, impl=impl)
+        assert float(fu.n_dist) == float(jnp.sum(w > 0)) * 9
+
+
 def test_two_pass_fallback_when_accumulator_exceeds_vmem(monkeypatch):
     """When `fused_supported` says the [K, d] accumulator won't fit, the ops
     layer must silently select the two-pass path — same results."""
@@ -204,6 +332,28 @@ def test_two_pass_fallback_when_accumulator_exceeds_vmem(monkeypatch):
         fused_assign_update_pallas(
             jnp.zeros((8, 8192)), jnp.ones((8,)), jnp.zeros((4096, 8192)),
             interpret=True,
+        )
+
+
+def test_pruned_two_pass_fallback(monkeypatch):
+    """The pruned op must also degrade to the two-pass path when the fused
+    accumulator doesn't fit — same composed semantics as the ref oracle."""
+    from repro.kernels import fused_assign_update as fau
+
+    x, w, c, cached, active = _pruned_inputs(96, 16, 8, seed=4)
+    monkeypatch.setattr(fau, "fused_supported", lambda d, k: False)
+    out = ops.assign_update_pruned(x, w, c, cached, active, impl="pallas")
+    r = ref.assign_update_pruned(x, w, c, cached, active)
+    np.testing.assert_array_equal(np.asarray(out.assign), np.asarray(r.assign))
+    np.testing.assert_allclose(np.asarray(out.sums), np.asarray(r.sums),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(out.err), float(r.err), rtol=1e-5)
+    assert float(out.n_dist) == int(jnp.sum(active & (w > 0))) * 8
+    monkeypatch.undo()
+    with pytest.raises(ValueError, match="VMEM budget"):
+        fused_assign_update_pruned_pallas(
+            jnp.zeros((8, 8192)), jnp.ones((8,)), jnp.zeros((4096, 8192)),
+            jnp.zeros((8,), jnp.int32), jnp.ones((8,), bool), interpret=True,
         )
 
 

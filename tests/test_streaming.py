@@ -154,6 +154,37 @@ def test_streaming_error_matches_dense():
     np.testing.assert_allclose(e_stream, float(jnp.sum(d1)), rtol=1e-5)
 
 
+def test_streaming_lloyd_pruned_matches_incore_and_dense():
+    """ADR 0004 out-of-core: the pruned full-stream Lloyd — bound state
+    carried on the host across chunk folds — must match (a) its own dense
+    mode to 1e-5 and (b) the in-core weighted Lloyd on the same data, while
+    reporting fewer kernel-reported distance ops."""
+    from repro.core.lloyd import weighted_lloyd
+
+    x = _points(seed=4, n=8000, d=4, k=5)
+    c0 = jnp.asarray(x[:5]) + 0.25
+    src = ck.ArrayChunkSource(x, 1024)
+
+    pruned = sb.streaming_lloyd(src, c0, max_iters=30, epsilon=1e-5, prune=True)
+    dense = sb.streaming_lloyd(src, c0, max_iters=30, epsilon=1e-5, prune=False)
+    assert pruned.iters == dense.iters
+    np.testing.assert_allclose(
+        np.asarray(pruned.centroids), np.asarray(dense.centroids),
+        rtol=0, atol=1e-5,
+    )
+    assert pruned.distances < dense.distances
+    assert pruned.active_fractions[-1] < 0.5  # bounds actually settle rows
+
+    incore = weighted_lloyd(
+        jnp.asarray(x), jnp.ones(8000), c0, max_iters=30, epsilon=1e-5
+    )
+    np.testing.assert_allclose(
+        np.asarray(pruned.centroids), np.asarray(incore.centroids),
+        rtol=1e-4, atol=1e-3,
+    )
+    np.testing.assert_allclose(pruned.error, float(incore.error), rtol=1e-4)
+
+
 def test_streaming_lloyd_step_matches_dense():
     x = _points(n=5000, d=4)
     c = jnp.asarray(x[:6]) + 0.5
