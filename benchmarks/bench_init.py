@@ -1,0 +1,174 @@
+"""Seeding bench: k-means|| vs the sequential inits at matched budgets.
+
+The init's figure of merit has two axes (ADR 0005): *sequential data
+passes* (K-means++ needs ``K−1``, one per seed — the latency wall for
+out-of-core data) and *distance evaluations* (the paper's cost unit).
+This bench seeds the same workloads with every registered strategy,
+polishes each seed set with the same fixed Lloyd budget, and records per
+strategy × workload:
+
+  * ``init_distance_ops`` — seeding-only distance evaluations (analytic
+    for the sequential inits, kernel-reported for k-means||);
+  * ``sequential_passes`` — full-data passes the seeding needs;
+  * ``seed_error`` / ``final_error`` — E^D of the raw seeds and after the
+    matched Lloyd polish (mean over repetitions);
+  * for k-means||: candidate count and the analytic fold-pass HBM bytes
+    (``roofline.analysis.kmeans_ll_cost``).
+
+Headline per workload: k-means|| must reach K-means++-comparable final
+error (the acceptance gate pins ≤ 5% relative gap on the separated
+workload) in ``rounds + 2`` passes instead of ``K − 1``. Results go to
+``BENCH_init.json`` at the repo root for the cross-PR perf trajectory,
+like ``BENCH_kernels.json`` / ``BENCH_lloyd.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans_ll, kmeanspp
+from repro.core.lloyd import weighted_lloyd
+from repro.roofline import analysis
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_init.json"
+
+WORKLOADS = [
+    # name, n, d, k, spread, noise — separated: every decent seeding finds
+    # the optimum (isolates the pass/ops cost); overlapping: seed placement
+    # actually moves the final error.
+    ("separated", 20000, 16, 16, 40.0, 0.8),
+    ("overlapping", 20000, 16, 16, 6.0, 2.0),
+]
+
+CHAIN_LENGTH = 200  # afkmc2 default
+
+
+def _gmm(key, n, d, k, spread, noise):
+    kc, kz, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    z = jax.random.randint(kz, (n,), 0, k)
+    return (centers[z] + noise * jax.random.normal(kn, (n, d))).astype(jnp.float32)
+
+
+def _seed_with(name, key, x, k):
+    """Seed via ``name``; returns (centroids, init_distance_ops, passes,
+    extras). Ops for the sequential inits are the textbook counts; k-means||
+    reports its kernel-accounted total."""
+    n = x.shape[0]
+    if name == "kmeans++":
+        return kmeanspp.kmeanspp(key, x, k), float(n * (k - 1)), k - 1, {}
+    if name == "forgy":
+        return kmeanspp.forgy(key, x, k), 0.0, 1, {}
+    if name == "afkmc2":
+        # one full pass for the proposal q, then sublinear MH chains that
+        # evaluate i centroids per step for seed i
+        ops = float(n + CHAIN_LENGTH * k * (k - 1) / 2)
+        return kmeanspp.afkmc2(key, x, k, chain_length=CHAIN_LENGTH), ops, 1, {}
+    if name == "kmeans||":
+        info = kmeans_ll.kmeans_parallel(key, x, None, k, return_info=True)
+        return (
+            info.centroids,
+            float(info.distances),
+            info.passes,
+            {"n_candidates": int(info.n_candidates)},
+        )
+    raise ValueError(f"unknown strategy {name!r}")
+
+
+def _run(name, n, d, k, spread, noise, *, reps, polish_iters, seed):
+    x = _gmm(jax.random.PRNGKey(seed), n, d, k, spread, noise)
+    w = jnp.ones((n,), jnp.float32)
+    strategies = {}
+    for strat in ("kmeans++", "forgy", "afkmc2", "kmeans||"):
+        seed_errs, final_errs, all_ops, all_extras = [], [], [], []
+        passes = 0
+        for rep in range(reps):
+            key = jax.random.PRNGKey(seed * 1000 + rep + 1)
+            c0, ops, passes, extras = _seed_with(strat, key, x, k)
+            all_ops.append(ops)
+            all_extras.append(extras)
+            seed_errs.append(float(jnp.sum(w * jnp.min(
+                ((x[:, None, :] - c0[None]) ** 2).sum(-1), axis=1))))
+            res = weighted_lloyd(x, w, c0, max_iters=polish_iters, epsilon=0.0)
+            final_errs.append(float(res.error))
+        strategies[strat] = {
+            # mean over reps, like the errors: k-means||'s kernel-reported
+            # ops and candidate count vary with the Bernoulli draws
+            "init_distance_ops": sum(all_ops) / reps,
+            "sequential_passes": passes,
+            "seed_error": sum(seed_errs) / reps,
+            "final_error": sum(final_errs) / reps,
+            **{
+                key: sum(e[key] for e in all_extras) / reps
+                for key in all_extras[0]
+            },
+        }
+    ll, pp = strategies["kmeans||"], strategies["kmeans++"]
+    cost = analysis.kmeans_ll_cost(n, d, k)
+    return {
+        "workload": name,
+        "n": n, "d": d, "k": k, "spread": spread, "noise": noise,
+        "reps": reps,
+        "polish_iters": polish_iters,
+        "strategies": strategies,
+        "kmeans_ll_vs_pp": {
+            "final_error_rel_gap": (
+                (ll["final_error"] - pp["final_error"]) / pp["final_error"]
+            ),
+            "passes": [ll["sequential_passes"], pp["sequential_passes"]],
+            "fewer_passes_than_k": ll["sequential_passes"] < k,
+        },
+        "analytic": cost,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT), help="JSON results path")
+    ap.add_argument("--no-json", action="store_true")
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--polish-iters", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    record = {
+        "unit": "distance computations (seeding only) + E^D after matched "
+        "Lloyd polish",
+        "workloads": [],
+    }
+    rows = []
+    for name, n, d, k, spread, noise in WORKLOADS:
+        r = _run(name, n, d, k, spread, noise, reps=args.reps,
+                 polish_iters=args.polish_iters, seed=args.seed)
+        record["workloads"].append(r)
+        s = r["strategies"]
+        rows.append((
+            f"init_{name}_n{n}_d{d}_k{k}",
+            0.0,  # not a wall-clock bench; the unit is distance ops/passes
+            f"ll_passes={s['kmeans||']['sequential_passes']};"
+            f"pp_passes={s['kmeans++']['sequential_passes']};"
+            f"ll_ops={s['kmeans||']['init_distance_ops']:.0f};"
+            f"pp_ops={s['kmeans++']['init_distance_ops']:.0f};"
+            f"ll_candidates={s['kmeans||'].get('n_candidates', 0)};"
+            f"final_rel_gap={r['kmeans_ll_vs_pp']['final_error_rel_gap']:+.2%};"
+            f"forgy_final={s['forgy']['final_error']:.3g};"
+            f"afkmc2_final={s['afkmc2']['final_error']:.3g}",
+        ))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+    if not args.no_json:
+        pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"# wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@ Emits ``name,us_per_call,derived`` CSV:
   * assign_*    — the assignment-kernel micro-bench
   * stream_*    — out-of-core streaming driver vs in-memory (throughput)
   * lloyd_*     — drift-bound pruned Lloyd vs dense (distance-op trajectory)
+  * init_*      — seeding strategies at matched budgets (k-means|| vs
+                  kmeans++/forgy/afkmc2: passes, distance ops, final error)
 """
 
 from __future__ import annotations
@@ -22,7 +24,9 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args()
 
-    from benchmarks import bench_kernels, bench_lloyd, bench_streaming, bench_tradeoff
+    from benchmarks import (
+        bench_init, bench_kernels, bench_lloyd, bench_streaming, bench_tradeoff,
+    )
 
     if args.quick:
         bench_tradeoff.main(["--datasets", "CIF", "--ks", "3", "--reps", "1"])
@@ -39,6 +43,7 @@ def main() -> None:
         bench_streaming.main([])
     bench_kernels.main([])
     bench_lloyd.main([])
+    bench_init.main(["--reps", "1"] if args.quick else [])
 
 
 if __name__ == "__main__":

@@ -25,7 +25,7 @@ from typing import Callable
 
 import jax
 
-from repro.core import kmeanspp
+from repro.core import kmeans_ll, kmeanspp
 from repro.data.chunks import reservoir_sample
 
 __all__ = ["InitStrategy", "register_init", "resolve_init", "list_inits"]
@@ -46,6 +46,10 @@ def _kmeanspp_seed(key, x, w, k):
 
 def _forgy_seed(key, x, w, k):
     return kmeanspp.forgy(key, x, k, w=w)
+
+
+def _kmeans_ll_seed(key, x, w, k):
+    return kmeans_ll.kmeans_parallel(key, x, w, k)
 
 
 def _afkmc2_seed(key, x, w, k):
@@ -94,6 +98,20 @@ register_init(
     ),
     "kmeanspp",
     "km++",
+)
+
+register_init(
+    InitStrategy(
+        name="kmeans||",
+        description="k-means|| oversampling init (Bahmani et al. 2012): a "
+        "few Bernoulli oversampling rounds through the min-d² fold kernel, "
+        "then weighted K-means++ over the O(ℓ·rounds) candidate set — "
+        "K-means++ quality in rounds+2 data passes instead of K",
+        seed_centroids=_kmeans_ll_seed,
+    ),
+    "kmeansll",
+    "kmeans-parallel",
+    "scalable-kmeans++",
 )
 
 register_init(

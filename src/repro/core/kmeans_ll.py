@@ -1,0 +1,152 @@
+"""k-means|| — scalable K-means++ by oversampling (Bahmani et al. 2012).
+
+Sequential (weighted) K-means++ draws its K seeds one at a time: every seed
+is a full pass of ``n`` distance evaluations, so the init alone costs
+``(K−1)`` *sequential* data passes. k-means|| replaces the sequential chain
+with ``rounds ≈ O(log φ)`` oversampling rounds: each round draws every
+point independently with probability ``min(1, ℓ·w·d²(x,C)/φ)`` (``φ`` the
+current weighted cost, ``ℓ`` the oversampling factor, default ``2K``),
+unioning the draws into a candidate set of expected size ``1 + rounds·ℓ``.
+A final pass weights each candidate by the total point weight closest to
+it, and the existing :func:`repro.core.kmeanspp.weighted_kmeanspp` reduces
+the weighted candidates to the K seeds — the same reduction the paper's
+Algorithm 5 Step 1 runs over partition representatives.
+
+Every data pass dispatches through the chunk-shaped kernel seam
+``kernels.ops.min_sqdist_update`` (ADR 0005): one HBM read of x per round
+folds the round's new candidates into the running min-d² and produces the
+cost ``φ`` that normalises the next round's Bernoulli draws. The streaming
+(`repro.streaming.kmeans_ll`) and distributed (`repro.distributed.
+dist_kmeans_ll`) drivers run the identical round structure over chunks and
+shards respectively.
+
+Static-shape contract: the per-round Bernoulli draw count is random, so
+each round's accepted rows are packed into a fixed-capacity batch of
+``cap_round = 2ℓ`` rows (acceptance-priority order — smallest uniform
+first) with a validity mask; overflow beyond ``2ℓ`` is truncated (the draw
+count concentrates tightly around ``≤ ℓ``, so truncation is a tail event).
+Unfilled candidate rows are parked at a far sentinel coordinate so the
+weighting pass can never assign points to them.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeanspp
+from repro.kernels import ops
+
+__all__ = ["KMeansLLResult", "default_oversampling", "kmeans_parallel"]
+
+_BIG = 3.0e38
+#: parking coordinate for unfilled candidate rows: far enough that no real
+#: point ever assigns to one, small enough that its squared distance
+#: (~1e30·d) stays finite in f32 for any practical d
+_FAR = 1.0e15
+
+
+class KMeansLLResult(NamedTuple):
+    centroids: jax.Array  # [k, d]
+    n_candidates: jax.Array  # scalar: valid candidates after all rounds
+    distances: jax.Array  # scalar f32: distance evaluations (paper's unit)
+    passes: int  # sequential data passes (rounds + 2)
+
+
+def default_oversampling(k: int) -> int:
+    """The conventional ℓ = 2K (Bahmani et al. report ℓ ∈ [0.5K, 2K])."""
+    return 2 * k
+
+
+@partial(jax.jit, static_argnames=("k", "l", "rounds", "cap_round", "impl"))
+def _kmeans_ll(key, x, w, *, k, l, rounds, cap_round, impl):
+    n, d = x.shape
+    w = w.astype(jnp.float32)
+    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+    keys = jax.random.split(key, rounds + 2)
+
+    cap_total = 1 + rounds * cap_round
+    cand = jnp.full((cap_total, d), _FAR, x.dtype)
+    cvalid = jnp.zeros((cap_total,), jnp.float32).at[0].set(1.0)
+    cand = cand.at[0].set(x[jax.random.categorical(keys[0], logw)])
+
+    # seed fold: min-d² and φ w.r.t. the single first candidate
+    out = ops.min_sqdist_update(
+        x, w, cand[:1], cvalid[:1], jnp.full((n,), _BIG, jnp.float32), impl=impl
+    )
+    mind2, phi, n_dist = out.mind2, out.cost, out.n_dist
+
+    for rd in range(rounds):
+        k_draw = keys[rd + 1]
+        p = jnp.minimum(1.0, l * w * mind2 / jnp.maximum(phi, 1e-30))
+        u = jax.random.uniform(k_draw, (n,))
+        accept = (u < p) & (w > 0)
+        # pack accepted rows into the round's fixed-capacity batch in
+        # acceptance-priority order: the smallest uniforms are the draws any
+        # smaller acceptance probability would also have kept
+        neg, idx = jax.lax.top_k(-jnp.where(accept, u, jnp.inf), cap_round)
+        newv = jnp.isfinite(neg).astype(jnp.float32)
+        newc = x[idx]
+        out = ops.min_sqdist_update(x, w, newc, newv, mind2, impl=impl)
+        mind2, phi = out.mind2, out.cost
+        n_dist = n_dist + out.n_dist
+        start = 1 + rd * cap_round
+        cand = cand.at[start : start + cap_round].set(
+            jnp.where(newv[:, None] > 0, newc, _FAR)
+        )
+        cvalid = cvalid.at[start : start + cap_round].set(newv)
+
+    # weighting pass: each candidate inherits the total weight of the points
+    # nearest to it (its own point included, so every valid candidate has
+    # positive weight); parked rows attract nothing and weigh 0
+    au = ops.assign_update(x, w, cand, impl=impl)
+    n_valid = jnp.sum(cvalid)
+    n_active = jnp.sum((w > 0).astype(jnp.float32))
+    n_dist = n_dist + n_active * n_valid  # the pass needs valid columns only
+    n_dist = n_dist + n_valid * max(k - 1, 1)  # K-means++ over the candidates
+
+    c = kmeanspp.weighted_kmeanspp(keys[-1], cand, au.counts, k)
+    return c, n_valid, n_dist
+
+
+def kmeans_parallel(
+    key: jax.Array,
+    x: jax.Array,
+    w: jax.Array | None,
+    k: int,
+    *,
+    oversampling: int | None = None,
+    rounds: int | None = None,
+    impl: str | None = None,
+    return_info: bool = False,
+) -> jax.Array | KMeansLLResult:
+    """Weighted k-means|| seeding over a resident point set.
+
+    ``x [n, d]`` points with nonnegative weights ``w [n]`` (``None`` =
+    unweighted); zero-weight rows (inactive partition rows) are never
+    selected and never contribute to ``φ``. ``oversampling`` is ℓ (default
+    ``2K``), ``rounds`` the number of oversampling rounds (default 5 — the
+    fixed small constant Bahmani et al. find sufficient in place of the
+    analytic ``O(log φ)``). Returns the ``[k, d]`` seeds, or the full
+    :class:`KMeansLLResult` when ``return_info`` is set.
+    """
+    n = x.shape[0]
+    if w is None:
+        w = jnp.ones((n,), jnp.float32)
+    l = int(oversampling) if oversampling is not None else default_oversampling(k)
+    r = int(rounds) if rounds is not None else 5
+    if l < 1 or r < 1:
+        raise ValueError(f"oversampling and rounds must be >= 1, got {l}, {r}")
+    cap_round = max(8, -(-2 * l // 8) * 8)
+    c, n_valid, n_dist = _kmeans_ll(
+        key, x, w, k=k, l=l, rounds=r, cap_round=cap_round,
+        impl=ops.resolve_impl(impl),
+    )
+    if not return_info:
+        return c
+    return KMeansLLResult(
+        centroids=c, n_candidates=n_valid, distances=n_dist, passes=r + 2
+    )

@@ -21,15 +21,30 @@ __all__ = ["forgy", "weighted_kmeanspp", "kmeanspp", "afkmc2"]
 
 
 def forgy(key: jax.Array, x: jax.Array, k: int, w: jax.Array | None = None) -> jax.Array:
-    """K instances selected uniformly at random (weight-proportional if ``w``)."""
+    """K instances selected uniformly at random (weight-proportional if ``w``).
+
+    With fewer than ``k`` positive-weight rows the Gumbel top-k runs out of
+    finite scores, so the short slots are filled by cycling through the
+    valid draws (duplicated seeds — the degenerate-but-safe choice; a
+    zero-weight row is an inactive/padding partition row and must never
+    become a seed). No positive weight at all is an error.
+    """
     n = x.shape[0]
     if w is None:
         idx = jax.random.choice(key, n, shape=(k,), replace=False)
     else:
+        if not isinstance(w, jax.core.Tracer) and not bool(jnp.any(w > 0)):
+            raise ValueError("forgy: no rows with positive weight to seed from")
         # Weight-proportional without replacement via Gumbel top-k on log-weights.
         logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
         g = jax.random.gumbel(key, (n,)) + logw
-        _, idx = jax.lax.top_k(g, k)
+        gv, idx = jax.lax.top_k(g, k)
+        # top_k sorts descending, so the finite (valid) draws occupy a
+        # prefix; remap the -inf tail onto that prefix cyclically
+        n_pos = jnp.maximum(jnp.sum(jnp.isfinite(gv)), 1)
+        idx = jnp.where(
+            jnp.isfinite(gv), idx, idx[jnp.arange(k) % n_pos]
+        )
     return x[idx]
 
 
@@ -97,7 +112,10 @@ def afkmc2(key: jax.Array, x: jax.Array, k: int, chain_length: int = 200) -> jax
         key, kidx, kacc = jax.random.split(key, 3)
         # Chain: propose chain_length candidates i.i.d. from q, then do the
         # sequential MH accept pass over them (vectorised distance evals).
-        cand = jax.random.categorical(kidx, logq[None, :].repeat(chain_length, 0))
+        # The batch shape comes from `shape=`, NOT from materialising an
+        # [chain_length, n] logits matrix — same draws (categorical
+        # broadcasts the logits over the batch), O(n) live memory.
+        cand = jax.random.categorical(kidx, logq, shape=(chain_length,))
         xc = x[cand]  # [m, d]
         dc = jnp.min(
             jnp.sum((xc[:, None, :] - centroids[None, :, :]) ** 2, axis=-1)

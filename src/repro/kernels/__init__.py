@@ -3,4 +3,6 @@ fused single-pass assign+accumulate kernel (``fused_assign_update``):
 top-2 distances + argmin AND weighted cluster statistics in one HBM read
 of x. ``distance_assign`` / ``cluster_update`` remain as the two-pass
 building blocks (and the fallback when the [K, d] accumulator exceeds
-VMEM); ``ops`` dispatches, ``ref`` holds the pure-jnp oracles."""
+VMEM); ``min_sqdist_update`` is the k-means|| fold pass (running min-d² +
+cost φ, one HBM read per oversampling round — ADR 0005); ``ops``
+dispatches, ``ref`` holds the pure-jnp oracles."""

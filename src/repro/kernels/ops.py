@@ -15,10 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.ref import AssignUpdate, PrunedAssignUpdate
+from repro.kernels.ref import AssignUpdate, MinSqDistUpdate, PrunedAssignUpdate
 
 __all__ = [
     "AssignUpdate",
+    "MinSqDistUpdate",
     "PrunedAssignUpdate",
     "assign_top2",
     "assign_top2_chunk",
@@ -27,6 +28,8 @@ __all__ = [
     "assign_update_pruned",
     "assign_update_pruned_chunk",
     "cluster_sums",
+    "min_sqdist_update",
+    "min_sqdist_update_chunk",
     "pairwise_sqdist_chunk",
     "pallas_available",
     "resolve_impl",
@@ -226,6 +229,70 @@ def _two_pass_cluster_sums(x, w, assign, k, interpret):
             x, w, assign, k, interpret=interpret
         )
     return ref.cluster_sums(x, w, assign, k)
+
+
+def min_sqdist_update(
+    x: jax.Array,
+    w: jax.Array,
+    cand: jax.Array,
+    cvalid: jax.Array,
+    mind2: jax.Array,
+    *,
+    impl: str | None = None,
+) -> MinSqDistUpdate:
+    """One k-means|| fold pass: the running per-point min squared distance
+    updated with a batch of new candidates, plus the weighted cost
+    ``φ = Σ w·min-d²`` of the updated state (ADR 0005).
+
+    This is the data pass every engine's k-means|| oversampling round runs
+    (in-core over the representatives, streaming per chunk, distributed per
+    shard). On the Pallas path the ``(n, L)`` distance matrix never exists —
+    x is read from HBM once per round. Invalid candidate rows
+    (``cvalid == 0``: the unfilled tail of a fixed-capacity batch) can never
+    win the min; zero-weight rows are inert in the cost.
+
+    ``n_dist`` on the result is the pass's distance-computation count in the
+    paper's unit — ``active_points · valid_candidates`` — and is the same
+    number for every ``impl``.
+    """
+    n_dist = (
+        jnp.sum((w > 0).astype(jnp.float32))
+        * jnp.sum((cvalid > 0).astype(jnp.float32))
+    )
+    if _resolve(impl) == "pallas":
+        from repro.kernels import min_sqdist_update as msu
+
+        interpret = jax.default_backend() != "tpu"
+        new, cost = msu.min_sqdist_update_pallas(
+            x, w, cand, cvalid, mind2, interpret=interpret
+        )
+        return MinSqDistUpdate(new, cost, n_dist)
+    out = ref.min_sqdist_update(x, w, cand, cvalid, mind2)
+    return out._replace(n_dist=n_dist)
+
+
+def min_sqdist_update_chunk(
+    x: jax.Array,
+    w: jax.Array,
+    cand: jax.Array,
+    cvalid: jax.Array,
+    mind2: jax.Array,
+    *,
+    chunk_size: int,
+    impl: str | None = None,
+) -> MinSqDistUpdate:
+    """Chunk-shaped :func:`min_sqdist_update` for streaming k-means|| passes.
+
+    Padding contract of :func:`assign_update_chunk`: a ragged tail chunk is
+    padded to the static shape, padding rows carry weight 0 (inert in the
+    cost) and min-d² 0, and the per-row output is sliced back to ``n``.
+    """
+    n, x = _pad_to_chunk(x, chunk_size)
+    pad = chunk_size - n
+    w = jnp.pad(w.astype(jnp.float32), (0, pad))
+    mind2 = jnp.pad(mind2.astype(jnp.float32), (0, pad))
+    out = min_sqdist_update(x, w, cand, cvalid, mind2, impl=impl)
+    return out._replace(mind2=out.mind2[:n])
 
 
 def assign_update_pruned(

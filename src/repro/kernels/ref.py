@@ -19,14 +19,18 @@ import jax.numpy as jnp
 
 __all__ = [
     "AssignUpdate",
+    "MinSqDistUpdate",
     "PrunedAssignUpdate",
     "pairwise_sqdist",
     "assign_top2",
     "assign_update",
     "assign_update_pruned",
     "cluster_sums",
+    "min_sqdist_update",
     "weighted_error",
 ]
+
+_BIG = 3.0e38  # same "masked distance" sentinel the Pallas kernels use
 
 
 class AssignUpdate(NamedTuple):
@@ -71,6 +75,46 @@ class PrunedAssignUpdate(NamedTuple):
     counts: jax.Array  # [K] f32, Σ 1[assign==k]·w
     err: jax.Array  # scalar f32, Σ_{active} w·d1 (partial error)
     n_dist: jax.Array | None = None  # scalar f32, filled by the ops layer
+
+
+class MinSqDistUpdate(NamedTuple):
+    """One k-means|| fold pass (ADR 0005): the running per-point minimum
+    squared distance to the growing candidate set, updated with one batch of
+    new candidates, plus the weighted cost ``φ = Σ w·min-d²`` of the updated
+    state — everything one oversampling round needs from one data pass.
+    Produced in a single HBM read of x by the Pallas kernel in
+    ``min_sqdist_update.py``; this oracle is the two-line reference."""
+
+    mind2: jax.Array  # [n] f32, updated running min squared distance
+    cost: jax.Array  # scalar f32, Σ w·mind2 over the updated state
+    n_dist: jax.Array | None = None  # scalar f32: distance evaluations the
+    # pass required (active rows × valid candidates; the paper's cost unit).
+    # Filled by the ops layer — identical across impls by construction.
+
+
+def min_sqdist_update(
+    x: jax.Array,
+    w: jax.Array,
+    cand: jax.Array,
+    cvalid: jax.Array,
+    mind2: jax.Array,
+) -> MinSqDistUpdate:
+    """Reference semantics for the k-means|| fold kernel.
+
+    ``cand [L, d]`` is a fixed-capacity batch of new candidates with validity
+    mask ``cvalid [L]`` (invalid rows are masked to the ``_BIG`` sentinel, so
+    they can never win the min — the static-shape analogue of a ragged
+    candidate list). ``mind2 [n]`` is the running min squared distance to all
+    candidates folded so far; entries may be ``_BIG`` on the very first fold.
+    Zero-weight rows still update their ``mind2`` but contribute nothing to
+    the cost.
+    """
+    w = w.astype(jnp.float32)
+    d2 = pairwise_sqdist(x, cand)  # [n, L]
+    d2 = jnp.where(cvalid.astype(bool)[None, :], d2, _BIG)
+    new = jnp.minimum(mind2.astype(jnp.float32), jnp.min(d2, axis=-1))
+    cost = jnp.sum(w * new)
+    return MinSqDistUpdate(new, cost)
 
 
 def pairwise_sqdist(x: jax.Array, c: jax.Array) -> jax.Array:

@@ -115,6 +115,99 @@ def assign_update_hbm_bytes(
         "total_bytes": float(reads + writes),
     }
 
+def min_sqdist_blocking(
+    d: int,
+    l: int,
+    *,
+    bn: int | None = None,
+    bl: int = 128,
+    vmem_budget_bytes: int = KERNEL_VMEM_BUDGET,
+) -> dict[str, Any]:
+    """Block-size selection for the k-means|| fold kernel
+    (``kernels/min_sqdist_update.py``; ADR 0005).
+
+    Resident f32 buffers per grid step: the ``[bn, dp]`` x tile, one
+    ``[bl, dp]`` candidate tile with its ``[1, bl]`` validity row, and three
+    ``[bn, 1]`` columns (weights, incoming min-d², the carried output).
+    Unlike the fused assign+update kernel there is no ``[K, d]`` accumulator
+    to pin, so after the candidate tile is reserved the whole budget goes to
+    ``bn`` — the kernel always fits (``fused_ok`` has no analogue here).
+    """
+    dp = _ceil_to(max(d, 1), 128)
+    lp = _ceil_to(max(l, 1), bl)
+    ctile_bytes = 4 * bl * dp + 4 * bl  # candidate tile + validity row
+    if bn is None:
+        avail = max(vmem_budget_bytes - ctile_bytes, 4 * dp * 8)
+        # x tile [bn, dp] + three [bn, 1] columns per row
+        bn = max(8, min(1024, (avail // (4 * (dp + 3))) // 8 * 8))
+    vmem_bytes = ctile_bytes + 4 * bn * dp + 4 * 3 * bn + 4
+    return {"bn": bn, "bl": bl, "dp": dp, "lp": lp, "vmem_bytes": vmem_bytes}
+
+
+def min_sqdist_hbm_bytes(
+    n: int, d: int, l: int, *, bn: int | None = None, dtype_bytes: int = 4
+) -> dict[str, float]:
+    """Analytic HBM traffic of one k-means|| fold pass.
+
+    Fused (the kernel): x, weights and the running min-d² are read once,
+    candidate tiles are re-fetched per row block, and only the updated
+    min-d² plus the scalar cost are written — the ``(n, L)`` distance
+    matrix never exists. Composed (the jnp oracle under no fusion):
+    ``pairwise_sqdist`` writes ``[n, L]`` distances that the min/cost
+    reductions then re-read. ``bench_init`` persists both so the L-fold
+    intermediate-traffic cut is tracked.
+    """
+    bn = bn or min_sqdist_blocking(d, l)["bn"]
+    x_bytes = dtype_bytes * n * d
+    c_refetch = dtype_bytes * -(-n // bn) * l * d
+    state_bytes = 4 * n  # the running min-d², read and written once
+    fused_reads = x_bytes + 4 * n + state_bytes + c_refetch
+    fused_writes = state_bytes + 4
+    dist_bytes = 4.0 * n * l  # the [n, L] intermediate the fusion removes
+    composed_reads = x_bytes + dtype_bytes * l * d + 4 * n + state_bytes + 2 * dist_bytes
+    composed_writes = dist_bytes + state_bytes + 4
+    return {
+        "read_bytes": float(fused_reads),
+        "write_bytes": float(fused_writes),
+        "total_bytes": float(fused_reads + fused_writes),
+        "composed_total_bytes": float(composed_reads + composed_writes),
+        "intermediate_bytes_removed": float(3 * dist_bytes),
+    }
+
+
+def kmeans_ll_cost(
+    n: int,
+    d: int,
+    k: int,
+    *,
+    oversampling: int | None = None,
+    rounds: int = 5,
+    dtype_bytes: int = 4,
+) -> dict[str, float]:
+    """Expected cost of a k-means|| init vs sequential K-means++ (ADR 0005).
+
+    K-means++ makes ``K−1`` sequential full-data passes of ``n`` distance
+    evaluations each; k-means|| makes ``rounds + 2`` passes total (seed
+    fold, ``rounds`` fold+select passes, one weighting pass) with expected
+    candidate count ``1 + rounds·ℓ``, then runs K-means++ on the candidates
+    only. Counts are expectations — per-round Bernoulli draws are ~ℓ.
+    """
+    l = oversampling if oversampling is not None else 2 * k
+    n_cand = 1.0 + rounds * l
+    fold_ops = n * 1.0 + sum(n * float(l) for _ in range(rounds))
+    weighting_ops = n * n_cand
+    candidate_pp_ops = n_cand * max(k - 1, 1)
+    per_pass = min_sqdist_hbm_bytes(n, d, max(l, 1), dtype_bytes=dtype_bytes)
+    return {
+        "sequential_passes": float(rounds + 2),
+        "sequential_passes_kmeanspp": float(max(k - 1, 1)),
+        "n_candidates": n_cand,
+        "distance_ops": fold_ops + weighting_ops + candidate_pp_ops,
+        "distance_ops_kmeanspp": float(n) * max(k - 1, 1),
+        "hbm_bytes_per_fold_pass": per_pass["total_bytes"],
+    }
+
+
 def assign_update_pruned_cost(
     n: int,
     d: int,

@@ -9,6 +9,10 @@ the (tiny) representative set.
 """
 
 from repro.streaming.init import streaming_initial_partition
+from repro.streaming.kmeans_ll import (
+    StreamKMeansLLResult,
+    kmeans_parallel_streaming,
+)
 from repro.streaming.stream_bwkm import (
     StreamBWKMResult,
     StreamingLloydResult,
@@ -23,6 +27,8 @@ from repro.streaming.stream_bwkm import (
 __all__ = [
     "fit",
     "fit_streaming",
+    "kmeans_parallel_streaming",
+    "StreamKMeansLLResult",
     "streaming_error",
     "streaming_lloyd",
     "streaming_lloyd_step",

@@ -1,0 +1,174 @@
+"""Out-of-core k-means|| over a :class:`ChunkSource` (ADR 0005; DESIGN §12).
+
+The in-core oversampling loop (``core.kmeans_ll``) holds the per-point
+min-d² state resident; out of core the same state lives on the host as one
+f32 array per chunk (4 bytes/point — the same host-state pattern as the
+streaming Lloyd bounds) and is re-fed to the jitted chunk program each
+pass. Pass structure:
+
+  * pass 0      — fold the (reservoir-drawn) first seed into every chunk's
+                  min-d², accumulating the exact cost ``φ₀``;
+  * pass 1..R   — per chunk: fold the PREVIOUS round's candidate batch
+                  (one ``min_sqdist_update_chunk`` call — one device read
+                  of x per round), then Bernoulli-select this round's
+                  candidates on the host against the freshly updated
+                  min-d². The normaliser is the cost accumulated by the
+                  previous pass, which lags the fold by one round: since
+                  ``φ`` is non-increasing this only *under*-samples
+                  (expected draws ``ℓ·φ_r/φ_{r−1} ≤ ℓ``), a conservative
+                  deviation the oversampling factor absorbs (DESIGN §12);
+  * final pass  — assign every point to its nearest candidate
+                  (``assign_update_chunk``; this fold subsumes the last
+                  round's candidates) to weight the candidate set, then
+                  reduce with weighted K-means++ on the host.
+
+``rounds + 2`` sequential passes total, against the ``K − 1`` passes of
+sequential K-means++ — the whole point of the oversampling construction.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kmeans_ll as core_ll
+from repro.core import kmeanspp
+from repro.data.chunks import ChunkSource, padded_device_chunks, reservoir_sample
+from repro.kernels import ops
+
+__all__ = ["StreamKMeansLLResult", "kmeans_parallel_streaming"]
+
+_BIG = 3.0e38
+
+
+class StreamKMeansLLResult(NamedTuple):
+    centroids: jax.Array  # [k, d]
+    n_candidates: int  # candidates the oversampling rounds produced
+    passes: int  # sequential data passes (rounds + 2)
+    distances: float  # distance evaluations (paper's unit)
+
+
+def _pad_batch(cands: np.ndarray, cap: int, d: int) -> tuple[jax.Array, jax.Array]:
+    """Pack a ragged candidate batch into the static ``[cap, d]`` shape the
+    chunk program compiles once for, unfilled rows parked at the far
+    sentinel with validity 0 (the in-core kernel contract)."""
+    batch = np.full((cap, d), core_ll._FAR, np.float32)
+    valid = np.zeros((cap,), np.float32)
+    m = min(len(cands), cap)
+    if m:
+        batch[:m] = cands[:m]
+        valid[:m] = 1.0
+    return jnp.asarray(batch), jnp.asarray(valid)
+
+
+def kmeans_parallel_streaming(
+    key: jax.Array,
+    source: ChunkSource,
+    k: int,
+    *,
+    oversampling: int | None = None,
+    rounds: int | None = None,
+    impl: str | None = None,
+) -> StreamKMeansLLResult:
+    """k-means|| seeding of ``k`` centroids from a chunked stream.
+
+    Matches :func:`repro.core.kmeans_ll.kmeans_parallel` semantics on the
+    unweighted stream (chunk validity is the weight vector), with the
+    one-round normaliser lag documented in the module docstring. Host
+    memory: 4 bytes/point of min-d² state plus the O(ℓ·rounds) candidate
+    set; device memory: one padded chunk at a time.
+    """
+    n, d = source.n_points, source.dim
+    l = int(oversampling) if oversampling is not None else core_ll.default_oversampling(k)
+    r = int(rounds) if rounds is not None else 5
+    if l < 1 or r < 1:
+        raise ValueError(f"oversampling and rounds must be >= 1, got {l}, {r}")
+    impl = ops.resolve_impl(impl)
+    cap_round = max(8, -(-2 * l // 8) * 8)
+    cs = source.chunk_size
+
+    key_seed, key_pp = jax.random.split(jax.random.fold_in(key, 0), 2)
+    seed_int = int(jax.random.randint(key_seed, (), 0, 2**31 - 1))
+    first = np.asarray(reservoir_sample(source, 1, seed_int), np.float32)
+
+    cands: list[np.ndarray] = [first]
+    new_cands = first
+    mind2: list[np.ndarray] = []
+    phi = float("inf")
+    distances = 0.0
+    passes = 0
+
+    for p in range(r + 1):
+        batch, bvalid = _pad_batch(new_cands, cap_round, d)
+        do_fold = len(new_cands) > 0
+        phi_acc = 0.0
+        picked: list[np.ndarray] = []
+        picked_u: list[np.ndarray] = []
+        key_round = jax.random.fold_in(key, p + 1)
+        for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
+            if p == 0:
+                mind2.append(np.full((nv,), _BIG, np.float32))
+            wv = (jnp.arange(cs) < nv).astype(jnp.float32)
+            if do_fold:
+                m_in = np.zeros((cs,), np.float32)
+                m_in[:nv] = mind2[i]
+                out = ops.min_sqdist_update_chunk(
+                    x_dev, wv, batch, bvalid, jnp.asarray(m_in),
+                    chunk_size=cs, impl=impl,
+                )
+                mind2[i] = np.asarray(out.mind2[:nv], np.float32)
+                phi_acc += float(out.cost)
+                distances += float(out.n_dist)
+            if p > 0:
+                # Bernoulli selection on the host: fresh min-d², previous
+                # pass's φ as the (lagging, conservative) normaliser
+                u = np.asarray(
+                    jax.random.uniform(jax.random.fold_in(key_round, i), (nv,))
+                )
+                prob = np.minimum(1.0, l * mind2[i] / max(phi, 1e-30))
+                idx = np.flatnonzero(u < prob)
+                if idx.size:
+                    # gather the few accepted rows on device; only O(|idx|·d)
+                    # bytes cross back to the host, not the whole chunk
+                    picked.append(np.asarray(x_dev[jnp.asarray(idx)]))
+                    picked_u.append(u[idx])
+        if do_fold:
+            phi = phi_acc
+        passes += 1
+        if p == 0:
+            # the seed is folded; pass 1 is selection-only (φ₀ is already
+            # exact, so there is nothing to fold until round 1 has drawn)
+            new_cands = np.zeros((0, d), np.float32)
+        if p > 0:
+            if picked:
+                sel = np.concatenate(picked)
+                sel_u = np.concatenate(picked_u)
+                if len(sel) > cap_round:  # tail event: E[draws] <= l
+                    sel = sel[np.argsort(sel_u)[:cap_round]]
+                new_cands = sel
+                cands.append(sel)
+            else:
+                new_cands = np.zeros((0, d), np.float32)
+
+    # weighting pass: nearest-candidate assignment over the full candidate
+    # set (this fold subsumes the final round's candidates)
+    cand_all = jnp.asarray(np.concatenate(cands))
+    weights = jnp.zeros((cand_all.shape[0],), jnp.float32)
+    for x_dev, nv in padded_device_chunks(source):
+        wv = (jnp.arange(cs) < nv).astype(jnp.float32)
+        au = ops.assign_update_chunk(x_dev, wv, cand_all, chunk_size=cs, impl=impl)
+        weights = weights + au.counts
+        distances += float(au.n_dist)
+    passes += 1
+
+    distances += float(cand_all.shape[0]) * max(k - 1, 1)
+    c = kmeanspp.weighted_kmeanspp(key_pp, cand_all, weights, k)
+    return StreamKMeansLLResult(
+        centroids=c,
+        n_candidates=int(cand_all.shape[0]),
+        passes=passes,
+        distances=distances,
+    )

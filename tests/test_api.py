@@ -158,13 +158,28 @@ def test_predict_score_transform_out_of_core(tmp_path):
 # ------------------------------------------------------------ init registry
 def test_init_registry_names_resolve_in_config():
     x = _points(seed=4, n=2000)
-    for init in ["kmeans++", "forgy", "afkmc2"]:
+    for init in ["kmeans++", "forgy", "afkmc2", "kmeans||"]:
         m = repro.BWKM(k=4, init=init, max_iters=6, seed=2).fit(x)
         err = error_f64(x, m.centroids_)
         assert np.isfinite(err)
     with pytest.raises(ValueError, match="unknown init"):
         repro.BWKM(k=4, init="nope")
-    assert set(repro.list_inits()) >= {"kmeans++", "forgy", "afkmc2", "reservoir"}
+    assert set(repro.list_inits()) >= {
+        "kmeans++", "forgy", "afkmc2", "reservoir", "kmeans||",
+    }
+
+
+@pytest.mark.parametrize("init", ["kmeans++", "forgy", "afkmc2", "kmeans||"])
+def test_init_strategies_are_deterministic_per_key(init):
+    """ISSUE 5 satellite: the same key + the same init name must produce the
+    identical centroids — seeding is a pure function of (key, data)."""
+    x = _points(seed=11, n=1500)
+    fits = [
+        repro.BWKM(k=4, init=init, max_iters=3, seed=7).fit(x) for _ in range(2)
+    ]
+    np.testing.assert_array_equal(
+        np.asarray(fits[0].centroids_), np.asarray(fits[1].centroids_)
+    )
 
 
 def test_config_level_init_sample_size():
@@ -253,7 +268,7 @@ def _restore_kernel_impl():
 
 
 @pytest.mark.parametrize("impl", ["ref", "pallas"])
-@pytest.mark.parametrize("init", ["kmeans++", "forgy"])
+@pytest.mark.parametrize("init", ["kmeans++", "forgy", "kmeans||"])
 def test_engine_matrix_agrees_under_every_kernel_impl(
     impl, init, _restore_kernel_impl
 ):

@@ -25,7 +25,7 @@ EXPECTED_SURFACE = [
 ]
 
 EXPECTED_ENGINES = ["distributed", "incore", "streaming"]
-EXPECTED_INITS = ["afkmc2", "forgy", "kmeans++", "reservoir"]
+EXPECTED_INITS = ["afkmc2", "forgy", "kmeans++", "kmeans||", "reservoir"]
 
 
 def test_public_surface_is_pinned():

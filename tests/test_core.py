@@ -52,6 +52,95 @@ def test_afkmc2_selects_rows():
         assert (np.abs(xs - row).sum(1) < 1e-6).any()
 
 
+def test_forgy_never_seeds_zero_weight_padding_rows():
+    """ISSUE 5 regression: on a padded partition with fewer positive-weight
+    rows than K, the Gumbel top-k used to run out of finite scores and hand
+    back padding rows as seeds. It must duplicate valid rows instead."""
+    rng = np.random.RandomState(0)
+    reps = np.zeros((64, 3), np.float32)  # mostly padding, like a Partition
+    reps[:3] = rng.normal(size=(3, 3)).astype(np.float32) + 40.0
+    w = np.zeros((64,), np.float32)
+    w[:3] = 2.0
+    c = forgy(jax.random.PRNGKey(0), jnp.asarray(reps), 5, w=jnp.asarray(w))
+    norms = np.linalg.norm(np.asarray(c), axis=1)
+    assert norms.min() > 1.0, f"padding row seeded: {norms}"
+    # every seed is one of the three valid rows
+    for row in np.asarray(c):
+        assert (np.abs(reps[:3] - row).sum(1) < 1e-6).any()
+    # same contract under tracing (the registry path is eager, but forgy is
+    # documented jit-compatible)
+    cj = jax.jit(lambda k, x, w: forgy(k, x, 5, w=w))(
+        jax.random.PRNGKey(0), jnp.asarray(reps), jnp.asarray(w)
+    )
+    assert np.linalg.norm(np.asarray(cj), axis=1).min() > 1.0
+    # and no positive weight at all is an error, not silent garbage
+    with pytest.raises(ValueError, match="positive weight"):
+        forgy(jax.random.PRNGKey(0), jnp.asarray(reps), 5, w=jnp.zeros(64))
+
+
+def test_forgy_weighted_dense_unchanged():
+    """The fallback must not disturb the well-posed case: with >= K
+    positive-weight rows all seeds are distinct data rows."""
+    x = gmm(jax.random.PRNGKey(30), 100, 3, 4)
+    w = jnp.ones(100)
+    c = np.asarray(forgy(jax.random.PRNGKey(1), x, 5, w=w))
+    assert len(np.unique(c, axis=0)) == 5
+    xs = np.asarray(x)
+    for row in c:
+        assert (np.abs(xs - row).sum(1) < 1e-6).any()
+
+
+def _jaxpr_eqns_with_shape(jaxpr, shape, acc=None):
+    """All (primitive-name, out-shape) eqns producing ``shape``, recursing
+    into call/scan/pjit sub-jaxprs."""
+    acc = [] if acc is None else acc
+    for eqn in jaxpr.eqns:
+        for v in eqn.outvars:
+            if tuple(getattr(getattr(v, "aval", None), "shape", ())) == shape:
+                acc.append(eqn.primitive.name)
+        for param in eqn.params.values():
+            sub = param if isinstance(param, (tuple, list)) else [param]
+            for p in sub:
+                if isinstance(p, jax.core.ClosedJaxpr):
+                    _jaxpr_eqns_with_shape(p.jaxpr, shape, acc)
+                elif isinstance(p, jax.core.Jaxpr):
+                    _jaxpr_eqns_with_shape(p, shape, acc)
+    return acc
+
+
+def test_afkmc2_proposals_are_o_n_memory_and_bit_identical():
+    """ISSUE 5 regression: proposal sampling used to materialise an
+    ``[chain_length, n]`` logits matrix (``logq[None, :].repeat(...)``)
+    before ``categorical``. The batch must come from ``shape=`` instead —
+    no reshape/broadcast/concat may build an [m, n] logits operand — and
+    the draws must be bit-identical to the old expression (categorical
+    broadcasts internally), so fixed seeds keep their centroids."""
+    n, m, k = 500, 64, 4
+    x = gmm(jax.random.PRNGKey(31), n, 3, k)
+
+    jaxpr = jax.make_jaxpr(lambda key: afkmc2(key, x, k, chain_length=m))(
+        jax.random.PRNGKey(0)
+    )
+    material = [
+        p
+        for p in _jaxpr_eqns_with_shape(jaxpr.jaxpr, (m, n))
+        if p in ("reshape", "concatenate")
+    ]
+    assert not material, f"[chain_length, n] logits materialised via {material}"
+
+    # seed compatibility: the new batched draw is the old draw, bit for bit
+    logq = jnp.log(jnp.ones(n) / n)
+    kidx = jax.random.PRNGKey(7)
+    old = jax.random.categorical(kidx, logq[None, :].repeat(m, 0))
+    new = jax.random.categorical(kidx, logq, shape=(m,))
+    np.testing.assert_array_equal(np.asarray(old), np.asarray(new))
+
+    # fixed key end-to-end determinism
+    c1 = afkmc2(jax.random.PRNGKey(9), x, k, chain_length=m)
+    c2 = afkmc2(jax.random.PRNGKey(9), x, k, chain_length=m)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
 # ---------------------------------------------------------------- lloyd
 def test_weighted_lloyd_monotone_weighted_error():
     key = jax.random.PRNGKey(6)

@@ -104,6 +104,12 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
         res = dist_bwkm.fit_distributed(jax.random.PRNGKey(1), xs,
                             bwkm.BWKMConfig(k=5, max_iters=15))
         c1, err = dist_bwkm.dist_assign_step(xs, res.centroids)
+        # ADR 0005: k-means|| on real shards — psum'd phi, candidates
+        # gathered to every shard — both standalone and as the config init
+        from repro.distributed import dist_kmeans_ll
+        c_ll = dist_kmeans_ll.dist_kmeans_parallel(jax.random.PRNGKey(2), xs, 5)
+        res_ll = dist_bwkm.fit_distributed(jax.random.PRNGKey(1), xs,
+                            bwkm.BWKMConfig(k=5, max_iters=15, init="kmeans||"))
         # ADR 0004: pruned dist_lloyd on real shards — bounds live with the
         # points, drift replicated, psum'd stats; must equal its dense mode
         ll_p = dist_bwkm.dist_lloyd(xs, x[:5] + 0.25, max_iters=20,
@@ -117,7 +123,10 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
     print(json.dumps({"e_dist": e, "e_core": e_core,
                       "stop": res.stop_reason, "err_step": float(err),
                       "lloyd_cdiff": cdiff, "lloyd_iters": [ll_p.iters, ll_d.iters],
-                      "lloyd_dist": [ll_p.distances, ll_d.distances]}))
+                      "lloyd_dist": [ll_p.distances, ll_d.distances],
+                      "e_kmeans_ll_seed": float(metrics.kmeans_error(x, c_ll)),
+                      "e_kmeans_ll_fit": float(metrics.kmeans_error(x, res_ll.centroids)),
+                      "kmeans_ll_stop": res_ll.stop_reason}))
     """
 )
 
@@ -138,6 +147,12 @@ def test_dist_bwkm_on_8_fake_devices():
     assert out["stop"] in ("boundary-empty", "max-iters")
     assert out["lloyd_cdiff"] <= 1e-5, out  # pruned ≡ dense on 8 shards
     assert out["lloyd_dist"][0] < out["lloyd_dist"][1], out  # real saving
+    # k-means|| on 8 fake devices: the fit converges and the standalone
+    # seeding is sane (ADR 0005 acceptance)
+    assert out["kmeans_ll_stop"] in ("boundary-empty", "max-iters")
+    rel_ll = abs(out["e_kmeans_ll_fit"] - out["e_core"]) / out["e_core"]
+    assert rel_ll < 0.05, out
+    assert out["e_kmeans_ll_seed"] < 10 * out["e_core"], out
 
 
 def test_checkpoint_roundtrip_and_elastic_restore(tmp_path):

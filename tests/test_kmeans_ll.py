@@ -1,0 +1,202 @@
+"""k-means|| init subsystem (ISSUE 5, ADR 0005): the min-d² fold kernel
+seam (ref oracle ≡ Pallas interpret), the in-core oversampling loop, the
+streaming multi-pass driver, the distributed psum/all-gather variant, and
+the roofline accounting. Cross-engine agreement uses Lloyd-polished error
+on well-separated data (the repo's driver-equivalence convention)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans_ll
+from repro.core.kmeanspp import kmeanspp
+from repro.core.lloyd import weighted_lloyd
+from repro.data import chunks as ck
+from repro.distributed import dist_bwkm, dist_kmeans_ll, sharding as sh
+from repro.kernels import ops, ref
+from repro.launch.mesh import make_smoke_mesh
+from repro.roofline import analysis
+from repro.streaming.kmeans_ll import kmeans_parallel_streaming
+
+from helpers import error_f64, gmm
+
+_BIG = 3.0e38
+
+
+# ------------------------------------------------------------- kernel seam
+@pytest.mark.parametrize(
+    "n,d,l", [(1000, 3, 9), (257, 17, 1), (64, 130, 33), (50, 5, 8)]
+)
+def test_min_sqdist_update_pallas_matches_ref(n, d, l):
+    rng = np.random.RandomState(n + d + l)
+    x = jnp.asarray(rng.randn(n, d), jnp.float32)
+    w = jnp.asarray(rng.rand(n) * (rng.rand(n) > 0.2), jnp.float32)
+    cand = jnp.asarray(rng.randn(l, d) * 2, jnp.float32)
+    cv = jnp.asarray((rng.rand(l) > 0.3).astype(np.float32)).at[0].set(1.0)
+    m0 = jnp.full((n,), _BIG, jnp.float32)
+    r = ops.min_sqdist_update(x, w, cand, cv, m0, impl="ref")
+    p = ops.min_sqdist_update(x, w, cand, cv, m0, impl="pallas")
+    np.testing.assert_allclose(
+        np.asarray(r.mind2), np.asarray(p.mind2), rtol=1e-5, atol=1e-5
+    )
+    np.testing.assert_allclose(float(r.cost), float(p.cost), rtol=1e-4)
+    assert float(r.n_dist) == float(p.n_dist)
+    # second fold only decreases the state, for both impls
+    r2 = ops.min_sqdist_update(x, w, cand + 1.0, cv, r.mind2, impl="ref")
+    assert np.all(np.asarray(r2.mind2) <= np.asarray(r.mind2) + 1e-6)
+
+
+def test_min_sqdist_update_semantics_vs_brute_force():
+    rng = np.random.RandomState(3)
+    x = rng.randn(200, 4).astype(np.float32)
+    w = rng.rand(200).astype(np.float32)
+    cand = rng.randn(7, 4).astype(np.float32)
+    cv = np.array([1, 1, 0, 1, 0, 1, 1], np.float32)
+    prev = rng.rand(200).astype(np.float32) * 50
+    out = ref.min_sqdist_update(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(cand), jnp.asarray(cv),
+        jnp.asarray(prev),
+    )
+    d2 = ((x[:, None, :] - cand[None]) ** 2).sum(-1)[:, cv > 0]
+    expect = np.minimum(prev, d2.min(axis=1))
+    np.testing.assert_allclose(np.asarray(out.mind2), expect, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(float(out.cost), float((w * expect).sum()), rtol=1e-4)
+    # invalid candidates are not charged distance ops
+    assert float(out.n_dist or 0) == 0  # ref oracle leaves n_dist to ops
+    charged = ops.min_sqdist_update(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(cand), jnp.asarray(cv),
+        jnp.asarray(prev), impl="ref",
+    )
+    assert float(charged.n_dist) == 200 * 5
+
+
+def test_min_sqdist_update_chunk_padding_is_inert():
+    rng = np.random.RandomState(4)
+    x = jnp.asarray(rng.randn(37, 5), jnp.float32)
+    w = jnp.asarray(rng.rand(37), jnp.float32)
+    cand = jnp.asarray(rng.randn(8, 5), jnp.float32)
+    cv = jnp.ones((8,), jnp.float32)
+    m0 = jnp.full((37,), _BIG, jnp.float32)
+    whole = ops.min_sqdist_update(x, w, cand, cv, m0, impl="ref")
+    for impl in ("ref", "pallas"):
+        chunked = ops.min_sqdist_update_chunk(
+            x, w, cand, cv, m0, chunk_size=64, impl=impl
+        )
+        assert chunked.mind2.shape == (37,)
+        np.testing.assert_allclose(
+            np.asarray(chunked.mind2), np.asarray(whole.mind2), rtol=1e-5
+        )
+        np.testing.assert_allclose(float(chunked.cost), float(whole.cost), rtol=1e-4)
+
+
+# ------------------------------------------------------------ in-core loop
+def test_kmeans_parallel_deterministic_and_kmeanspp_quality():
+    x = gmm(jax.random.PRNGKey(0), 6000, 3, 4, spread=30.0, noise=0.5)
+    w = jnp.ones(6000)
+    res = kmeans_ll.kmeans_parallel(
+        jax.random.PRNGKey(1), x, w, 4, return_info=True
+    )
+    c2 = kmeans_ll.kmeans_parallel(jax.random.PRNGKey(1), x, w, 4)
+    np.testing.assert_array_equal(np.asarray(res.centroids), np.asarray(c2))
+    assert res.passes == 7  # rounds=5 default: seed fold + 5 rounds + weighting
+    assert 4 <= int(res.n_candidates) <= 1 + 5 * 16  # within the static caps
+    # seed quality: within 2x of a sequential K-means++ draw on separated data
+    e_ll = error_f64(x, res.centroids)
+    e_pp = error_f64(x, kmeanspp(jax.random.PRNGKey(1), x, 4))
+    assert e_ll < 2.0 * e_pp, (e_ll, e_pp)
+
+
+def test_kmeans_parallel_never_seeds_zero_weight_rows():
+    rng = np.random.RandomState(0)
+    reps = np.zeros((256, 3), np.float32)
+    reps[:8] = rng.normal(size=(8, 3)).astype(np.float32) + 50.0
+    w = np.zeros((256,), np.float32)
+    w[:8] = 10.0
+    c = kmeans_ll.kmeans_parallel(
+        jax.random.PRNGKey(3), jnp.asarray(reps), jnp.asarray(w), 3
+    )
+    assert np.linalg.norm(np.asarray(c), axis=1).min() > 1.0
+
+
+def test_kmeans_parallel_validates_arguments():
+    x = jnp.zeros((10, 2))
+    with pytest.raises(ValueError, match="must be >= 1"):
+        kmeans_ll.kmeans_parallel(jax.random.PRNGKey(0), x, None, 2, rounds=0)
+    with pytest.raises(ValueError, match="must be >= 1"):
+        kmeans_parallel_streaming(
+            jax.random.PRNGKey(0), ck.ArrayChunkSource(np.zeros((10, 2)), 4), 2,
+            oversampling=0,
+        )
+
+
+# -------------------------------------------------- streaming/distributed
+def _polished_error(x, c, iters=20):
+    w = jnp.ones(x.shape[0])
+    return error_f64(x, weighted_lloyd(jnp.asarray(x), w, c, max_iters=iters).centroids)
+
+
+def test_streaming_kmeans_parallel_agrees_with_incore():
+    """Same resident sample through the in-core loop and the multi-pass
+    ChunkSource driver: both reach the same well-separated optimum, in
+    rounds+2 sequential passes, at ~n·(candidates+rounds·ℓ) distance ops."""
+    x = np.asarray(gmm(jax.random.PRNGKey(0), 6000, 3, 4, spread=30.0, noise=0.5))
+    src = ck.ArrayChunkSource(x, 1024)  # 6 chunks incl. ragged boundaries
+    res = kmeans_parallel_streaming(jax.random.PRNGKey(1), src, 4)
+    assert res.passes == 7
+    assert res.n_candidates >= 4
+    assert res.distances > 0
+    c_in = kmeans_ll.kmeans_parallel(jax.random.PRNGKey(1), jnp.asarray(x), None, 4)
+    e_s = _polished_error(x, res.centroids)
+    e_i = _polished_error(x, c_in)
+    assert abs(e_s - e_i) / e_i < 1e-3, (e_s, e_i)
+    # deterministic
+    res2 = kmeans_parallel_streaming(jax.random.PRNGKey(1), src, 4)
+    np.testing.assert_array_equal(
+        np.asarray(res.centroids), np.asarray(res2.centroids)
+    )
+
+
+def test_dist_kmeans_parallel_no_mesh_is_bit_identical_to_incore():
+    x = gmm(jax.random.PRNGKey(2), 3000, 3, 4, spread=30.0, noise=0.5)
+    c_d = dist_kmeans_ll.dist_kmeans_parallel(jax.random.PRNGKey(1), x, 4)
+    c_i = kmeans_ll.kmeans_parallel(jax.random.PRNGKey(1), x, None, 4)
+    np.testing.assert_array_equal(np.asarray(c_d), np.asarray(c_i))
+
+
+def test_dist_kmeans_parallel_on_mesh_agrees_with_incore():
+    """Trivial mesh exercises the shard_map fold (psum'd φ, gathered
+    candidates) without collectives changing the math."""
+    x = gmm(jax.random.PRNGKey(5), 6000, 3, 4, spread=30.0, noise=0.5)
+    with sh.use_mesh(make_smoke_mesh()):
+        xs = dist_bwkm.shard_points(x)
+        c_m = dist_kmeans_ll.dist_kmeans_parallel(jax.random.PRNGKey(1), xs, 4)
+    c_i = kmeans_ll.kmeans_parallel(jax.random.PRNGKey(1), x, None, 4)
+    e_m = _polished_error(np.asarray(x), c_m)
+    e_i = _polished_error(np.asarray(x), c_i)
+    assert abs(e_m - e_i) / e_i < 1e-3, (e_m, e_i)
+
+
+# --------------------------------------------------------------- roofline
+def test_kmeans_ll_roofline_costing():
+    blk = analysis.min_sqdist_blocking(16, 32)
+    assert blk["dp"] == 128 and blk["lp"] == 128
+    assert blk["bn"] >= 8 and blk["bn"] % 8 == 0
+    assert blk["vmem_bytes"] <= analysis.KERNEL_VMEM_BUDGET
+
+    hbm = analysis.min_sqdist_hbm_bytes(100_000, 16, 32)
+    assert hbm["total_bytes"] < hbm["composed_total_bytes"]
+    assert hbm["intermediate_bytes_removed"] > 0
+
+    cost = analysis.kmeans_ll_cost(1_000_000, 16, 27)
+    assert cost["sequential_passes"] == 7 < cost["sequential_passes_kmeanspp"] == 26
+    assert cost["n_candidates"] == 1 + 5 * 54
+    assert cost["distance_ops_kmeanspp"] == 26e6
+
+
+# --------------------------------------------------------------- registry
+def test_registry_resolves_kmeans_ll_aliases():
+    from repro.api.inits import resolve_init
+
+    for name in ("kmeans||", "kmeansll", "kmeans-parallel", "scalable-kmeans++"):
+        assert resolve_init(name).name == "kmeans||"
