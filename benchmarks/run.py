@@ -11,6 +11,8 @@ Emits ``name,us_per_call,derived`` CSV:
   * lloyd_*     — drift-bound pruned Lloyd vs dense (distance-op trajectory)
   * init_*      — seeding strategies at matched budgets (k-means|| vs
                   kmeans++/forgy/afkmc2: passes, distance ops, final error)
+  * service_*   — online service under drift (sustained points/sec, refit
+                  latency, checkpoint size)
 """
 
 from __future__ import annotations
@@ -25,7 +27,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (
-        bench_init, bench_kernels, bench_lloyd, bench_streaming, bench_tradeoff,
+        bench_init, bench_kernels, bench_lloyd, bench_service, bench_streaming,
+        bench_tradeoff,
     )
 
     if args.quick:
@@ -44,6 +47,7 @@ def main() -> None:
     bench_kernels.main([])
     bench_lloyd.main([])
     bench_init.main(["--reps", "1"] if args.quick else [])
+    bench_service.main([])
 
 
 if __name__ == "__main__":

@@ -17,9 +17,11 @@ facade. Changing ``__all__`` below is a public-API change and is pinned by
 
 from repro.api import (
     BWKM,
+    BWKMSession,
     Engine,
     FitResult,
     InitStrategy,
+    ServiceConfig,
     get_engine,
     list_engines,
     list_inits,
@@ -35,10 +37,12 @@ __version__ = "0.2.0"
 __all__ = [
     "BWKM",
     "BWKMConfig",
+    "BWKMSession",
     "ChunkSource",
     "Engine",
     "FitResult",
     "InitStrategy",
+    "ServiceConfig",
     "as_chunk_source",
     "get_engine",
     "list_engines",

@@ -32,6 +32,7 @@ from repro.api.result import FitResult
 from repro.core.bwkm import BWKMConfig
 from repro.data.chunks import padded_device_chunks
 from repro.kernels import ops
+from repro.service.session import BWKMSession, ServiceConfig
 
 __all__ = ["BWKM", "DEFAULT_CHUNK_SIZE"]
 
@@ -101,10 +102,20 @@ class BWKM:
         checkpoint_dir: str | None = None,
         incore_limit_bytes: int = engines.INCORE_LIMIT_BYTES,
         config: BWKMConfig | None = None,
+        service: ServiceConfig | None = None,
         **config_overrides: Any,
     ):
         if engine != "auto":
             engines.get_engine(engine)  # fail fast on typos
+        if service is not None:
+            if config is not None:
+                raise ValueError(
+                    "pass either service= (which carries its own base config) "
+                    "or config=, not both"
+                )
+            if k is not None and k != service.base.k:
+                raise ValueError(f"k={k} conflicts with service.base.k={service.base.k}")
+            config = service.base
         if config is not None:
             if k is not None and k != config.k:
                 raise ValueError(f"k={k} conflicts with config.k={config.k}")
@@ -136,10 +147,13 @@ class BWKM:
         self.checkpoint_dir = checkpoint_dir
         self.incore_limit_bytes = int(incore_limit_bytes)
 
+        self.service = service
+
         self.result_: FitResult | None = None
         self.centroids_ = None
         self.engine_: str | None = None
         self.n_iter_: int | None = None
+        self.session_: BWKMSession | None = None
 
     @property
     def k(self) -> int:
@@ -173,6 +187,27 @@ class BWKM:
 
     def fit_predict(self, data: Any, *, key: jax.Array | None = None) -> np.ndarray:
         return self.fit(data, key=key).predict(data)
+
+    # --------------------------------------------------------- online updates
+    def partial_fit(self, batch: Any) -> "BWKM":
+        """Consume one mini-batch of an unbounded stream (DESIGN.md §13).
+
+        The first call opens a :class:`~repro.service.BWKMSession` (exposed
+        as ``session_``) configured from ``service=`` — or, when none was
+        given, a default :class:`ServiceConfig` around this estimator's
+        ``config`` and ``seed``. After every call ``centroids_`` tracks the
+        live session, so ``predict``/``score``/``transform`` serve the
+        current model. Per-batch metrics land in
+        ``session_.last_metrics``.
+        """
+        if self.session_ is None:
+            service = self.service or ServiceConfig(base=self.config, seed=self.seed)
+            self.session_ = BWKMSession(service)
+        self.session_.partial_fit(batch)
+        self.centroids_ = self.session_.centroids
+        self.engine_ = "service"
+        self.n_iter_ = int(self.session_.state.batches)
+        return self
 
     # ------------------------------------------------- chunked inference ops
     def _require_fitted(self):

@@ -27,13 +27,16 @@ __all__ = [
     "SplitPlan",
     "create_partition",
     "block_stats",
+    "decay_stats",
     "empty_block_stats",
     "combine_block_stats",
     "recompute_stats",
+    "route_into_boxes",
     "split_plan",
     "route_split",
     "apply_split_plan",
     "split_blocks",
+    "split_blocks_virtual",
     "representatives",
     "diagonals",
 ]
@@ -147,6 +150,32 @@ def combine_block_stats(a: BlockStats, b: BlockStats) -> BlockStats:
     )
 
 
+def decay_stats(part: Partition, gamma: float | jax.Array) -> Partition:
+    """Exponential forgetting of block mass (the online service's merge rule,
+    DESIGN.md §13): sums and counts scale by ``gamma`` so old stream batches
+    fade at a configurable half-life, while the boxes stay — they are
+    geometric routing state, and shrinking them without a data pass would
+    break the tight-box containment invariant for the mass that remains."""
+    return part._replace(psum=part.psum * gamma, count=part.count * gamma)
+
+
+def route_into_boxes(
+    x: jax.Array, lo: jax.Array, hi: jax.Array, active: jax.Array
+) -> jax.Array:
+    """Assign every point to the box with the smallest *clipped L∞* distance:
+    containment for points inside some box, nearest box for out-of-sample
+    tails. ``O(n·M)`` elementwise — the one routing rule shared by the
+    streaming pass (`stream_bwkm._box_route_stats`), the distributed shard
+    body (`dist_bwkm._route_into_boxes`), and the online service's
+    mini-batch merge (`service.session`)."""
+    lo_ = jnp.where(active[:, None], lo, _BIG)
+    hi_ = jnp.where(active[:, None], hi, -_BIG)
+    below = jnp.maximum(lo_[None] - x[:, None, :], 0.0)
+    above = jnp.maximum(x[:, None, :] - hi_[None], 0.0)
+    dist = jnp.max(below + above, axis=-1)  # [n, M] clipped L∞
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
 def recompute_stats(part: Partition, x: jax.Array) -> Partition:
     """Recompute (psum, count, lo, hi) for all rows from point memberships."""
     st = block_stats(x, part.block_id, part.capacity)
@@ -238,3 +267,53 @@ def split_blocks(part: Partition, x: jax.Array, chosen: jax.Array) -> Partition:
     new_bid = route_split(x, part.block_id, plan)
     out = apply_split_plan(part._replace(block_id=new_bid), plan)
     return recompute_stats(out, x)
+
+
+def split_blocks_virtual(part: Partition, plan: SplitPlan) -> Partition:
+    """Execute a split round WITHOUT any data pass — the online service path
+    (DESIGN.md §13), where member points are long gone downstream.
+
+    Each child takes the parent's box clipped at the split plane (so future
+    stream batches route into both sides), and the parent's accumulated
+    statistics go wholly to the child containing the parent's representative
+    — the other child starts with zero mass and fills from subsequent
+    batches. The inherited stats over-claim the representative's side by the
+    parent's cross-plane mass; under stat decay that bias washes out at the
+    forgetting half-life, and the misassignment criterion only ever reads the
+    boxes (which are exact), so drift detection stays sound.
+
+    Deterministic and batch-free: resumed sessions replay it bit-identically
+    from checkpointed state.
+    """
+    m, d = part.capacity, part.dim
+    fits = plan.fits
+    onehot = jax.nn.one_hot(plan.axis, d, dtype=bool)  # [M, d]
+    mid_col = plan.mid[:, None]
+
+    # Geometric child boxes: parent box clipped at the split plane. mid lies
+    # inside [lo, hi] along the split axis by construction, so both are valid.
+    hi_left = jnp.where(fits[:, None] & onehot, jnp.minimum(part.hi, mid_col), part.hi)
+    lo_right = jnp.where(onehot, jnp.maximum(part.lo, mid_col), part.lo)
+
+    # The representative's side inherits the parent's mass.
+    safe = jnp.maximum(part.count, 1.0)
+    rep_ax = jnp.take_along_axis(part.psum / safe[:, None], plan.axis[:, None], axis=1)[
+        :, 0
+    ]
+    rep_right = fits & (rep_ax > plan.mid)
+
+    psum_left = jnp.where(rep_right[:, None], 0.0, part.psum)
+    count_left = jnp.where(rep_right, 0.0, part.count)
+    psum_right = jnp.where(rep_right[:, None], part.psum, 0.0)
+    count_right = jnp.where(rep_right, part.count, 0.0)
+
+    # Scatter the right children into their allocated rows; non-splitting
+    # rows target index m and are dropped.
+    idx = jnp.where(fits, plan.right_row, m)
+    out = part._replace(
+        lo=part.lo.at[idx].set(lo_right, mode="drop"),
+        hi=hi_left.at[idx].set(part.hi, mode="drop"),
+        psum=psum_left.at[idx].set(psum_right, mode="drop"),
+        count=count_left.at[idx].set(count_right, mode="drop"),
+    )
+    return apply_split_plan(out, plan)

@@ -35,6 +35,8 @@ __all__ = [
     "MemmapChunkSource",
     "ShardedFileSource",
     "as_chunk_source",
+    "chunk_at",
+    "chunks_from",
     "padded_device_chunks",
     "reservoir_sample",
     "resolve_paths",
@@ -107,6 +109,10 @@ class ArrayChunkSource:
         for start in range(0, self.n_points, self._chunk_size):
             yield self._x[start : start + self._chunk_size]
 
+    def chunk_at(self, index: int) -> np.ndarray:
+        start = _chunk_start(self, index)
+        return self._x[start : start + self._chunk_size]
+
 
 class MemmapChunkSource(ArrayChunkSource):
     """Chunks from a memory-mapped ``.npy`` file.
@@ -125,6 +131,10 @@ class MemmapChunkSource(ArrayChunkSource):
             # np.array(...) forces the page-in into a private buffer here, on
             # the producer side, instead of lazily inside jitted code.
             yield np.array(self._x[start : start + self._chunk_size])
+
+    def chunk_at(self, index: int) -> np.ndarray:
+        start = _chunk_start(self, index)
+        return np.array(self._x[start : start + self._chunk_size])
 
 
 class ShardedFileSource:
@@ -186,6 +196,61 @@ class ShardedFileSource:
                     pending, pending_rows = [], 0
         if pending_rows:
             yield pending[0] if len(pending) == 1 else np.concatenate(pending)
+
+    def chunk_at(self, index: int) -> np.ndarray:
+        start = _chunk_start(self, index)
+        stop = min(start + self._chunk_size, self.n_points)
+        offsets = np.concatenate([[0], np.cumsum(self._rows)])
+        parts: list[np.ndarray] = []
+        for s, (lo, hi) in zip(self.paths, zip(offsets[:-1], offsets[1:])):
+            if hi <= start or lo >= stop:
+                continue
+            arr = np.load(s, mmap_mode="r")
+            parts.append(np.array(arr[max(start - lo, 0) : stop - lo]))
+        return parts[0] if len(parts) == 1 else np.concatenate(parts)
+
+
+def _chunk_start(source: ChunkSource, index: int) -> int:
+    index = int(index)
+    if not 0 <= index < source.n_chunks:
+        raise IndexError(f"chunk index {index} out of range [0, {source.n_chunks})")
+    return index * source.chunk_size
+
+
+def chunk_at(source: ChunkSource, index: int) -> np.ndarray:
+    """Random access to chunk ``index`` of any source.
+
+    Backends implement ``chunk_at`` directly (O(chunk) work); sources that
+    only speak the iteration protocol fall back to skipping through
+    ``chunks()`` — correct, but O(index) chunks of I/O. This is what lets the
+    service resume from a checkpointed stream cursor and lets streaming
+    k-means|| gather accepted candidate rows without a full extra pass.
+    """
+    fn = getattr(source, "chunk_at", None)
+    if fn is not None:
+        return fn(index)
+    _chunk_start(source, index)  # validate range before paying for the scan
+    for i, chunk in enumerate(source.chunks()):
+        if i == index:
+            return np.asarray(chunk)
+    raise IndexError(f"source exhausted before chunk {index}")
+
+
+def chunks_from(source: ChunkSource, start: int) -> Iterator[np.ndarray]:
+    """Iterate ``chunks()`` beginning at chunk index ``start`` (stream-cursor
+    resume). Uses backend random access when available; otherwise skips."""
+    if start == 0:
+        yield from source.chunks()
+        return
+    if not 0 <= start <= source.n_chunks:
+        raise IndexError(f"start chunk {start} out of range [0, {source.n_chunks}]")
+    if getattr(source, "chunk_at", None) is not None:
+        for i in range(start, source.n_chunks):
+            yield chunk_at(source, i)
+        return
+    for i, chunk in enumerate(source.chunks()):
+        if i >= start:
+            yield chunk
 
 
 _GLOB_CHARS = ("*", "?", "[")

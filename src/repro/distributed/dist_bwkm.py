@@ -457,18 +457,12 @@ def _dist_split(part: Partition, x, bid, chosen):
 
 
 def _route_into_boxes(x: jax.Array, part: Partition) -> jax.Array:
-    """Assign every point to the box whose clipped L∞ distance is smallest
-    (containment for in-sample boxes; nearest box for out-of-sample tails).
-    O(n·M) elementwise — runs sharded."""
+    """The shared ``core.partition.route_into_boxes`` clipped-L∞ rule, run
+    sharded: each shard routes its local rows against the replicated boxes."""
     mesh = sh.current_mesh()
 
     def body(x_loc):
-        lo = jnp.where(part.active[:, None], part.lo, _BIG)
-        hi = jnp.where(part.active[:, None], part.hi, -_BIG)
-        below = jnp.maximum(lo[None] - x_loc[:, None, :], 0.0)
-        above = jnp.maximum(x_loc[:, None, :] - hi[None], 0.0)
-        dist = jnp.max(below + above, axis=-1)  # [n_loc, M] clipped L∞
-        return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+        return part_mod.route_into_boxes(x_loc, part.lo, part.hi, part.active)
 
     if mesh is None:
         return body(x)

@@ -1,17 +1,32 @@
-"""Batched serving driver: prefill a batch of prompts, then decode with the
-ring-buffer KV cache (greedy sampling).
+"""Batched serving drivers.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+Two tasks share the entry point (``--task``):
+
+* ``lm`` (default) — prefill a batch of prompts, then decode with the
+  ring-buffer KV cache (greedy sampling)::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-8b --reduced \
+        --batch 4 --prompt-len 32 --gen 32
+
+* ``clusters`` — the long-lived clustering service (DESIGN.md §13): open or
+  resume a :class:`~repro.service.BWKMSession` from ``--checkpoint-dir``,
+  consume a synthetic drifting stream, then serve a burst of concurrent
+  predict requests through the request-coalescing
+  :class:`~repro.service.BatchedPredictor`::
+
+    PYTHONPATH=src python -m repro.launch.serve --task clusters \
+        --checkpoint-dir /tmp/bwkm_svc --k 8 --stream-chunks 16
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs
 from repro.distributed import sharding as sh
@@ -42,7 +57,121 @@ def generate(cfg, params, prompts, gen_len: int, *, greedy: bool = True, key=Non
     return jnp.stack(out, axis=1)
 
 
+def drifting_stream(seed: int, n_chunks: int, rows: int, d: int, k: int):
+    """Synthetic non-stationary stream: cluster centers glide between the
+    first and last chunk — enough drift to exercise the refit path."""
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(k, d).astype(np.float32) * 4.0
+    drift = rng.randn(k, d).astype(np.float32) * 2.0
+    chunks = []
+    for i in range(n_chunks):
+        t = i / max(n_chunks - 1, 1)
+        lab = rng.randint(0, k, rows)
+        chunks.append(
+            ((centers + t * drift)[lab] + 0.3 * rng.randn(rows, d)).astype(np.float32)
+        )
+    return np.concatenate(chunks)
+
+
+def cluster_main(argv=None) -> dict:
+    """The ``--task clusters`` driver; importable for tests."""
+    from repro.core.bwkm import BWKMConfig
+    from repro.data import chunks as ck
+    from repro.service import (
+        BatchedPredictor,
+        BWKMSession,
+        ServiceConfig,
+        resume_service,
+        run_service,
+    )
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--k", type=int, default=8)
+    ap.add_argument("--dim", type=int, default=8)
+    ap.add_argument("--stream-chunks", type=int, default=16)
+    ap.add_argument("--chunk-rows", type=int, default=1024)
+    ap.add_argument("--checkpoint-every", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--request-rows", type=int, default=100)
+    ap.add_argument("--serve-chunk-size", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    x = drifting_stream(
+        args.seed + 1, args.stream_chunks, args.chunk_rows, args.dim, args.k
+    )
+    source = ck.ArrayChunkSource(x, args.chunk_rows)
+    config = ServiceConfig(
+        base=BWKMConfig(k=args.k, max_iters=5), decay=0.95, seed=args.seed
+    )
+
+    t0 = time.time()
+    if args.checkpoint_dir:
+        session, metrics = resume_service(
+            args.checkpoint_dir,
+            source,
+            config=config,
+            checkpoint_every=args.checkpoint_every,
+        )
+    else:
+        session = BWKMSession(config)
+        metrics = run_service(session, source)
+    fit_dt = time.time() - t0
+    n_fed = sum(m["n_points"] for m in metrics)
+    pps = n_fed / fit_dt if fit_dt > 0 else float("inf")
+    print(
+        f"[serve:clusters] consumed {n_fed} pts in {len(metrics)} batches "
+        f"({pps:.0f} pts/s), {sum(m['refit'] for m in metrics)} refits, "
+        f"{int(session.state.partition.n_blocks)} blocks"
+    )
+
+    # Serve a burst of concurrent predict requests: submit from threads,
+    # flush once — they coalesce into ceil(total/chunk_size) kernel calls.
+    predictor = BatchedPredictor(session.centroids, chunk_size=args.serve_chunk_size)
+    rng = np.random.RandomState(args.seed + 2)
+    reqs = [
+        x[rng.randint(0, x.shape[0], args.request_rows)] for _ in range(args.requests)
+    ]
+    tickets: list = [None] * len(reqs)
+
+    def _submit(i):
+        tickets[i] = predictor.submit(reqs[i])
+
+    threads = [threading.Thread(target=_submit, args=(i,)) for i in range(len(reqs))]
+    t0 = time.time()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    predictor.flush()
+    labels = [t.result() for t in tickets]
+    serve_dt = time.time() - t0
+    served_rows = sum(lab.shape[0] for lab in labels)
+    print(
+        f"[serve:clusters] served {len(labels)} requests / {served_rows} rows in "
+        f"{serve_dt * 1e3:.1f}ms via {predictor.stats['n_kernel_calls']} kernel "
+        f"calls ({predictor.stats['rows_padded']} padded rows)"
+    )
+    return {
+        "session": session,
+        "metrics": metrics,
+        "points_per_s": pps,
+        "labels": labels,
+        "predictor_stats": dict(predictor.stats),
+    }
+
+
 def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--task", choices=("lm", "clusters"), default="lm")
+    args, rest = ap.parse_known_args(argv)
+    if args.task == "clusters":
+        return cluster_main(rest)
+    return lm_main(rest)
+
+
+def lm_main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=configs.ARCHS, default="granite-8b")
     ap.add_argument("--reduced", action="store_true", default=True)

@@ -1,0 +1,46 @@
+"""Long-lived clustering service: online BWKM over an unbounded stream.
+
+The batch engines summarise a dataset into a small weighted partition and
+throw the points away — which is exactly the state a continuously running
+service needs to keep alive *between* batches. This package wraps that
+insight into a session (DESIGN.md §13):
+
+  * :class:`BWKMSession` — consumes mini-batches via ``partial_fit``:
+    decayed :class:`~repro.core.partition.BlockStats` merge into the live
+    partition, a short warm-started weighted Lloyd tracks the centroids,
+    and the misassignment boundary decides when to re-split (refit) only
+    the affected cells.
+  * :mod:`repro.service.checkpoint` — full-state save/restore (partition,
+    centroids, Hamerly bound state, RNG key, stream cursor) on the
+    ``train/checkpoint.py`` npz+manifest format; resumed sessions replay
+    the remaining stream bit-identically.
+  * :class:`BatchedPredictor` — serves ``predict``/``transform`` by
+    coalescing concurrent requests into chunk-kernel calls
+    (``assign_top2_chunk`` / ``pairwise_sqdist_chunk``).
+"""
+
+from repro.service.checkpoint import (
+    load_session,
+    save_session,
+    session_state_template,
+)
+from repro.service.predictor import BatchedPredictor
+from repro.service.session import (
+    BWKMSession,
+    ServiceConfig,
+    SessionState,
+    resume_service,
+    run_service,
+)
+
+__all__ = [
+    "BWKMSession",
+    "BatchedPredictor",
+    "ServiceConfig",
+    "SessionState",
+    "load_session",
+    "resume_service",
+    "run_service",
+    "save_session",
+    "session_state_template",
+]

@@ -1,0 +1,115 @@
+"""Session checkpointing on the ``train/checkpoint.py`` npz+manifest format.
+
+One checkpoint = the full :class:`SessionState` pytree (partition boxes and
+stats, centroids, Hamerly bound state, RNG key, batch/point counters) plus a
+manifest carrying the stream cursor and the :class:`ServiceConfig` — enough
+to reconstruct the session with **no** out-of-band information. Save is
+atomic (tmp-dir rename, inherited from ``train.checkpoint.save``), restore
+is bit-identical (npz round-trips arrays exactly; dtypes are re-asserted
+against the template), and the checkpoint step number IS the stream cursor,
+so ``latest_step`` doubles as "first unprocessed chunk".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bwkm import BWKMConfig
+from repro.core.partition import Partition
+from repro.train import checkpoint as train_ckpt
+
+__all__ = ["load_session", "save_session", "session_state_template"]
+
+_SCHEMA = 1
+
+
+def session_state_template(capacity: int, d: int, k: int) -> "SessionState":
+    """Shape/dtype skeleton ``restore`` materialises arrays into."""
+    from repro.service.session import SessionState
+
+    part = Partition(
+        lo=jnp.zeros((capacity, d), jnp.float32),
+        hi=jnp.zeros((capacity, d), jnp.float32),
+        psum=jnp.zeros((capacity, d), jnp.float32),
+        count=jnp.zeros((capacity,), jnp.float32),
+        active=jnp.zeros((capacity,), bool),
+        block_id=jnp.zeros((0,), jnp.int32),
+        n_blocks=jnp.asarray(0, jnp.int32),
+    )
+    return SessionState(
+        partition=part,
+        centroids=jnp.zeros((k, d), jnp.float32),
+        d1=jnp.zeros((capacity,), jnp.float32),
+        d2=jnp.zeros((capacity,), jnp.float32),
+        key=jax.random.PRNGKey(0),
+        batches=jnp.asarray(0, jnp.int32),
+        points=jnp.asarray(0.0, jnp.float32),
+    )
+
+
+def _config_to_manifest(config: "ServiceConfig") -> dict[str, Any]:
+    d = dataclasses.asdict(config)
+    # asdict recurses into the nested BWKMConfig; keep it as its own entry.
+    return d
+
+
+def _config_from_manifest(d: dict[str, Any]) -> "ServiceConfig":
+    from repro.service.session import ServiceConfig
+
+    d = dict(d)
+    base = BWKMConfig(**d.pop("base"))
+    return ServiceConfig(base=base, **d)
+
+
+def save_session(
+    directory: str | pathlib.Path, session: "BWKMSession", *, cursor: int
+) -> pathlib.Path:
+    """Write ``<dir>/step_<cursor>/`` atomically. ``cursor`` = index of the
+    first stream chunk the session has NOT consumed."""
+    state = session.state
+    if state is None:
+        raise ValueError("cannot checkpoint an uninitialized session")
+    extra = {
+        "schema": _SCHEMA,
+        "cursor": int(cursor),
+        "capacity": int(state.partition.capacity),
+        "d": int(state.partition.dim),
+        "k": int(state.centroids.shape[0]),
+        "batches": int(state.batches),
+        "points": float(state.points),
+        "config": _config_to_manifest(session.config),
+    }
+    return train_ckpt.save(directory, int(cursor), {"session": state}, extra)
+
+
+def load_session(
+    directory: str | pathlib.Path, *, step: int | None = None
+) -> tuple["BWKMSession", int] | None:
+    """Restore ``(session, cursor)`` from the latest (or given) checkpoint;
+    ``None`` when the directory holds no checkpoints yet."""
+    from repro.service.session import BWKMSession
+
+    import json
+
+    if step is None:
+        step = train_ckpt.latest_step(directory)
+        if step is None:
+            return None
+    manifest = json.loads(
+        (pathlib.Path(directory) / f"step_{step:08d}" / "manifest.json").read_text()
+    )
+    extra = manifest["extra"]
+    if extra.get("schema") != _SCHEMA:
+        raise ValueError(
+            f"checkpoint schema {extra.get('schema')!r} != supported {_SCHEMA}"
+        )
+    template = session_state_template(extra["capacity"], extra["d"], extra["k"])
+    restored, _ = train_ckpt.restore(directory, step, {"session": template})
+    session = BWKMSession(_config_from_manifest(extra["config"]))
+    session.state = restored["session"]
+    return session, int(extra["cursor"])

@@ -1,0 +1,158 @@
+"""Request batching for serving: coalesce concurrent predicts into kernels.
+
+Serving traffic arrives as many small ragged requests; the chunk kernels
+want few large static-shape calls. :class:`BatchedPredictor` queues
+requests under a lock, and ``flush`` concatenates everything pending into
+``chunk_size`` segments — one ``assign_top2_chunk`` (or
+``pairwise_sqdist_chunk``) call per segment, the ragged final segment
+padded inert by the kernels' shared padding contract — then scatters the
+per-row results back to each caller's ticket. ``ceil(total_rows /
+chunk_size)`` kernel calls for ANY mix of request sizes.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+__all__ = ["BatchedPredictor", "Ticket"]
+
+
+class Ticket:
+    """Future for one queued request; ``result()`` blocks until a flush."""
+
+    def __init__(self, n_rows: int, kind: str):
+        self.n_rows = n_rows
+        self.kind = kind  # "predict" | "transform"
+        self._event = threading.Event()
+        self._value: Any = None
+
+    def _fulfill(self, value) -> None:
+        self._value = value
+        self._event.set()
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError("request not flushed yet")
+        return self._value
+
+
+class BatchedPredictor:
+    """Thread-safe batched predict/transform against fixed centroids."""
+
+    def __init__(self, centroids, *, chunk_size: int = 2048, impl: str | None = None):
+        self.centroids = jnp.asarray(centroids, jnp.float32)
+        if self.centroids.ndim != 2:
+            raise ValueError(f"expected [K, d] centroids, got {self.centroids.shape}")
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.chunk_size = int(chunk_size)
+        self.impl = ops.resolve_impl(impl)
+        self._lock = threading.Lock()
+        self._pending: list[tuple[Ticket, np.ndarray]] = []
+        self.stats = {
+            "n_requests": 0,
+            "n_rows": 0,
+            "n_kernel_calls": 0,
+            "rows_padded": 0,
+            "n_flushes": 0,
+        }
+
+    def _check(self, x) -> np.ndarray:
+        x = np.ascontiguousarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.centroids.shape[1]:
+            raise ValueError(
+                f"expected [n, {self.centroids.shape[1]}] request, got {x.shape}"
+            )
+        return x
+
+    def submit(self, x, *, kind: str = "predict") -> Ticket:
+        """Queue a request; returns a :class:`Ticket` resolved at ``flush``."""
+        if kind not in ("predict", "transform"):
+            raise ValueError(f"unknown request kind {kind!r}")
+        x = self._check(x)
+        ticket = Ticket(x.shape[0], kind)
+        with self._lock:
+            self._pending.append((ticket, x))
+            self.stats["n_requests"] += 1
+            self.stats["n_rows"] += x.shape[0]
+        return ticket
+
+    def flush(self) -> int:
+        """Serve everything pending; returns the number of requests served.
+
+        predict and transform requests are batched separately (their kernel
+        outputs differ) but each group coalesces across requests.
+        """
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if not pending:
+            return 0
+        self.stats["n_flushes"] += 1
+        for kind in ("predict", "transform"):
+            group = [(t, x) for t, x in pending if t.kind == kind]
+            if group:
+                self._serve_group(kind, group)
+        return len(pending)
+
+    def _serve_group(self, kind: str, group: list[tuple[Ticket, np.ndarray]]) -> None:
+        cs = self.chunk_size
+        rows = np.concatenate([x for _, x in group])
+        outs = []
+        for start in range(0, rows.shape[0], cs):
+            seg = jnp.asarray(rows[start : start + cs])
+            if kind == "predict":
+                assign, _, _ = ops.assign_top2_chunk(
+                    seg, self.centroids, chunk_size=cs, impl=self.impl
+                )
+                outs.append(np.asarray(assign))
+            else:
+                outs.append(
+                    np.asarray(
+                        ops.pairwise_sqdist_chunk(
+                            seg, self.centroids, chunk_size=cs, impl=self.impl
+                        )
+                    )
+                )
+            self.stats["n_kernel_calls"] += 1
+            self.stats["rows_padded"] += cs - seg.shape[0]
+        flat = np.concatenate(outs)
+        offset = 0
+        for ticket, x in group:
+            ticket._fulfill(flat[offset : offset + x.shape[0]])
+            offset += x.shape[0]
+
+    # -- conveniences --------------------------------------------------------
+
+    def predict(self, x) -> np.ndarray:
+        """Submit-and-flush a single predict request."""
+        t = self.submit(x, kind="predict")
+        self.flush()
+        return t.result()
+
+    def transform(self, x) -> np.ndarray:
+        """Submit-and-flush a single transform request."""
+        t = self.submit(x, kind="transform")
+        self.flush()
+        return t.result()
+
+    def predict_many(self, requests) -> list[np.ndarray]:
+        """Batch a list of predict requests through one flush."""
+        tickets = [self.submit(x, kind="predict") for x in requests]
+        self.flush()
+        return [t.result() for t in tickets]
+
+    def transform_many(self, requests) -> list[np.ndarray]:
+        """Batch a list of transform requests through one flush."""
+        tickets = [self.submit(x, kind="transform") for x in requests]
+        self.flush()
+        return [t.result() for t in tickets]

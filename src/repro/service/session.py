@@ -1,0 +1,355 @@
+"""Incremental BWKM session: mini-batch updates on a live partition.
+
+The loop per batch (DESIGN.md §13):
+
+  1. **Decay** — ``decay_stats`` scales block mass by γ so old stream
+     regimes fade at a configurable half-life (boxes stay: they are
+     geometric routing state).
+  2. **Merge** — route the batch into the live boxes with the shared
+     clipped-L∞ rule (``core.partition.route_into_boxes``), fold it to
+     :class:`BlockStats` and combine into the partition. O(batch·M).
+  3. **Track** — a few warm-started weighted-Lloyd iterations over the
+     updated representatives keep the centroids current and refresh the
+     per-block top-2 squared distances (the Hamerly/misassignment bound
+     state the checkpoint carries).
+  4. **Refit on drift** — when the ε-boundary's mass fraction exceeds the
+     configured threshold, sample boundary blocks ∝ ε (exactly Algorithm 5
+     Step 3), split them *virtually* (``split_blocks_virtual``: no data
+     pass — member points are long gone) and run a longer weighted Lloyd.
+
+Every step is a deterministic function of ``(SessionState, batch)``, so a
+session restored from a checkpoint and fed the remaining stream reproduces
+the uninterrupted run bit-for-bit — the property the crash-injection suite
+(tests/test_service_recovery.py) pins.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bwkm as bwkm_mod
+from repro.core import lloyd
+from repro.core import misassignment as mis
+from repro.core import partition as part_mod
+from repro.core.bwkm import BWKMConfig
+from repro.core.partition import BlockStats, Partition
+from repro.data import chunks as ck
+from repro.kernels import ops
+
+__all__ = [
+    "BWKMSession",
+    "ServiceConfig",
+    "SessionState",
+    "resume_service",
+    "run_service",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service-lifecycle knobs around a batch :class:`BWKMConfig`.
+
+    ``decay`` is the per-batch forgetting factor γ (1.0 = infinite memory;
+    0.9 halves a batch's influence every ~7 batches). ``refit_boundary_frac``
+    is the drift trigger: refit when the ε-boundary holds more than this
+    fraction of the partition's mass. ``track_lloyd_iters`` bounds the cheap
+    per-batch tracking Lloyd; ``refit_lloyd_iters`` the post-split refit.
+    """
+
+    base: BWKMConfig
+    decay: float = 1.0
+    refit_boundary_frac: float = 0.05
+    track_lloyd_iters: int = 3
+    refit_lloyd_iters: int = 20
+    max_splits_per_refit: int | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
+        if self.refit_boundary_frac < 0:
+            raise ValueError("refit_boundary_frac must be >= 0")
+
+
+class SessionState(NamedTuple):
+    """Everything a resumed session needs — a JAX pytree, checkpointed whole.
+
+    ``partition.block_id`` is empty (``[0]`` i32): the service never retains
+    member points, only their sufficient statistics. ``d1``/``d2`` are the
+    squared top-2 centroid distances of every block representative from the
+    last weighted-Lloyd pass — the bound state the misassignment criterion
+    (Definition 3) reads at the next batch.
+    """
+
+    partition: Partition
+    centroids: jax.Array  # [K, d]
+    d1: jax.Array  # [M] f32
+    d2: jax.Array  # [M] f32
+    key: jax.Array  # PRNG carry (advanced only by refit split sampling)
+    batches: jax.Array  # scalar i32, partial_fit calls so far
+    points: jax.Array  # scalar f32, cumulative raw rows consumed
+
+
+@jax.jit
+def _route_fold(x: jax.Array, lo: jax.Array, hi: jax.Array, active: jax.Array):
+    """Route a batch into the live boxes and fold it to BlockStats."""
+    bid = part_mod.route_into_boxes(x, lo, hi, active)
+    return part_mod.block_stats(x, bid, lo.shape[0])
+
+
+def _merge_batch(part: Partition, x: jax.Array) -> Partition:
+    """Combine a batch's folded stats into the partition (boxes union)."""
+    st = _route_fold(x, part.lo, part.hi, part.active)
+    merged = part_mod.combine_block_stats(
+        BlockStats(part.psum, part.count, part.lo, part.hi), st
+    )
+    return part._replace(
+        psum=merged.psum, count=merged.count, lo=merged.lo, hi=merged.hi
+    )
+
+
+class BWKMSession:
+    """Online BWKM over mini-batches; state lives in ``self.state``.
+
+    The first ``partial_fit`` bootstraps via the in-core engine on that
+    batch (full Algorithm 5: initial partition, seeding, boundary-driven
+    splits), then drops the per-point routing and keeps only the weighted
+    partition. Subsequent calls run the decay→merge→track→refit loop.
+    """
+
+    def __init__(self, config: ServiceConfig):
+        if not isinstance(config, ServiceConfig):
+            raise TypeError(f"expected ServiceConfig, got {type(config).__name__}")
+        self.config = config
+        self.state: SessionState | None = None
+        self.last_metrics: dict[str, Any] | None = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    @property
+    def initialized(self) -> bool:
+        return self.state is not None
+
+    @property
+    def centroids(self) -> jax.Array:
+        if self.state is None:
+            raise RuntimeError("session has no state yet; call partial_fit first")
+        return self.state.centroids
+
+    def partial_fit(self, batch) -> dict[str, Any]:
+        """Consume one mini-batch; returns per-batch metrics."""
+        x = jnp.asarray(np.ascontiguousarray(batch, np.float32))
+        if x.ndim != 2 or x.shape[0] == 0:
+            raise ValueError(f"expected non-empty [n, d] batch, got {x.shape}")
+        if self.state is None:
+            metrics = self._bootstrap(x)
+        else:
+            if x.shape[1] != self.state.partition.dim:
+                raise ValueError(
+                    f"batch dim {x.shape[1]} != session dim "
+                    f"{self.state.partition.dim}"
+                )
+            metrics = self._update(x)
+        self.last_metrics = metrics
+        return metrics
+
+    def _bootstrap(self, x: jax.Array) -> dict[str, Any]:
+        cfg = self.config
+        key = jax.random.PRNGKey(cfg.seed)
+        k_fit, carry = jax.random.split(key)
+        res = bwkm_mod.fit_incore(k_fit, x, cfg.base)
+        part = res.partition._replace(block_id=jnp.zeros((0,), jnp.int32))
+        reps, w = part_mod.representatives(part)
+        lres = lloyd.weighted_lloyd(
+            reps,
+            w,
+            res.centroids,
+            max_iters=cfg.track_lloyd_iters,
+            epsilon=cfg.base.lloyd_epsilon,
+            prune=cfg.base.prune,
+        )
+        self.state = SessionState(
+            partition=part,
+            centroids=lres.centroids,
+            d1=lres.d1,
+            d2=lres.d2,
+            key=carry,
+            batches=jnp.asarray(1, jnp.int32),
+            points=jnp.asarray(x.shape[0], jnp.float32),
+        )
+        return {
+            "batch": 1,
+            "n_points": int(x.shape[0]),
+            "boundary_frac": 0.0,
+            "refit": True,
+            "n_splits": int(part.n_blocks) - 1,
+            "n_blocks": int(part.n_blocks),
+            "error": float(lres.error),
+        }
+
+    def _update(self, x: jax.Array) -> dict[str, Any]:
+        cfg = self.config
+        state = self.state
+        assert state is not None
+        part = part_mod.decay_stats(state.partition, cfg.decay)
+        part = _merge_batch(part, x)
+
+        reps, w = part_mod.representatives(part)
+        lres = lloyd.weighted_lloyd(
+            reps,
+            w,
+            state.centroids,
+            max_iters=cfg.track_lloyd_iters,
+            epsilon=cfg.base.lloyd_epsilon,
+            prune=cfg.base.prune,
+        )
+
+        eps = mis.misassignment(part, lres.d1, lres.d2)
+        total_w = jnp.maximum(jnp.sum(w), 1e-30)
+        boundary_frac = float(jnp.sum(jnp.where(eps > 0, w, 0.0)) / total_w)
+        f_size = int(jnp.sum(eps > 0))
+        free_rows = part.capacity - int(part.n_blocks)
+
+        key = state.key
+        n_splits = 0
+        refit = boundary_frac > cfg.refit_boundary_frac and f_size > 0 and free_rows > 0
+        if refit:
+            key, k_cut = jax.random.split(key)
+            draws = min(f_size, free_rows)
+            if cfg.max_splits_per_refit is not None:
+                draws = min(draws, cfg.max_splits_per_refit)
+            chosen = mis.sample_boundary(k_cut, eps, draws)
+            plan = part_mod.split_plan(part, chosen)
+            part = part_mod.split_blocks_virtual(part, plan)
+            n_splits = int(plan.n_new)
+            reps, w = part_mod.representatives(part)
+            lres = lloyd.weighted_lloyd(
+                reps,
+                w,
+                lres.centroids,
+                max_iters=cfg.refit_lloyd_iters,
+                epsilon=cfg.base.lloyd_epsilon,
+                prune=cfg.base.prune,
+            )
+
+        self.state = SessionState(
+            partition=part,
+            centroids=lres.centroids,
+            d1=lres.d1,
+            d2=lres.d2,
+            key=key,
+            batches=state.batches + 1,
+            points=state.points + x.shape[0],
+        )
+        return {
+            "batch": int(self.state.batches),
+            "n_points": int(x.shape[0]),
+            "boundary_frac": boundary_frac,
+            "refit": bool(refit),
+            "n_splits": n_splits,
+            "n_blocks": int(part.n_blocks),
+            "error": float(lres.error),
+        }
+
+    # -- inference -----------------------------------------------------------
+
+    def predict(self, x, *, chunk_size: int = 4096, impl: str | None = None):
+        """Nearest-centroid labels via the chunk kernel (padding-safe)."""
+        c = self.centroids
+        x = jnp.asarray(np.ascontiguousarray(x, np.float32))
+        impl = ops.resolve_impl(impl)
+        out = []
+        for start in range(0, x.shape[0], chunk_size):
+            seg = x[start : start + chunk_size]
+            assign, _, _ = ops.assign_top2_chunk(seg, c, chunk_size=chunk_size, impl=impl)
+            out.append(assign)
+        return jnp.concatenate(out) if out else jnp.zeros((0,), jnp.int32)
+
+    def transform(self, x, *, chunk_size: int = 4096, impl: str | None = None):
+        """Full ``[n, K]`` squared-distance matrix via the chunk kernel."""
+        c = self.centroids
+        x = jnp.asarray(np.ascontiguousarray(x, np.float32))
+        impl = ops.resolve_impl(impl)
+        out = []
+        for start in range(0, x.shape[0], chunk_size):
+            seg = x[start : start + chunk_size]
+            out.append(ops.pairwise_sqdist_chunk(seg, c, chunk_size=chunk_size, impl=impl))
+        return (
+            jnp.concatenate(out)
+            if out
+            else jnp.zeros((0, c.shape[0]), jnp.float32)
+        )
+
+
+def run_service(
+    session: BWKMSession,
+    source: ck.ChunkSource,
+    *,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 0,
+    start_chunk: int = 0,
+    max_chunks: int | None = None,
+) -> list[dict[str, Any]]:
+    """Drive a session over ``source`` from chunk ``start_chunk``.
+
+    Checkpoints carry the stream cursor: a checkpoint written after chunk
+    ``i`` records cursor ``i + 1``, so :func:`resume_service` continues at
+    exactly the first unprocessed chunk. A final checkpoint is always
+    written when ``checkpoint_dir`` is set (so a cleanly finished stream
+    resumes as a no-op).
+    """
+    from repro.service import checkpoint as svc_ckpt
+
+    metrics: list[dict[str, Any]] = []
+    cursor = start_chunk
+    for chunk in ck.chunks_from(source, start_chunk):
+        if max_chunks is not None and cursor - start_chunk >= max_chunks:
+            break
+        metrics.append(session.partial_fit(chunk))
+        cursor += 1
+        if (
+            checkpoint_dir
+            and checkpoint_every > 0
+            and cursor % checkpoint_every == 0
+        ):
+            svc_ckpt.save_session(checkpoint_dir, session, cursor=cursor)
+    if checkpoint_dir and session.initialized:
+        svc_ckpt.save_session(checkpoint_dir, session, cursor=cursor)
+    return metrics
+
+
+def resume_service(
+    checkpoint_dir: str,
+    source: ck.ChunkSource,
+    *,
+    config: ServiceConfig | None = None,
+    checkpoint_every: int = 0,
+) -> tuple[BWKMSession, list[dict[str, Any]]]:
+    """Restore the latest checkpoint in ``checkpoint_dir`` (or start fresh
+    when none exists — the crash-before-first-checkpoint case) and consume
+    the rest of ``source`` from the stored cursor."""
+    from repro.service import checkpoint as svc_ckpt
+
+    restored = svc_ckpt.load_session(checkpoint_dir)
+    if restored is None:
+        if config is None:
+            raise ValueError(
+                f"no checkpoint under {checkpoint_dir!r} and no config to "
+                "start fresh from"
+            )
+        session, cursor = BWKMSession(config), 0
+    else:
+        session, cursor = restored
+    metrics = run_service(
+        session,
+        source,
+        checkpoint_dir=checkpoint_dir,
+        checkpoint_every=checkpoint_every,
+        start_chunk=cursor,
+    )
+    return session, metrics

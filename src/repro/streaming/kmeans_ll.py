@@ -8,21 +8,26 @@ pass. Pass structure:
 
   * pass 0      — fold the (reservoir-drawn) first seed into every chunk's
                   min-d², accumulating the exact cost ``φ₀``;
-  * pass 1..R   — per chunk: fold the PREVIOUS round's candidate batch
-                  (one ``min_sqdist_update_chunk`` call — one device read
-                  of x per round), then Bernoulli-select this round's
-                  candidates on the host against the freshly updated
-                  min-d². The normaliser is the cost accumulated by the
-                  previous pass, which lags the fold by one round: since
-                  ``φ`` is non-increasing this only *under*-samples
-                  (expected draws ``ℓ·φ_r/φ_{r−1} ≤ ℓ``), a conservative
-                  deviation the oversampling factor absorbs (DESIGN §12);
+  * rounds 1..R — fold the previous round's candidate batch first (one
+                  ``min_sqdist_update_chunk`` device pass — one device read
+                  of x per round), which makes the accumulated cost the
+                  EXACT current normaliser ``φ_{r−1}``; then Bernoulli-
+                  select this round's candidates entirely on the host from
+                  the resident min-d² state, gathering only the accepted
+                  rows back from the source (``chunks.chunk_at`` random
+                  access — O(ℓ·d) bytes, not a pass). Selection
+                  probabilities therefore match the in-core loop exactly;
+                  the one-round normaliser lag this driver used to carry
+                  (under-sampling by ``φ_r/φ_{r−1}``; pinned by the
+                  regression test in tests/test_kmeans_ll.py) is gone, and
+                  so is the selection-only device pass that produced it;
   * final pass  — assign every point to its nearest candidate
                   (``assign_update_chunk``; this fold subsumes the last
                   round's candidates) to weight the candidate set, then
                   reduce with weighted K-means++ on the host.
 
-``rounds + 2`` sequential passes total, against the ``K − 1`` passes of
+``rounds + 1`` sequential device passes total (down from the lagging
+implementation's ``rounds + 2``), against the ``K − 1`` passes of
 sequential K-means++ — the whole point of the oversampling construction.
 """
 
@@ -36,6 +41,7 @@ import numpy as np
 
 from repro.core import kmeans_ll as core_ll
 from repro.core import kmeanspp
+from repro.data import chunks as ck
 from repro.data.chunks import ChunkSource, padded_device_chunks, reservoir_sample
 from repro.kernels import ops
 
@@ -47,8 +53,9 @@ _BIG = 3.0e38
 class StreamKMeansLLResult(NamedTuple):
     centroids: jax.Array  # [k, d]
     n_candidates: int  # candidates the oversampling rounds produced
-    passes: int  # sequential data passes (rounds + 2)
+    passes: int  # sequential device data passes (rounds + 1)
     distances: float  # distance evaluations (paper's unit)
+    normalisers: tuple = ()  # φ used by each selection round (exact, audit)
 
 
 def _pad_batch(cands: np.ndarray, cap: int, d: int) -> tuple[jax.Array, jax.Array]:
@@ -64,6 +71,26 @@ def _pad_batch(cands: np.ndarray, cap: int, d: int) -> tuple[jax.Array, jax.Arra
     return jnp.asarray(batch), jnp.asarray(valid)
 
 
+def _gather_rows(
+    source: ChunkSource, wanted: dict[int, np.ndarray]
+) -> dict[int, np.ndarray]:
+    """Fetch ``{chunk_index: rows[idx]}`` from the source. Backends with
+    random access pay only for the touched chunks; iterator-only sources
+    fall back to ONE host scan for all of them (never a per-chunk rescan)."""
+    if not wanted:
+        return {}
+    if getattr(source, "chunk_at", None) is not None:
+        return {
+            i: np.asarray(source.chunk_at(i), np.float32)[idx]
+            for i, idx in wanted.items()
+        }
+    out: dict[int, np.ndarray] = {}
+    for i, chunk in enumerate(source.chunks()):
+        if i in wanted:
+            out[i] = np.asarray(chunk, np.float32)[wanted[i]]
+    return out
+
+
 def kmeans_parallel_streaming(
     key: jax.Array,
     source: ChunkSource,
@@ -76,8 +103,9 @@ def kmeans_parallel_streaming(
     """k-means|| seeding of ``k`` centroids from a chunked stream.
 
     Matches :func:`repro.core.kmeans_ll.kmeans_parallel` semantics on the
-    unweighted stream (chunk validity is the weight vector), with the
-    one-round normaliser lag documented in the module docstring. Host
+    unweighted stream (chunk validity is the weight vector): every selection
+    round's normaliser is the exact current cost φ, established by folding
+    the previous round's candidates before any selection draws. Host
     memory: 4 bytes/point of min-d² state plus the O(ℓ·rounds) candidate
     set; device memory: one padded chunk at a time.
     """
@@ -98,60 +126,63 @@ def kmeans_parallel_streaming(
     new_cands = first
     mind2: list[np.ndarray] = []
     phi = float("inf")
+    normalisers: list[float] = []
     distances = 0.0
     passes = 0
 
-    for p in range(r + 1):
-        batch, bvalid = _pad_batch(new_cands, cap_round, d)
-        do_fold = len(new_cands) > 0
+    def fold(batch_cands: np.ndarray, first_pass: bool) -> None:
+        """One device pass: fold ``batch_cands`` into every chunk's min-d²,
+        leaving ``phi`` the exact cost of the full current candidate set."""
+        nonlocal phi, distances, passes
+        batch, bvalid = _pad_batch(batch_cands, cap_round, d)
         phi_acc = 0.0
-        picked: list[np.ndarray] = []
-        picked_u: list[np.ndarray] = []
-        key_round = jax.random.fold_in(key, p + 1)
         for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
-            if p == 0:
+            if first_pass:
                 mind2.append(np.full((nv,), _BIG, np.float32))
             wv = (jnp.arange(cs) < nv).astype(jnp.float32)
-            if do_fold:
-                m_in = np.zeros((cs,), np.float32)
-                m_in[:nv] = mind2[i]
-                out = ops.min_sqdist_update_chunk(
-                    x_dev, wv, batch, bvalid, jnp.asarray(m_in),
-                    chunk_size=cs, impl=impl,
-                )
-                mind2[i] = np.asarray(out.mind2[:nv], np.float32)
-                phi_acc += float(out.cost)
-                distances += float(out.n_dist)
-            if p > 0:
-                # Bernoulli selection on the host: fresh min-d², previous
-                # pass's φ as the (lagging, conservative) normaliser
-                u = np.asarray(
-                    jax.random.uniform(jax.random.fold_in(key_round, i), (nv,))
-                )
-                prob = np.minimum(1.0, l * mind2[i] / max(phi, 1e-30))
-                idx = np.flatnonzero(u < prob)
-                if idx.size:
-                    # gather the few accepted rows on device; only O(|idx|·d)
-                    # bytes cross back to the host, not the whole chunk
-                    picked.append(np.asarray(x_dev[jnp.asarray(idx)]))
-                    picked_u.append(u[idx])
-        if do_fold:
-            phi = phi_acc
+            m_in = np.zeros((cs,), np.float32)
+            m_in[:nv] = mind2[i]
+            out = ops.min_sqdist_update_chunk(
+                x_dev, wv, batch, bvalid, jnp.asarray(m_in),
+                chunk_size=cs, impl=impl,
+            )
+            mind2[i] = np.asarray(out.mind2[:nv], np.float32)
+            phi_acc += float(out.cost)
+            distances += float(out.n_dist)
+        phi = phi_acc
         passes += 1
-        if p == 0:
-            # the seed is folded; pass 1 is selection-only (φ₀ is already
-            # exact, so there is nothing to fold until round 1 has drawn)
+
+    fold(first, first_pass=True)  # pass 0: φ₀ exact
+
+    for rnd in range(1, r + 1):
+        if rnd > 1 and len(new_cands):
+            fold(new_cands, first_pass=False)  # φ_{rnd−1} exact before drawing
+        normalisers.append(phi)
+        # Bernoulli selection on the host against the resident min-d² state;
+        # RNG stream unchanged from the lagging implementation (round rnd
+        # drew under fold_in(key, rnd + 1), chunk i under fold_in(·, i)).
+        key_round = jax.random.fold_in(key, rnd + 1)
+        wanted: dict[int, np.ndarray] = {}
+        wanted_u: dict[int, np.ndarray] = {}
+        for i, m_i in enumerate(mind2):
+            u = np.asarray(
+                jax.random.uniform(jax.random.fold_in(key_round, i), (m_i.shape[0],))
+            )
+            prob = np.minimum(1.0, l * m_i / max(phi, 1e-30))
+            idx = np.flatnonzero(u < prob)
+            if idx.size:
+                wanted[i] = idx
+                wanted_u[i] = u[idx]
+        rows = _gather_rows(source, wanted)
+        if wanted:
+            sel = np.concatenate([rows[i] for i in sorted(wanted)])
+            sel_u = np.concatenate([wanted_u[i] for i in sorted(wanted)])
+            if len(sel) > cap_round:  # tail event: E[draws] <= l
+                sel = sel[np.argsort(sel_u)[:cap_round]]
+            new_cands = sel
+            cands.append(sel)
+        else:
             new_cands = np.zeros((0, d), np.float32)
-        if p > 0:
-            if picked:
-                sel = np.concatenate(picked)
-                sel_u = np.concatenate(picked_u)
-                if len(sel) > cap_round:  # tail event: E[draws] <= l
-                    sel = sel[np.argsort(sel_u)[:cap_round]]
-                new_cands = sel
-                cands.append(sel)
-            else:
-                new_cands = np.zeros((0, d), np.float32)
 
     # weighting pass: nearest-candidate assignment over the full candidate
     # set (this fold subsumes the final round's candidates)
@@ -171,4 +202,5 @@ def kmeans_parallel_streaming(
         n_candidates=int(cand_all.shape[0]),
         passes=passes,
         distances=distances,
+        normalisers=tuple(normalisers),
     )

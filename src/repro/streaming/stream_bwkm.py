@@ -72,9 +72,9 @@ class StreamStats:
 # ----------------------------------------------------------- chunk programs
 @partial(jax.jit, static_argnames=("m",))
 def _box_route_stats(x, nv, lo, hi, active, *, m):
-    """Route one padded chunk into the partition's boxes (clipped L∞ nearest
-    box — containment for interior points, nearest box for tails exactly as
-    ``dist_bwkm._route_into_boxes``) and fold its block statistics.
+    """Route one padded chunk into the partition's boxes (the shared
+    ``core.partition.route_into_boxes`` rule — containment for interior
+    points, nearest box for tails) and fold its block statistics.
 
     ``lo/hi/active`` are sliced by the caller to the live row prefix (block
     rows are allocated densely from 0), so the ``[cs, m_live]`` distance
@@ -82,12 +82,7 @@ def _box_route_stats(x, nv, lo, hi, active, *, m):
     ``[m, ·]`` output statistics use full capacity ``m``.
     """
     valid = jnp.arange(x.shape[0]) < nv
-    lo_ = jnp.where(active[:, None], lo, _BIG)
-    hi_ = jnp.where(active[:, None], hi, -_BIG)
-    below = jnp.maximum(lo_[None] - x[:, None, :], 0.0)
-    above = jnp.maximum(x[:, None, :] - hi_[None], 0.0)
-    dist = jnp.max(below + above, axis=-1)  # [cs, m_live] clipped L∞
-    bid = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+    bid = part_mod.route_into_boxes(x, lo, hi, active)
     return bid, part_mod.block_stats(x, bid, m, valid=valid)
 
 

@@ -10,10 +10,12 @@ import repro
 EXPECTED_SURFACE = [
     "BWKM",
     "BWKMConfig",
+    "BWKMSession",
     "ChunkSource",
     "Engine",
     "FitResult",
     "InitStrategy",
+    "ServiceConfig",
     "__version__",
     "as_chunk_source",
     "get_engine",

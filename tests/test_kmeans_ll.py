@@ -139,11 +139,12 @@ def _polished_error(x, c, iters=20):
 def test_streaming_kmeans_parallel_agrees_with_incore():
     """Same resident sample through the in-core loop and the multi-pass
     ChunkSource driver: both reach the same well-separated optimum, in
-    rounds+2 sequential passes, at ~n·(candidates+rounds·ℓ) distance ops."""
+    rounds+1 sequential device passes (selection is host-side against the
+    resident min-d²), at ~n·(candidates+rounds·ℓ) distance ops."""
     x = np.asarray(gmm(jax.random.PRNGKey(0), 6000, 3, 4, spread=30.0, noise=0.5))
     src = ck.ArrayChunkSource(x, 1024)  # 6 chunks incl. ragged boundaries
     res = kmeans_parallel_streaming(jax.random.PRNGKey(1), src, 4)
-    assert res.passes == 7
+    assert res.passes == 6  # seed fold + 4 round folds + weighting (r=5)
     assert res.n_candidates >= 4
     assert res.distances > 0
     c_in = kmeans_ll.kmeans_parallel(jax.random.PRNGKey(1), jnp.asarray(x), None, 4)
@@ -155,6 +156,45 @@ def test_streaming_kmeans_parallel_agrees_with_incore():
     np.testing.assert_array_equal(
         np.asarray(res.centroids), np.asarray(res2.centroids)
     )
+
+
+def test_streaming_normaliser_is_exact_per_round():
+    """Regression for the PR-5 one-round φ lag: the streaming driver used to
+    Bernoulli-select round r with the cost of round r−2's candidate set.
+    Now every selection round's normaliser is the exact current φ — pinned
+    three ways on a two-far-blobs stream where φ collapses after round 1.
+    """
+    from repro.data.chunks import reservoir_sample
+
+    rng = np.random.RandomState(0)
+    a = rng.randn(512, 3).astype(np.float32) * 0.01
+    b = rng.randn(512, 3).astype(np.float32) * 0.01 + 1000.0
+    x = np.concatenate([a, b])
+    rng.shuffle(x)
+    src = ck.ArrayChunkSource(x, 256)
+
+    key = jax.random.PRNGKey(0)
+    res = kmeans_parallel_streaming(key, src, 2, oversampling=8, rounds=3)
+    phis = np.asarray(res.normalisers, np.float64)
+    assert phis.shape == (3,)
+
+    # (1) round 1's normaliser is exactly φ₀ of the reservoir-drawn seed
+    # (same derivation chain as the driver)
+    key_seed, _ = jax.random.split(jax.random.fold_in(key, 0), 2)
+    seed_int = int(jax.random.randint(key_seed, (), 0, 2**31 - 1))
+    first = np.asarray(reservoir_sample(src, 1, seed_int), np.float64)
+    phi0 = float(((x.astype(np.float64) - first) ** 2).sum(axis=1).sum())
+    np.testing.assert_allclose(phis[0], phi0, rtol=1e-4)
+
+    # (2) φ is non-increasing (candidates only shrink min-d²), and folding
+    # round 1's cross-blob candidates collapses it by orders of magnitude
+    assert np.all(np.diff(phis) <= 1e-6 * phis[0]), phis
+    assert phis[1] < 1e-2 * phis[0], phis
+
+    # (3) with the stale φ₀, rounds >= 2 drew with prob ≈ ℓ·mind2/φ₀ ≈ 0 and
+    # starved at n_candidates ≈ 1 + round 1's ~ℓ draws (≈ 9 here); the exact
+    # normaliser keeps expected-ℓ draws coming every round (observed: 16)
+    assert res.n_candidates >= 12, res.n_candidates
 
 
 def test_dist_kmeans_parallel_no_mesh_is_bit_identical_to_incore():

@@ -1,0 +1,181 @@
+"""Checkpoint round-trip guarantees for the online service (ISSUE 6).
+
+save→load must be BIT-identical — partition boxes/stats, Hamerly bound
+state, weights, and RNG keys — including the awkward edges: zero-weight
+cells (virtual-split children that have not seen data yet), inactive rows,
+and the all-inactive "empty partition" template. Property-based cases run
+under hypothesis when installed (tests/_hypothesis_compat.py degrades them
+to skips in the seed container); the example-based cases always run.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hypothesis_compat import given, settings, st
+from repro.core import partition as part_mod
+from repro.core.bwkm import BWKMConfig
+from repro.service import (
+    BWKMSession,
+    ServiceConfig,
+    load_session,
+    save_session,
+    session_state_template,
+)
+from repro.service.session import SessionState
+
+CONFIG = ServiceConfig(
+    base=BWKMConfig(k=3, max_iters=3),
+    decay=0.9,
+    refit_boundary_frac=0.01,
+    seed=3,
+)
+
+
+def _assert_state_bit_identical(a: SessionState, b: SessionState) -> None:
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _random_state(seed: int, capacity: int, d: int, k: int) -> SessionState:
+    """A synthetic SessionState exercising every edge the schema allows:
+    active rows with mass, zero-weight active rows (virtual-split children),
+    inactive rows with stale garbage, non-trivial RNG key."""
+    rng = np.random.RandomState(seed)
+    n_active = rng.randint(1, capacity + 1)
+    active = np.zeros((capacity,), bool)
+    active[:n_active] = True
+    count = np.where(active, rng.rand(capacity).astype(np.float32) * 10, 0.0)
+    if n_active > 1:
+        count[rng.randint(0, n_active)] = 0.0  # a zero-weight active cell
+    lo = rng.randn(capacity, d).astype(np.float32)
+    hi = lo + rng.rand(capacity, d).astype(np.float32)
+    part = part_mod.Partition(
+        lo=jnp.asarray(lo),
+        hi=jnp.asarray(hi),
+        psum=jnp.asarray(rng.randn(capacity, d).astype(np.float32)),
+        count=jnp.asarray(count.astype(np.float32)),
+        active=jnp.asarray(active),
+        block_id=jnp.zeros((0,), jnp.int32),
+        n_blocks=jnp.asarray(n_active, jnp.int32),
+    )
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), 17)
+    return SessionState(
+        partition=part,
+        centroids=jnp.asarray(rng.randn(k, d).astype(np.float32)),
+        d1=jnp.asarray(rng.rand(capacity).astype(np.float32)),
+        d2=jnp.asarray((rng.rand(capacity) + 1).astype(np.float32)),
+        key=key,
+        batches=jnp.asarray(rng.randint(0, 1000), jnp.int32),
+        points=jnp.asarray(float(rng.randint(0, 10**6)), jnp.float32),
+    )
+
+
+def _session_with_state(state: SessionState) -> BWKMSession:
+    session = BWKMSession(CONFIG)
+    session.state = state
+    return session
+
+
+def test_live_session_round_trip_is_bit_identical(tmp_path):
+    rng = np.random.RandomState(0)
+    session = BWKMSession(CONFIG)
+    c = rng.randn(3, 4).astype(np.float32) * 5
+    for i in range(4):  # enough drift to force virtual splits into the state
+        shift = 3.0 * i
+        batch = (c[rng.randint(0, 3, 300)] + shift + 0.2 * rng.randn(300, 4)).astype(
+            np.float32
+        )
+        session.partial_fit(batch)
+    save_session(tmp_path / "ck", session, cursor=4)
+    loaded, cursor = load_session(tmp_path / "ck")
+    assert cursor == 4
+    assert loaded.config == session.config
+    _assert_state_bit_identical(session.state, loaded.state)
+    # the restored session keeps working and stays deterministic
+    nxt = (c[rng.randint(0, 3, 100)]).astype(np.float32)
+    session.partial_fit(nxt)
+    loaded.partial_fit(nxt)
+    _assert_state_bit_identical(session.state, loaded.state)
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_synthetic_state_round_trip_examples(seed, tmp_path):
+    state = _random_state(seed, capacity=16, d=3, k=4)
+    session = _session_with_state(state)
+    save_session(tmp_path / "ck", session, cursor=seed)
+    loaded, cursor = load_session(tmp_path / "ck")
+    assert cursor == seed
+    _assert_state_bit_identical(state, loaded.state)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    capacity=st.integers(min_value=1, max_value=64),
+    d=st.integers(min_value=1, max_value=8),
+    k=st.integers(min_value=1, max_value=8),
+)
+def test_round_trip_property(seed, capacity, d, k, tmp_path_factory):
+    state = _random_state(seed, capacity, d, k)
+    session = _session_with_state(state)
+    directory = tmp_path_factory.mktemp("ck")
+    save_session(directory, session, cursor=0)
+    loaded, _ = load_session(directory)
+    _assert_state_bit_identical(state, loaded.state)
+
+
+def test_empty_partition_template_round_trips(tmp_path):
+    """The all-inactive zero-mass template — the most degenerate state the
+    schema admits — survives save→load exactly."""
+    state = session_state_template(capacity=8, d=2, k=3)
+    session = _session_with_state(state)
+    save_session(tmp_path / "ck", session, cursor=0)
+    loaded, cursor = load_session(tmp_path / "ck")
+    assert cursor == 0
+    _assert_state_bit_identical(state, loaded.state)
+
+
+def test_rng_key_round_trip_continues_the_same_stream(tmp_path):
+    state = _random_state(9, capacity=8, d=2, k=2)
+    session = _session_with_state(state)
+    save_session(tmp_path / "ck", session, cursor=1)
+    loaded, _ = load_session(tmp_path / "ck")
+    k1 = jax.random.split(session.state.key)
+    k2 = jax.random.split(loaded.state.key)
+    np.testing.assert_array_equal(np.asarray(k1), np.asarray(k2))
+
+
+def test_load_session_edge_cases(tmp_path):
+    assert load_session(tmp_path / "nothing_here") is None
+
+    state = _random_state(4, capacity=8, d=2, k=2)
+    session = _session_with_state(state)
+    save_session(tmp_path / "ck", session, cursor=2)
+    save_session(tmp_path / "ck", session, cursor=5)
+    _, cursor = load_session(tmp_path / "ck")
+    assert cursor == 5  # latest checkpoint wins
+    _, cursor = load_session(tmp_path / "ck", step=2)
+    assert cursor == 2  # explicit step still addressable
+
+    # schema mismatches refuse loudly instead of mis-restoring
+    import json
+    import pathlib
+
+    mpath = pathlib.Path(tmp_path / "ck" / "step_00000005" / "manifest.json")
+    manifest = json.loads(mpath.read_text())
+    manifest["extra"]["schema"] = 999
+    mpath.write_text(json.dumps(manifest))
+    with pytest.raises(ValueError, match="schema"):
+        load_session(tmp_path / "ck")
+
+
+def test_uninitialized_session_cannot_checkpoint(tmp_path):
+    with pytest.raises(ValueError, match="uninitialized"):
+        save_session(tmp_path / "ck", BWKMSession(CONFIG), cursor=0)

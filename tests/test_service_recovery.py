@@ -1,0 +1,174 @@
+"""Crash-injection resume suite for the online service (ISSUE 6).
+
+A fault-injecting :class:`ChunkSource` wrapper raises at parameterized chunk
+boundaries mid-``run_service``; a session resumed from its last checkpoint
+(or from scratch when the crash predates the first checkpoint) and fed the
+rest of the stream must match the uninterrupted run — ≤1e-5 on centroids
+and exactly on predict labels — for both the in-core (resident array) and
+streaming (sharded .npy files) source regimes.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.bwkm import BWKMConfig
+from repro.data import chunks as ck
+from repro.service import BWKMSession, ServiceConfig, resume_service, run_service
+
+CHUNK_ROWS = 256
+N_CHUNKS = 8
+DIM = 4
+K = 3
+
+CONFIG = ServiceConfig(
+    base=BWKMConfig(k=K, max_iters=4, lloyd_max_iters=20),
+    decay=0.9,
+    refit_boundary_frac=0.02,
+    seed=5,
+)
+
+
+class InjectedCrash(RuntimeError):
+    pass
+
+
+class FaultInjectingSource:
+    """Wrap a source; accessing chunk ``crash_at`` raises :class:`InjectedCrash`
+    (the mid-stream process death the recovery path must survive)."""
+
+    def __init__(self, inner: ck.ChunkSource, crash_at: int):
+        self._inner = inner
+        self.crash_at = crash_at
+
+    @property
+    def n_points(self) -> int:
+        return self._inner.n_points
+
+    @property
+    def dim(self) -> int:
+        return self._inner.dim
+
+    @property
+    def chunk_size(self) -> int:
+        return self._inner.chunk_size
+
+    @property
+    def n_chunks(self) -> int:
+        return self._inner.n_chunks
+
+    def chunks(self):
+        for i, chunk in enumerate(self._inner.chunks()):
+            if i == self.crash_at:
+                raise InjectedCrash(f"injected crash at chunk {i}")
+            yield chunk
+
+    def chunk_at(self, index: int) -> np.ndarray:
+        if index == self.crash_at:
+            raise InjectedCrash(f"injected crash at chunk {index}")
+        return ck.chunk_at(self._inner, index)
+
+
+@pytest.fixture(scope="module")
+def stream() -> np.ndarray:
+    """Drifting stream: the cluster centers jump halfway through, so the
+    boundary-fraction trigger actually refits (exercising the split-sampling
+    RNG the checkpoint must carry)."""
+    rng = np.random.RandomState(11)
+    centers = rng.randn(K, DIM).astype(np.float32) * 4.0
+    chunks = []
+    for i in range(N_CHUNKS):
+        c = centers + (2.5 if i >= N_CHUNKS // 2 else 0.0)
+        lab = rng.randint(0, K, CHUNK_ROWS)
+        chunks.append((c[lab] + 0.3 * rng.randn(CHUNK_ROWS, DIM)).astype(np.float32))
+    return np.concatenate(chunks)
+
+
+def _make_source(kind: str, stream: np.ndarray, tmp_path) -> ck.ChunkSource:
+    if kind == "incore":
+        return ck.ArrayChunkSource(stream, CHUNK_ROWS)
+    paths = ck.write_npy_shards(stream, tmp_path / "shards", rows_per_shard=300)
+    return ck.ShardedFileSource(paths, CHUNK_ROWS)
+
+
+@pytest.fixture(scope="module")
+def uninterrupted(stream):
+    """Reference run over the whole stream, no checkpoints, no crash."""
+    session = BWKMSession(CONFIG)
+    metrics = run_service(session, ck.ArrayChunkSource(stream, CHUNK_ROWS))
+    assert len(metrics) == N_CHUNKS
+    assert any(m["refit"] for m in metrics[1:]), "stream drift never triggered a refit"
+    return session
+
+
+@pytest.mark.parametrize("kind", ["incore", "streaming"])
+@pytest.mark.parametrize("crash_at", [1, 3, 6])
+def test_resume_from_checkpoint_matches_uninterrupted(
+    kind, crash_at, stream, uninterrupted, tmp_path
+):
+    source = _make_source(kind, stream, tmp_path)
+    faulty = FaultInjectingSource(source, crash_at)
+    ckpt_dir = tmp_path / f"ckpt_{kind}_{crash_at}"
+
+    crashed = BWKMSession(CONFIG)
+    with pytest.raises(InjectedCrash):
+        run_service(crashed, faulty, checkpoint_dir=str(ckpt_dir), checkpoint_every=2)
+
+    # crash_at=1 dies before the first checkpoint: resume starts from scratch
+    resumed, metrics = resume_service(str(ckpt_dir), source, config=CONFIG)
+    consumed = sum(m["n_points"] for m in metrics)
+    assert consumed == (N_CHUNKS - (crash_at // 2) * 2) * CHUNK_ROWS
+
+    ref = np.asarray(uninterrupted.state.centroids)
+    got = np.asarray(resumed.state.centroids)
+    np.testing.assert_allclose(got, ref, atol=1e-5)
+
+    probe = stream[:: N_CHUNKS]  # rows spread across the whole stream
+    np.testing.assert_array_equal(
+        np.asarray(resumed.predict(probe)), np.asarray(uninterrupted.predict(probe))
+    )
+
+
+@pytest.mark.parametrize("kind", ["incore", "streaming"])
+def test_resume_after_clean_finish_is_a_noop(kind, stream, uninterrupted, tmp_path):
+    """A cleanly finished stream leaves a final checkpoint whose cursor is
+    n_chunks; resuming consumes nothing and reproduces the same model."""
+    source = _make_source(kind, stream, tmp_path)
+    ckpt_dir = tmp_path / f"ckpt_clean_{kind}"
+    session = BWKMSession(CONFIG)
+    run_service(session, source, checkpoint_dir=str(ckpt_dir), checkpoint_every=3)
+
+    resumed, metrics = resume_service(str(ckpt_dir), source)
+    assert metrics == []
+    np.testing.assert_array_equal(
+        np.asarray(resumed.state.centroids), np.asarray(session.state.centroids)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(resumed.state.partition.count),
+        np.asarray(session.state.partition.count),
+    )
+
+
+def test_resume_equivalence_is_bit_exact_midstream(stream, uninterrupted, tmp_path):
+    """Stronger than the 1e-5 acceptance bar: replaying the tail of the
+    stream from a checkpoint reproduces the uninterrupted session's full
+    state bit-for-bit (partial_fit is a deterministic function of state)."""
+    source = ck.ArrayChunkSource(stream, CHUNK_ROWS)
+    ckpt_dir = tmp_path / "ckpt_exact"
+    half = BWKMSession(CONFIG)
+    run_service(
+        half,
+        source,
+        checkpoint_dir=str(ckpt_dir),
+        checkpoint_every=4,
+        max_chunks=N_CHUNKS // 2,
+    )
+
+    resumed, metrics = resume_service(str(ckpt_dir), source)
+    assert len(metrics) == N_CHUNKS - N_CHUNKS // 2
+    for a, b in zip(
+        jax.tree_util.tree_leaves(uninterrupted.state),
+        jax.tree_util.tree_leaves(resumed.state),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
