@@ -1,0 +1,181 @@
+"""KV-cache quantization bench (DESIGN.md §14): what does a BWKM codebook
+buy in the serving hot path, and what does fitting it cost?
+
+Per codebook size k the JSON records, on the reduced LM config:
+
+* per-(layer, K/V) round-trip reconstruction MSE — BWKM vs a random-rows
+  codebook at equal k (the honest baseline);
+* KV payload bytes between decode steps: raw fp cache vs uint8/uint16
+  codes (+ the amortised codebook bytes, reported separately);
+* fit cost as distance ops, streaming (ChunkSource over prefill dumps)
+  vs in-core (same rows materialised) — the engines converge differently,
+  so the audit trail is the comparison, not wall-clock alone;
+* greedy decode tokens/s with and without quantization.
+
+Results go to ``BENCH_vq.json`` at the repo root, like the other BENCH
+files; stdout is the usual ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.bench_vq
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs, vq
+from repro.api.estimator import BWKM
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_vq.json"
+
+
+def _layer_mse(cb, rows_by_src):
+    out = []
+    for (kind, layer), rows in sorted(rows_by_src.items()):
+        c = cb.centroids(kind)[layer]
+        recon = vq.dequantize_rows(vq.quantize_rows(rows, c), c)
+        out.append({
+            "kind": kind,
+            "layer": layer,
+            "mse": float(np.mean(np.sum((rows - recon) ** 2, axis=1))),
+        })
+    return out
+
+
+def _bench_k(cfg, params, prompts, fit_prompts, k, *, gen, seed):
+    from repro.models import transformer
+
+    # --- fit: streaming (the product path) vs in-core (same rows) --------
+    t0 = time.perf_counter()
+    cb = vq.fit_kv_codebook(
+        cfg, params, fit_prompts, k=k, chunk_size=512, seed=seed, max_iters=8
+    )
+    fit_stream_s = time.perf_counter() - t0
+    sources = vq.kv_dump_sources(cfg, params, fit_prompts, chunk_size=512)
+    rows_by_src = {
+        key: np.concatenate(list(src.chunks())) for key, src in sources.items()
+    }
+    t0 = time.perf_counter()
+    incore_dists = 0.0
+    for (kind, layer), rows in sorted(rows_by_src.items()):
+        model = BWKM(
+            k=k, engine="incore", seed=seed + 1000 * layer,
+            max_iters=8, m=max(4 * k, 64), capacity=8 * max(4 * k, 64),
+            lloyd_max_iters=20,
+        ).fit(rows)
+        incore_dists += float(model.result_.distances)
+    fit_incore_s = time.perf_counter() - t0
+
+    rand = vq.random_kv_codebook(cfg, params, fit_prompts, k=k, seed=seed + 7,
+                                 chunk_size=512)
+
+    # --- reconstruction + payload bytes ----------------------------------
+    layers_bwkm = _layer_mse(cb, rows_by_src)
+    layers_rand = _layer_mse(rand, rows_by_src)
+    p = prompts.shape[1]
+    _, cache = transformer.prefill(
+        cfg, params, jnp.asarray(prompts), max_seq_len=p + gen
+    )
+    raw_bytes = vq.kv_cache_nbytes(cache)
+    vq_bytes = vq.kv_cache_nbytes(vq.quantize_cache(cb, cache))
+    del cache
+
+    # --- decode throughput ± quantization --------------------------------
+    from repro.launch import serve
+
+    t0 = time.perf_counter()
+    serve.generate(cfg, params, jnp.asarray(prompts), gen)
+    tps_raw = prompts.shape[0] * gen / (time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    vq.generate_quantized(cfg, params, cb, jnp.asarray(prompts), gen)
+    tps_vq = prompts.shape[0] * gen / (time.perf_counter() - t0)
+
+    return {
+        "k": k,
+        "code_dtype": cb.code_dtype.name,
+        "mse_layers_bwkm": layers_bwkm,
+        "mse_layers_random": layers_rand,
+        "mse_mean_bwkm": float(np.mean([m["mse"] for m in layers_bwkm])),
+        "mse_mean_random": float(np.mean([m["mse"] for m in layers_rand])),
+        "cache_bytes_raw": int(raw_bytes),
+        "cache_bytes_vq": int(vq_bytes),
+        "codebook_bytes": int(cb.nbytes),
+        "fit_distances_streaming": cb.meta["distances_total"],
+        "fit_distances_incore": incore_dists,
+        "fit_s_streaming": fit_stream_s,
+        "fit_s_incore": fit_incore_s,
+        "tok_per_s_raw": tps_raw,
+        "tok_per_s_vq": tps_vq,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS, default="granite-8b")
+    ap.add_argument("--ks", type=int, nargs="+", default=[16, 64])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--fit-prompts", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=str(DEFAULT_OUT), help="JSON results path")
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.models import transformer
+
+    cfg = configs.reduced_config(configs.get_config(args.arch))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(args.seed + 1),
+        (args.batch, args.prompt_len), 0, cfg.vocab,
+    ))
+    fit_prompts = np.asarray(jax.random.randint(
+        jax.random.PRNGKey(args.seed + 2),
+        (args.fit_prompts, args.prompt_len), 0, cfg.vocab,
+    ))
+
+    record = {
+        "arch": args.arch,
+        "reduced": True,
+        "batch": args.batch,
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "unit": "mse per row, bytes, tokens/s, distance ops",
+        "ks": [],
+    }
+    rows = []
+    for k in args.ks:
+        r = _bench_k(cfg, params, prompts, fit_prompts, k,
+                     gen=args.gen, seed=args.seed)
+        record["ks"].append(r)
+        rows.append((
+            f"vq_{args.arch}_k{k}",
+            0.0,  # wall-clock lives in the derived fields
+            f"mse_bwkm={r['mse_mean_bwkm']:.5f};"
+            f"mse_rand={r['mse_mean_random']:.5f};"
+            f"cache_bytes={r['cache_bytes_raw']}->{r['cache_bytes_vq']};"
+            f"dist_stream={r['fit_distances_streaming']:.3g};"
+            f"dist_incore={r['fit_distances_incore']:.3g};"
+            f"tok_s_raw={r['tok_per_s_raw']:.1f};"
+            f"tok_s_vq={r['tok_per_s_vq']:.1f}",
+        ))
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+    if not args.no_json:
+        pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"[bench_vq] wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,9 @@ Emits ``name,us_per_call,derived`` CSV:
                   kmeans++/forgy/afkmc2: passes, distance ops, final error)
   * service_*   — online service under drift (sustained points/sec, refit
                   latency, checkpoint size)
+  * vq_*        — KV-cache quantization (reconstruction MSE vs k, cache
+                  bytes, fit distance ops streaming vs in-core, decode
+                  tokens/s ± quantization)
 """
 
 from __future__ import annotations
@@ -28,7 +31,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_init, bench_kernels, bench_lloyd, bench_service, bench_streaming,
-        bench_tradeoff,
+        bench_tradeoff, bench_vq,
     )
 
     if args.quick:
@@ -48,6 +51,7 @@ def main() -> None:
     bench_lloyd.main([])
     bench_init.main(["--reps", "1"] if args.quick else [])
     bench_service.main([])
+    bench_vq.main(["--ks", "16"] if args.quick else [])
 
 
 if __name__ == "__main__":

@@ -1,46 +1,58 @@
-"""BWKM as the framework's vector-quantization engine: build a KV-cache
-codebook by clustering decoder K-vectors, then measure reconstruction error
-vs a random codebook. The fused assignment kernel doubles as the codebook
-lookup at serving time (DESIGN.md §4, use-case 2).
+"""BWKM as the framework's vector-quantization engine: stream per-layer
+K/V vectors out of ``transformer.prefill`` through the ChunkSource protocol,
+fit one codebook per (layer, K/V) with the ``repro.BWKM`` streaming engine,
+and measure reconstruction error vs a random-rows codebook at equal k. The
+fused assignment kernel doubles as the codebook lookup at serving time
+(DESIGN.md §14, ADR 0007).
 
   PYTHONPATH=src python examples/kv_quantize.py
 """
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro import configs
-from repro.core import bwkm, metrics
-from repro.kernels import ops
+from repro import configs, vq
 from repro.models import transformer
 
 
 def main():
     cfg = configs.reduced_config(configs.get_config("granite-8b"))
     params = transformer.init_params(cfg, jax.random.PRNGKey(0))
-    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0, cfg.vocab)
+    )
 
-    # harvest K vectors from a prefill pass
-    _, cache = transformer.prefill(cfg, params, tokens)
-    kvecs = cache["k"].reshape(-1, cfg.hd).astype(jnp.float32)
-    print(f"[kv_quantize] clustering {kvecs.shape[0]} K-vectors (hd={cfg.hd})")
+    k = 16
+    codebook = vq.fit_kv_codebook(
+        cfg, params, prompts, k=k, chunk_size=512, seed=2, max_iters=8
+    )
+    assert all(m["engine"] == "streaming" for m in codebook.meta["layers"]), (
+        "codebooks must be fitted out-of-core through the streaming engine"
+    )
+    n_pts = sum(m["n_points"] for m in codebook.meta["layers"])
+    print(
+        f"[kv_quantize] fitted {len(codebook.meta['layers'])} codebooks "
+        f"(k={k}, {n_pts} vectors streamed, "
+        f"{codebook.meta['distances_total']:.2e} distance ops)"
+    )
 
-    k = 64  # codebook entries
-    res = bwkm.fit_incore(jax.random.PRNGKey(2), kvecs, bwkm.BWKMConfig(k=k, max_iters=15))
-    codebook = res.centroids
+    rand = vq.random_kv_codebook(cfg, params, prompts, k=k, seed=3, chunk_size=512)
 
-    # quantize via the fused assignment kernel (the lookup path)
-    assign, d1, _ = ops.assign_top2(kvecs, codebook)
-    mse_bwkm = float(jnp.mean(d1))
-
-    rand_cb = kvecs[jax.random.choice(jax.random.PRNGKey(3), kvecs.shape[0], (k,))]
-    _, d1r, _ = ops.assign_top2(kvecs, rand_cb)
-    mse_rand = float(jnp.mean(d1r))
-
-    print(f"[kv_quantize] codebook MSE: bwkm={mse_bwkm:.5f} random={mse_rand:.5f} "
-          f"({mse_rand / mse_bwkm:.2f}x better), "
-          f"distances used: {res.distances:.2e}")
-    assert mse_bwkm < mse_rand
+    # quantize layer-0 K rows through the fused-kernel lookup and compare
+    # round-trip reconstruction error
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=0, kind="k", chunk_size=512)
+    rows = np.concatenate(list(src.chunks()))
+    errs = {}
+    for name, cb in (("bwkm", codebook), ("random", rand)):
+        codes = vq.quantize_rows(rows, cb.k_centroids[0])
+        recon = vq.dequantize_rows(codes, cb.k_centroids[0])
+        errs[name] = float(np.mean(np.sum((rows - recon) ** 2, axis=1)))
+    print(
+        f"[kv_quantize] layer-0 K round-trip MSE: bwkm={errs['bwkm']:.5f} "
+        f"random={errs['random']:.5f} ({errs['random'] / errs['bwkm']:.2f}x better), "
+        f"codes dtype={codebook.code_dtype.name}"
+    )
+    assert errs["bwkm"] < errs["random"]
 
 
 if __name__ == "__main__":

@@ -1,15 +1,20 @@
-"""BWKM as MoE router initialisation (DESIGN.md §4, use-case 3): cluster
-token hidden states, use the centroids as router rows, and compare initial
-expert load balance against random init.
+"""BWKM as MoE router initialisation (DESIGN.md §14): cluster token hidden
+states through a long-lived :class:`~repro.BWKMSession`, derive unit-norm
+router columns from the centroids (``vq.seed_router``), install them into
+the model, and compare initial expert load balance against random init.
+
+The normalisation is dead-centroid safe: a zero-weight or duplicate centroid
+yields a zero router column, never a NaN one (the pre-``repro.vq`` version
+of this example divided by the raw norm and NaN-poisoned the router).
 
   PYTHONPATH=src python examples/router_init.py
 """
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro import configs
-from repro.core import bwkm
+from repro import configs, vq
 from repro.models import transformer
 
 
@@ -27,20 +32,38 @@ def main():
     tokens = jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0, cfg.vocab)
 
     # hidden states from the embedding layer (pre-MoE representations)
-    h = jnp.take(params["embed"], tokens, axis=0).reshape(-1, cfg.d_model)
-    h = h.astype(jnp.float32)
-
-    res = bwkm.fit_incore(
-        jax.random.PRNGKey(2), h, bwkm.BWKMConfig(k=cfg.n_experts, max_iters=10)
+    h = np.asarray(
+        jnp.take(params["embed"], tokens, axis=0).reshape(-1, cfg.d_model),
+        np.float32,
     )
-    # router logits ∝ h · centroid: centroids as router columns
-    w_bwkm = res.centroids.T / jnp.linalg.norm(res.centroids, axis=1)[None, :]
+
+    w_bwkm, session = vq.seed_router(h, cfg.n_experts, seed=2)
+    assert bool(jnp.isfinite(w_bwkm).all()), "router seeding must never NaN"
     w_rand = jax.random.normal(jax.random.PRNGKey(3), w_bwkm.shape) * 0.02
 
-    cv_bwkm = load_imbalance(h @ w_bwkm, cfg.top_k)
-    cv_rand = load_imbalance(h @ w_rand, cfg.top_k)
+    cv_bwkm = load_imbalance(jnp.asarray(h) @ w_bwkm, cfg.top_k)
+    cv_rand = load_imbalance(jnp.asarray(h) @ w_rand, cfg.top_k)
     print(f"[router_init] initial expert-load imbalance (CV, lower=better): "
           f"bwkm={cv_bwkm:.3f} random={cv_rand:.3f}")
+
+    # the session persists: refresh the seeding on a later token batch
+    tokens2 = jax.random.randint(jax.random.PRNGKey(4), (16, 64), 0, cfg.vocab)
+    h2 = np.asarray(
+        jnp.take(params["embed"], tokens2, axis=0).reshape(-1, cfg.d_model),
+        np.float32,
+    )
+    w_refresh, _ = vq.seed_router(h2, cfg.n_experts, session=session)
+    assert bool(jnp.isfinite(w_refresh).all())
+    drift = float(jnp.linalg.norm(w_refresh - w_bwkm))
+    print(f"[router_init] refreshed from session after 2nd batch "
+          f"(|Δw|={drift:.4f})")
+
+    # install + run one forward pass with the seeded router
+    params = vq.install_router(params, w_refresh)
+    logits, _, _ = transformer.forward(cfg, params, tokens[:2, :8])
+    assert bool(jnp.isfinite(logits).all())
+    print(f"[router_init] forward pass with seeded router ok, "
+          f"logits shape {tuple(logits.shape)}")
 
 
 if __name__ == "__main__":

@@ -31,8 +31,9 @@ from repro.api import (
 )
 from repro.core.bwkm import BWKMConfig
 from repro.data.chunks import ChunkSource, as_chunk_source
+from repro import vq
 
-__version__ = "0.2.0"
+__version__ = "0.3.0"
 
 __all__ = [
     "BWKM",
@@ -50,5 +51,6 @@ __all__ = [
     "register_engine",
     "register_init",
     "select_engine",
+    "vq",
     "__version__",
 ]

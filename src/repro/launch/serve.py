@@ -179,6 +179,12 @@ def lm_main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-quantize", action="store_true",
+                    help="fit a BWKM KV codebook and serve from codes, "
+                    "reporting perplexity/cache-bytes/tok-s deltas vs fp16")
+    ap.add_argument("--codebook-k", type=int, default=8)
+    ap.add_argument("--fit-prompts", type=int, default=8,
+                    help="prompts in the codebook fitting dump")
     args = ap.parse_args(argv)
 
     cfg = configs.get_config(args.arch)
@@ -197,7 +203,89 @@ def lm_main(argv=None) -> dict:
         print(f"[serve] {args.arch} generated [{args.batch}, {args.gen}] tokens "
               f"in {dt:.1f}s ({tps:.1f} tok/s on 1 CPU core)")
         print("[serve] sample:", tokens[0, :16].tolist())
-        return {"tokens": tokens, "tok_per_s": tps}
+        result = {"tokens": tokens, "tok_per_s": tps}
+        if args.kv_quantize:
+            result.update(_kv_quantize_report(cfg, params, prompts, tokens, args))
+        return result
+
+
+def _kv_quantize_report(cfg, params, prompts, baseline_tokens, args) -> dict:
+    """Fit a BWKM KV codebook, serve from codes, and report deltas vs fp16.
+
+    Perplexity is teacher-forced on the fp16 baseline's own continuation: the
+    fp16 model is near its own argmax there, so NLL degradation isolates
+    quantization damage instead of drowning it in model entropy. A
+    random-rows codebook at equal k is the control.
+    """
+    from repro import vq
+
+    k = args.codebook_k
+    fit_prompts = np.asarray(
+        jax.random.randint(
+            jax.random.PRNGKey(args.seed + 2),
+            (args.fit_prompts, args.prompt_len), 0, cfg.vocab,
+        )
+    )
+    t0 = time.time()
+    codebook = vq.fit_kv_codebook(
+        cfg, params, fit_prompts, k=k, chunk_size=512,
+        prompt_batch=min(8, args.fit_prompts), seed=args.seed,
+    )
+    fit_dt = time.time() - t0
+    rand = vq.random_kv_codebook(
+        cfg, params, fit_prompts, k=k, seed=args.seed + 7, chunk_size=512,
+    )
+
+    eval_toks = jnp.concatenate([prompts, baseline_tokens], axis=1)
+    p = prompts.shape[1]
+    nll_fp16 = vq.teacher_forced_nll(cfg, params, eval_toks, prompt_len=p)
+    nll_bwkm = vq.teacher_forced_nll(
+        cfg, params, eval_toks, prompt_len=p, codebook=codebook
+    )
+    nll_rand = vq.teacher_forced_nll(
+        cfg, params, eval_toks, prompt_len=p, codebook=rand
+    )
+
+    _, cache = transformer.prefill(
+        cfg, params, prompts, max_seq_len=p + args.gen
+    )
+    raw_bytes = vq.kv_cache_nbytes(cache)
+    qcache = vq.quantize_cache(codebook, cache)
+    vq_bytes = vq.kv_cache_nbytes(qcache)
+    del cache, qcache
+
+    t0 = time.time()
+    qtokens = vq.generate_quantized(cfg, params, codebook, prompts, args.gen)
+    q_dt = time.time() - t0
+    q_tps = args.batch * args.gen / q_dt
+
+    report = {
+        "codebook_k": k,
+        "fit_s": fit_dt,
+        "fit_distance_ops": codebook.meta["distances_total"],
+        "ppl_fp16": float(np.exp(nll_fp16)),
+        "ppl_bwkm": float(np.exp(nll_bwkm)),
+        "ppl_random": float(np.exp(nll_rand)),
+        "cache_bytes_fp": int(raw_bytes),
+        "cache_bytes_vq": int(vq_bytes),
+        "codebook_bytes": int(codebook.nbytes),
+        "tok_per_s_vq": q_tps,
+        "tokens_vq": qtokens,
+    }
+    print(
+        f"[serve:vq] k={k} codebook fit in {fit_dt:.1f}s "
+        f"({codebook.meta['distances_total']:.2e} distance ops, streaming)"
+    )
+    print(
+        f"[serve:vq] ppl fp16={report['ppl_fp16']:.3f} "
+        f"bwkm={report['ppl_bwkm']:.3f} random-k={report['ppl_random']:.3f}"
+    )
+    print(
+        f"[serve:vq] cache {raw_bytes} B -> {vq_bytes} B "
+        f"({raw_bytes / max(vq_bytes, 1):.1f}x smaller, "
+        f"+{report['codebook_bytes']} B codebook), {q_tps:.1f} tok/s quantized"
+    )
+    return report
 
 
 if __name__ == "__main__":

@@ -29,12 +29,13 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ArchConfig
 from repro.distributed import sharding as sh
 
-__all__ = ["init_moe_params", "moe_ffn"]
+__all__ = ["init_moe_params", "moe_ffn", "replace_router"]
 
 
 def init_moe_params(cfg: ArchConfig, key: jax.Array) -> dict[str, Any]:
@@ -57,6 +58,28 @@ def init_moe_params(cfg: ArchConfig, key: jax.Array) -> dict[str, Any]:
             "w2": (jax.random.normal(k3, (fs, d)) * std).astype(pdt),
         }
     return params
+
+
+def replace_router(moe_params: dict[str, Any], router_w) -> dict[str, Any]:
+    """Copy of the MoE param dict with the router swapped in.
+
+    The install seam ``repro.vq.router`` uses: accepts a per-layer ``[d, E]``
+    matrix (broadcast over the leading axis when the params are a scanned
+    ``[L, d, E]`` stack) or a full-shape replacement, and rejects shape
+    mismatches and non-finite values eagerly — a NaN router column would
+    silently flatten the softmax over every expert."""
+    old = moe_params["router"]
+    w = jnp.asarray(router_w, old.dtype)
+    if w.shape != old.shape:
+        if old.ndim == w.ndim + 1 and w.shape == old.shape[1:]:
+            w = jnp.broadcast_to(w[None], old.shape)
+        else:
+            raise ValueError(
+                f"router shape {w.shape} incompatible with existing {old.shape}"
+            )
+    if not bool(np.isfinite(np.asarray(w)).all()):
+        raise ValueError("router contains non-finite values")
+    return {**moe_params, "router": w}
 
 
 def _dispatch(x_flat, probs, topk_idx, e, cap):

@@ -44,7 +44,7 @@ def _pos_ctx(cfg: ArchConfig, s: int):
     tables = rope_tables(pos, cfg.hd, cfg.rope_theta) if cfg.n_heads else None
     return (pos, tables)
 
-__all__ = ["init_params", "forward", "prefill", "decode"]
+__all__ = ["init_params", "forward", "prefill", "decode", "dense_block_decode"]
 
 
 # ------------------------------------------------------------------ init
@@ -572,6 +572,27 @@ def _prefill_recurrent(
 
 
 # ------------------------------------------------------------------ decode
+def dense_block_decode(cfg: ArchConfig, blk: dict, x, kc, vc, slot_pos, pos):
+    """One dense/moe decoder layer for a single token: attention over the
+    ring-buffer KV cache + FFN. Returns ``(x, kc, vc)`` with the new token's
+    K/V written at ``pos % sc``.
+
+    Module-level (not a closure inside :func:`decode`) because it is a seam:
+    the quantized decode path (``repro.vq.decode``) runs the *same* block over
+    dequantized codebook caches, so raw and quantized serving can never drift
+    apart structurally."""
+    o, kc, vc = _attn_decode(
+        cfg, blk["attn"], rmsnorm(x, blk["ln1"]), kc, vc, slot_pos, pos
+    )
+    x = x + o
+    if cfg.family == "moe":
+        f, _ = moe.moe_ffn(cfg, blk["moe"], rmsnorm(x, blk["ln2"])[:, None, :])
+        f = f[:, 0]
+    else:
+        f = _mlp(cfg, blk["mlp"], rmsnorm(x, blk["ln2"]))
+    return x + f, kc, vc
+
+
 def decode(
     cfg: ArchConfig,
     params: dict,
@@ -584,18 +605,6 @@ def decode(
     x = jnp.take(_wt(cfg, params["embed"], cfg.dtype), token, axis=0)  # [B, D]
     x = shard(x, "batch", None)
     cache = dict(cache)
-
-    def dense_block_decode(blk, x, kc, vc, slot_pos):
-        o, kc, vc = _attn_decode(
-            cfg, blk["attn"], rmsnorm(x, blk["ln1"]), kc, vc, slot_pos, pos
-        )
-        x = x + o
-        if cfg.family == "moe":
-            f, _ = moe.moe_ffn(cfg, blk["moe"], rmsnorm(x, blk["ln2"])[:, None, :])
-            f = f[:, 0]
-        else:
-            f = _mlp(cfg, blk["mlp"], rmsnorm(x, blk["ln2"]))
-        return x + f, kc, vc
 
     def mamba_block_decode(blk, x, conv, ssm):
         out, (conv, ssm) = mamba2.mamba_decode(
@@ -705,7 +714,7 @@ def decode(
                 blk = jax.tree.map(lambda a: a[i], self_stack)
                 l = gi * per + i
                 x, kc_i, vc_i = dense_block_decode(
-                    blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos
+                    cfg, blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos, pos
                 )
                 k_all = _upd(k_all, kc_i, l)
                 v_all = _upd(v_all, vc_i, l)
@@ -735,7 +744,7 @@ def decode(
             x, k_all, v_all = carry
             blk, l = layer
             x, kc, vc = dense_block_decode(
-                blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos
+                cfg, blk, x, _idx(k_all, l), _idx(v_all, l), slot_pos, pos
             )
             return (x, _upd(k_all, kc, l), _upd(v_all, vc, l)), None
 

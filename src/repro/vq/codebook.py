@@ -1,0 +1,319 @@
+"""Per-layer KV codebooks: fit through the facade, look up through the
+fused assignment kernel (DESIGN.md §14, ADR 0007).
+
+A :class:`KVCodebook` is the serving artifact of a vector-quantized KV
+cache: ``[L, K, hd]`` float32 centroid stacks for K and V plus a fit audit
+trail. Quantization IS cluster assignment — ``kernels.ops.assign_top2_chunk``
+(the same fused kernel every Lloyd iteration runs) maps vectors to code
+indices; dequantization is a centroid gather. Codes are ``uint8`` for
+``k <= 256`` and ``uint16`` up to 65536 — the dtype is a property of ``k``,
+never stored wider than needed.
+
+Persistence reuses ``train.checkpoint`` (flat npz + JSON manifest, atomic
+rename) with a schema-versioned manifest, mirroring ``service/checkpoint.py``:
+a loader refusing an unknown schema beats one silently misreading it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import chunks as ck
+from repro.kernels import ops
+from repro.train import checkpoint as train_ckpt
+from repro.vq.source import kv_dump_sources, n_kv_layers
+
+__all__ = [
+    "KVCodebook",
+    "code_dtype_for",
+    "fit_kv_codebook",
+    "random_kv_codebook",
+    "quantize_rows",
+    "dequantize_rows",
+    "quantize_cache",
+    "dequantize_cache",
+    "kv_cache_nbytes",
+    "save_codebook",
+    "load_codebook",
+]
+
+_SCHEMA = 1
+
+
+def code_dtype_for(k: int) -> np.dtype:
+    """Narrowest unsigned dtype that can index a ``k``-entry codebook."""
+    if k < 1:
+        raise ValueError(f"codebook size must be >= 1, got {k}")
+    if k <= 256:
+        return np.dtype(np.uint8)
+    if k <= 65536:
+        return np.dtype(np.uint16)
+    raise ValueError(f"codebook size {k} exceeds uint16 code range (65536)")
+
+
+@dataclasses.dataclass
+class KVCodebook:
+    """Per-layer K/V centroid stacks ``[L, K, hd]`` + fit metadata."""
+
+    k_centroids: np.ndarray
+    v_centroids: np.ndarray
+    meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.k_centroids = np.asarray(self.k_centroids, np.float32)
+        self.v_centroids = np.asarray(self.v_centroids, np.float32)
+        for name, c in (("k", self.k_centroids), ("v", self.v_centroids)):
+            if c.ndim != 3:
+                raise ValueError(f"{name}_centroids must be [L, K, hd], got {c.shape}")
+        if self.k_centroids.shape != self.v_centroids.shape:
+            raise ValueError(
+                f"K/V centroid stacks disagree: {self.k_centroids.shape} "
+                f"vs {self.v_centroids.shape}"
+            )
+        code_dtype_for(self.k)  # fail fast on unindexable sizes
+
+    @property
+    def n_layers(self) -> int:
+        return self.k_centroids.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.k_centroids.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.k_centroids.shape[2]
+
+    @property
+    def code_dtype(self) -> np.dtype:
+        return code_dtype_for(self.k)
+
+    def centroids(self, kind: str) -> np.ndarray:
+        if kind == "k":
+            return self.k_centroids
+        if kind == "v":
+            return self.v_centroids
+        raise ValueError(f"kind must be 'k' or 'v', got {kind!r}")
+
+    @property
+    def nbytes(self) -> int:
+        return self.k_centroids.nbytes + self.v_centroids.nbytes
+
+
+# -------------------------------------------------------------------- fitting
+def fit_kv_codebook(
+    cfg,
+    params: dict,
+    prompts,
+    *,
+    k: int,
+    chunk_size: int = 2048,
+    prompt_batch: int = 8,
+    seed: int = 0,
+    init: str = "kmeans||",
+    max_iters: int = 8,
+    engine: str = "streaming",
+    **config_overrides: Any,
+) -> KVCodebook:
+    """Fit one BWKM codebook per (layer, K/V) over prefill cache dumps.
+
+    Every fit goes through the ``repro.BWKM`` facade with the *streaming*
+    engine consuming a :class:`CacheDumpSource` — the dump is never
+    materialised as one array. ``meta["layers"]`` records the audit per fit
+    (engine, distance ops, iterations, stop reason)."""
+    from repro.api.estimator import BWKM
+
+    code_dtype_for(k)
+    # Partition geometry scaled to a KV dump, not to "massive data": the
+    # BWKMConfig defaults (m from default_params, capacity=64·m) build a
+    # 10k-block partition whose split plans dwarf a few-thousand-row dump.
+    # A codebook needs representatives ~a few× k; callers can still override.
+    config_overrides.setdefault("m", max(4 * k, 64))
+    config_overrides.setdefault("capacity", 8 * config_overrides["m"])
+    config_overrides.setdefault("lloyd_max_iters", 20)
+    sources = kv_dump_sources(
+        cfg, params, prompts, chunk_size=chunk_size, prompt_batch=prompt_batch
+    )
+    n_layers = n_kv_layers(cfg)
+    stacks = {
+        "k": np.zeros((n_layers, k, cfg.hd), np.float32),
+        "v": np.zeros((n_layers, k, cfg.hd), np.float32),
+    }
+    audit: list[dict[str, Any]] = []
+    for (kind, layer), src in sorted(sources.items()):
+        model = BWKM(
+            k=k, engine=engine, init=init, chunk_size=chunk_size,
+            seed=seed + 1000 * layer + (0 if kind == "k" else 1),
+            max_iters=max_iters, **config_overrides,
+        )
+        model.fit(src)
+        stacks[kind][layer] = np.asarray(model.centroids_, np.float32)
+        audit.append({
+            "kind": kind,
+            "layer": layer,
+            "engine": model.engine_,
+            "distances": float(model.result_.distances),
+            "iterations": int(model.result_.iterations),
+            "stop_reason": model.result_.stop_reason,
+            "n_points": int(src.n_points),
+        })
+    meta = {
+        "k": k,
+        "init": init,
+        "engine": engine,
+        "chunk_size": chunk_size,
+        "layers": audit,
+        "distances_total": float(sum(a["distances"] for a in audit)),
+    }
+    return KVCodebook(stacks["k"], stacks["v"], meta)
+
+
+def random_kv_codebook(
+    cfg, params: dict, prompts, *, k: int, seed: int = 0,
+    chunk_size: int = 2048, prompt_batch: int = 8,
+) -> KVCodebook:
+    """Equal-k baseline: per-layer codebooks of uniformly sampled dump rows
+    (one reservoir pass per source, no clustering). The honest strawman the
+    acceptance comparison is against."""
+    sources = kv_dump_sources(
+        cfg, params, prompts, chunk_size=chunk_size, prompt_batch=prompt_batch
+    )
+    n_layers = n_kv_layers(cfg)
+    stacks = {
+        "k": np.zeros((n_layers, k, cfg.hd), np.float32),
+        "v": np.zeros((n_layers, k, cfg.hd), np.float32),
+    }
+    for (kind, layer), src in sorted(sources.items()):
+        if src.n_points < k:
+            raise ValueError(f"dump has {src.n_points} rows < k={k}")
+        stacks[kind][layer] = ck.reservoir_sample(
+            src, k, seed + 1000 * layer + (0 if kind == "k" else 1)
+        )
+    return KVCodebook(stacks["k"], stacks["v"], {"k": k, "engine": "random"})
+
+
+# ------------------------------------------------------- quantize/dequantize
+def quantize_rows(
+    x, centroids, *, chunk_size: int = 4096, impl: str | None = None
+) -> np.ndarray:
+    """Rows ``[n, hd]`` → code indices via the fused assignment kernel.
+
+    This is the codebook *lookup* (ADR 0007): nearest-centroid assignment
+    through ``ops.assign_top2_chunk``, chunked so arbitrarily large caches
+    quantize under the same static-shape program."""
+    x = np.asarray(x, np.float32)
+    c = jnp.asarray(centroids, jnp.float32)
+    dt = code_dtype_for(c.shape[0])
+    out = []
+    for start in range(0, x.shape[0], chunk_size):
+        seg = x[start : start + chunk_size]
+        assign, _, _ = ops.assign_top2_chunk(
+            jnp.asarray(seg), c, chunk_size=chunk_size, impl=impl
+        )
+        out.append(np.asarray(assign, dt))
+    return np.concatenate(out) if out else np.zeros((0,), dt)
+
+
+def dequantize_rows(codes, centroids) -> np.ndarray:
+    """Code indices → reconstructed rows (centroid gather)."""
+    return np.asarray(centroids, np.float32)[np.asarray(codes)]
+
+
+def quantize_cache(codebook: KVCodebook, cache: dict, *, impl: str | None = None) -> dict:
+    """A prefill cache → code-valued cache.
+
+    ``cache["k"]/["v"]`` ``[L, B, Sc, kv, hd]`` become ``k_codes/v_codes``
+    ``[L, B, Sc, kv]`` in the codebook's code dtype; every other entry
+    (``slot_pos``, vlm image KV, …) passes through untouched. This is the
+    storage format the ``--kv-quantize`` decode loop carries between steps.
+    """
+    qcache = {key: val for key, val in cache.items() if key not in ("k", "v")}
+    for kind, cname in (("k", "k_codes"), ("v", "v_codes")):
+        stack = np.asarray(cache[kind], np.float32)
+        if stack.shape[0] != codebook.n_layers or stack.shape[-1] != codebook.dim:
+            raise ValueError(
+                f"cache[{kind!r}] shape {stack.shape} does not match codebook "
+                f"[L={codebook.n_layers}, ..., hd={codebook.dim}]"
+            )
+        codes = np.empty(stack.shape[:-1], codebook.code_dtype)
+        for layer in range(codebook.n_layers):
+            rows = stack[layer].reshape(-1, codebook.dim)
+            codes[layer] = quantize_rows(
+                rows, codebook.centroids(kind)[layer], impl=impl
+            ).reshape(stack.shape[1:-1])
+        qcache[cname] = jnp.asarray(codes)
+    return qcache
+
+
+def dequantize_cache(codebook: KVCodebook, qcache: dict, dtype=None) -> dict:
+    """Inverse of :func:`quantize_cache`: codes → a raw-layout cache whose
+    K/V are the per-layer centroid reconstructions."""
+    cache = {k: v for k, v in qcache.items() if k not in ("k_codes", "v_codes")}
+    for kind, cname in (("k", "k_codes"), ("v", "v_codes")):
+        codes = np.asarray(qcache[cname])
+        recon = codebook.centroids(kind)[
+            np.arange(codebook.n_layers)[:, None], codes.reshape(codebook.n_layers, -1)
+        ].reshape(codes.shape + (codebook.dim,))
+        cache[kind] = jnp.asarray(recon, dtype or jnp.float32)
+    return cache
+
+
+def kv_cache_nbytes(cache: dict) -> int:
+    """Bytes the K/V payload occupies between decode steps: raw tensors for a
+    plain cache, codes + nothing else for a quantized one (the codebook is
+    amortised across requests; report it separately via ``KVCodebook.nbytes``)."""
+    keys = [k for k in ("k", "v", "k_codes", "v_codes") if k in cache]
+    if not keys:
+        raise ValueError(f"no KV payload entries in cache keys {sorted(cache)}")
+    return int(sum(np.asarray(cache[k]).nbytes for k in keys))
+
+
+# ---------------------------------------------------------------- save/load
+def save_codebook(
+    directory: str | pathlib.Path, codebook: KVCodebook, *, step: int = 0
+) -> pathlib.Path:
+    """Persist via ``train.checkpoint`` (npz + manifest, atomic rename)."""
+    state = {"codebook": {"k": codebook.k_centroids, "v": codebook.v_centroids}}
+    extra = {
+        "schema": _SCHEMA,
+        "artifact": "kv_codebook",
+        "n_layers": codebook.n_layers,
+        "k": codebook.k,
+        "dim": codebook.dim,
+        "meta": codebook.meta,
+    }
+    return train_ckpt.save(directory, step, state, extra)
+
+
+def load_codebook(directory: str | pathlib.Path, *, step: int | None = None) -> KVCodebook:
+    """Load a saved codebook (bit-identical to what was saved)."""
+    directory = pathlib.Path(directory)
+    if step is None:
+        step = train_ckpt.latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no codebook checkpoints under {directory}")
+    manifest = json.loads(
+        (directory / f"step_{step:08d}" / "manifest.json").read_text()
+    )
+    extra = manifest["extra"]
+    if extra.get("schema") != _SCHEMA or extra.get("artifact") != "kv_codebook":
+        raise ValueError(
+            f"not a schema-{_SCHEMA} kv_codebook checkpoint: "
+            f"schema={extra.get('schema')!r} artifact={extra.get('artifact')!r}"
+        )
+    shape = (extra["n_layers"], extra["k"], extra["dim"])
+    template = {"codebook": {
+        "k": np.zeros(shape, np.float32), "v": np.zeros(shape, np.float32),
+    }}
+    state, extra = train_ckpt.restore(directory, step, template)
+    return KVCodebook(
+        np.asarray(state["codebook"]["k"]),
+        np.asarray(state["codebook"]["v"]),
+        dict(extra.get("meta", {})),
+    )

@@ -1,0 +1,159 @@
+"""Decode over a code-valued KV cache: store codes, dequantize on read.
+
+The quantized decode step mirrors ``transformer.decode``'s dense branch
+exactly — it runs the *same* module-level ``dense_block_decode`` the raw
+path runs. Per layer and step:
+
+  1. **dequantize on attention read** — the layer's ``[B, Sc, kv]`` code
+     cache gathers through the ``[K, hd]`` centroid stack into the raw
+     ``[B, Sc, kv, hd]`` layout ``decode_attention`` expects;
+  2. the block computes the new token's K/V, writes them (exact, un-
+     quantized) into the ring slot, and attends — the current token always
+     sees its own exact K/V;
+  3. **re-quantize the written slot only** — one ``assign_top2`` over the
+     ``B·kv`` new vectors (the codebook lookup, ADR 0007) stores their codes
+     back; everything carried between steps is codes, never raw K/V.
+
+Only families with a plain self-attention KV stack (dense / moe / audio)
+are supported; recurrent state (ssm/hybrid) is not a vector cache.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.vq.codebook import KVCodebook, quantize_cache
+
+__all__ = ["decode_quantized", "generate_quantized", "teacher_forced_nll"]
+
+
+def _check_family(cfg):
+    if cfg.family in ("ssm", "hybrid", "vlm"):
+        raise NotImplementedError(
+            f"quantized decode supports plain KV-cache families "
+            f"(dense/moe/audio), not {cfg.family!r}"
+        )
+
+
+def decode_quantized(
+    cfg, params: dict, kcb: jax.Array, vcb: jax.Array,
+    qcache: dict, token: jax.Array, pos: jax.Array,
+):
+    """One decode step over codes. ``kcb``/``vcb`` are ``[L, K, hd]`` float32
+    centroid stacks; ``qcache`` holds ``k_codes``/``v_codes`` ``[L, B, Sc,
+    kv]`` + ``slot_pos``. Returns ``(logits [B, V], new qcache)``."""
+    _check_family(cfg)
+    b = token.shape[0]
+    x = jnp.take(tf._wt(cfg, params["embed"], cfg.dtype), token, axis=0)
+    x = shard(x, "batch", None)
+    qcache = dict(qcache)
+    sc = qcache["slot_pos"].shape[1]
+    slot = pos % sc
+    slot_pos = qcache["slot_pos"].at[:, slot].set(pos)  # token sees itself
+    kcb_t = kcb.astype(cfg.dtype)
+    vcb_t = vcb.astype(cfg.dtype)
+
+    def _idx(a, l):
+        return jax.lax.dynamic_index_in_dim(a, l, 0, keepdims=False)
+
+    def _upd(a, v, l):
+        return jax.lax.dynamic_update_index_in_dim(a, v, l, 0)
+
+    def _requant(new_rows, cb_l, codes_l, code_dtype):
+        # new_rows [B, kv, hd]; nearest-centroid code for the written slot
+        code, _, _ = ops.assign_top2(
+            new_rows.reshape(-1, cb_l.shape[-1]).astype(jnp.float32),
+            cb_l.astype(jnp.float32),
+        )
+        code = code.reshape(b, 1, -1).astype(code_dtype)
+        return jax.lax.dynamic_update_slice_in_dim(codes_l, code, slot, axis=1)
+
+    def body(carry, layer):
+        x, k_codes, v_codes = carry
+        blk, l = layer
+        kc = jnp.take(_idx(kcb_t, l), _idx(k_codes, l).astype(jnp.int32), axis=0)
+        vc = jnp.take(_idx(vcb_t, l), _idx(v_codes, l).astype(jnp.int32), axis=0)
+        x, kc, vc = tf.dense_block_decode(cfg, blk, x, kc, vc, slot_pos, pos)
+        new_k = jax.lax.dynamic_index_in_dim(kc, slot, 1, keepdims=False)
+        new_v = jax.lax.dynamic_index_in_dim(vc, slot, 1, keepdims=False)
+        k_codes = _upd(k_codes, _requant(new_k, _idx(kcb, l), _idx(k_codes, l), k_codes.dtype), l)
+        v_codes = _upd(v_codes, _requant(new_v, _idx(vcb, l), _idx(v_codes, l), v_codes.dtype), l)
+        return (x, k_codes, v_codes), None
+
+    (x, k_codes, v_codes), _ = tf._scan_or_loop(
+        cfg, body, (x, qcache["k_codes"], qcache["v_codes"]),
+        (params["layers"], jnp.arange(cfg.n_layers)), cfg.n_layers,
+    )
+    qcache["k_codes"], qcache["v_codes"] = k_codes, v_codes
+    qcache["slot_pos"] = slot_pos
+    return tf._head(cfg, params, x), qcache
+
+
+def _quantized_step_fn(cfg, params, codebook: KVCodebook):
+    kcb = jnp.asarray(codebook.k_centroids)
+    vcb = jnp.asarray(codebook.v_centroids)
+    return jax.jit(
+        lambda qc, t, pos: decode_quantized(cfg, params, kcb, vcb, qc, t, pos),
+        donate_argnums=(0,),
+    )
+
+
+def generate_quantized(
+    cfg, params: dict, codebook: KVCodebook, prompts, gen_len: int
+):
+    """Greedy generation with the code-valued cache — the quantized twin of
+    ``launch.serve.generate`` (prefill raw, quantize once, then every decode
+    step carries codes)."""
+    _check_family(cfg)
+    b, p = prompts.shape
+    last_logits, cache = tf.prefill(cfg, params, prompts, max_seq_len=p + gen_len)
+    qcache = quantize_cache(codebook, cache)
+    step = _quantized_step_fn(cfg, params, codebook)
+    token = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    out = [token]
+    for i in range(gen_len - 1):
+        logits, qcache = step(qcache, token, jnp.asarray(p + i, jnp.int32))
+        token = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(token)
+    return jnp.stack(out, axis=1)
+
+
+def teacher_forced_nll(
+    cfg, params: dict, tokens, *, prompt_len: int,
+    codebook: KVCodebook | None = None,
+) -> float:
+    """Mean next-token NLL over positions ``prompt_len .. T-1``, teacher
+    forced through the decode path (``exp`` of it is the perplexity).
+
+    With ``codebook=None`` the raw ring-buffer cache serves (the fp baseline);
+    with a codebook, the prefill cache is quantized once and every subsequent
+    step reads/writes codes. Evaluating all variants on the *same* token
+    sequence isolates the cache representation as the only difference."""
+    tokens = jnp.asarray(tokens, jnp.int32)
+    b, t = tokens.shape
+    if not 0 < prompt_len < t:
+        raise ValueError(f"prompt_len must be in (0, {t}), got {prompt_len}")
+    last_logits, cache = tf.prefill(
+        cfg, params, tokens[:, :prompt_len], max_seq_len=t
+    )
+    if codebook is None:
+        step = jax.jit(
+            lambda c, tok, pos: tf.decode(cfg, params, c, tok, pos),
+            donate_argnums=(0,),
+        )
+    else:
+        cache = quantize_cache(codebook, cache)
+        step = _quantized_step_fn(cfg, params, codebook)
+    logits = last_logits
+    nll = jnp.zeros((), jnp.float32)
+    for i in range(prompt_len, t):
+        target = tokens[:, i]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = nll - jnp.take_along_axis(logp, target[:, None], axis=1).sum()
+        if i < t - 1:
+            logits, cache = step(cache, target, jnp.asarray(i, jnp.int32))
+    return float(nll) / (b * (t - prompt_len))

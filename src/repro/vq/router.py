@@ -1,0 +1,87 @@
+"""MoE router seeding from clustered token representations (DESIGN.md §4
+use-case 3, §14).
+
+Router logits are ``x @ W`` with ``W [d, E]`` — so initialising each column
+to a (unit-normalised) cluster centroid of the token representation space
+gives every expert a coherent region of that space from step 0, instead of
+random hyperplanes. The clustering runs through the PR 6
+:class:`~repro.service.BWKMSession`, so the same session keeps absorbing
+serving-time batches via ``partial_fit`` and re-seeds the router when the
+traffic distribution drifts (the drift-triggered refit is the session's).
+
+Normalisation guard: BWKM can emit zero-weight centroids (forgy on tiny
+``n``, dead clusters after decay) whose norm is 0 — dividing by it poisons a
+whole router column with NaN, which softmax then spreads over every expert.
+Columns under the norm floor are left at zero instead (the expert keeps a
+flat logit and stays reachable).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bwkm import BWKMConfig
+from repro.models import moe
+from repro.service.session import BWKMSession, ServiceConfig
+
+__all__ = ["router_from_centroids", "seed_router", "install_router"]
+
+#: centroid norms at or below this are treated as dead (zero column)
+NORM_FLOOR = 1e-8
+
+
+def router_from_centroids(centroids, *, norm_floor: float = NORM_FLOOR) -> jnp.ndarray:
+    """``[E, d]`` centroids → router weights ``[d, E]`` with unit columns.
+
+    Zero-norm (dead) centroids become all-zero columns rather than NaN —
+    the regression the examples/router_init.py port pins."""
+    c = jnp.asarray(centroids, jnp.float32)
+    if c.ndim != 2:
+        raise ValueError(f"centroids must be [E, d], got shape {c.shape}")
+    norms = jnp.linalg.norm(c, axis=1)
+    live = norms > norm_floor
+    safe = jnp.where(live, norms, 1.0)
+    return jnp.where(live[:, None], c / safe[:, None], 0.0).T
+
+
+def seed_router(
+    hidden,
+    n_experts: int,
+    *,
+    session: BWKMSession | None = None,
+    config: ServiceConfig | None = None,
+    seed: int = 0,
+    max_iters: int = 10,
+) -> tuple[jnp.ndarray, BWKMSession]:
+    """Cluster token representations ``[n, d]`` → router ``[d, E]``.
+
+    Returns ``(router_w, session)``. Pass the returned session back in to
+    refresh the router online: each call is one ``partial_fit`` mini-batch
+    (decay → merge → track → drift-triggered refit), so the centroids — and
+    the router re-derived from them — follow the serving distribution."""
+    if session is None:
+        cfg = config or ServiceConfig(
+            base=BWKMConfig(k=n_experts, max_iters=max_iters), seed=seed
+        )
+        if cfg.base.k != n_experts:
+            raise ValueError(
+                f"config clusters k={cfg.base.k} but n_experts={n_experts}"
+            )
+        session = BWKMSession(cfg)
+    elif session.config.base.k != n_experts:
+        raise ValueError(
+            f"session clusters k={session.config.base.k} but n_experts={n_experts}"
+        )
+    session.partial_fit(np.asarray(hidden, np.float32))
+    return router_from_centroids(session.centroids), session
+
+
+def install_router(params: dict, router_w) -> dict:
+    """Install ``router_w [d, E]`` into every MoE layer of a stacked
+    transformer param tree (non-destructive copy)."""
+    if "layers" not in params or "moe" not in params["layers"]:
+        raise ValueError("params has no stacked MoE layers to install into")
+    layers = dict(params["layers"])
+    layers["moe"] = moe.replace_router(layers["moe"], router_w)
+    return {**params, "layers": layers}

@@ -24,6 +24,9 @@ EXPECTED_SURFACE = [
     "register_engine",
     "register_init",
     "select_engine",
+    # PR 7: the vector-quantization subsystem (KV-cache codebooks + MoE
+    # router seeding) is public — serving integrations import repro.vq
+    "vq",
 ]
 
 EXPECTED_ENGINES = ["distributed", "incore", "streaming"]

@@ -1,0 +1,341 @@
+"""repro.vq test suite (ISSUE 7): KV-cache codebooks + router seeding.
+
+Covers the contracts DESIGN.md §14 promises:
+
+* :class:`CacheDumpSource` is a real :class:`ChunkSource` — protocol
+  conformance, repeatable iteration, exact chunk shapes, random access.
+* Codebooks are fitted *through the streaming engine* (the meta audit trail
+  proves it), never via in-core arrays.
+* Quantization IS assignment: round-trip reconstruction MSE equals the mean
+  ``d1`` of ``assign_top2`` on the same rows, exactly.
+* Code dtype is the narrowest that indexes k (uint8 ≤ 256 < uint16 ≤ 65536).
+* save/load is bit-identical, schema-checked.
+* Decode parity: with an exact codebook the quantized decode path matches
+  fp16 decode to float tolerance; with a fitted codebook the logit drift is
+  bounded and strictly smaller than a random codebook's at equal k.
+* Router seeding never emits NaN columns (the dead-centroid regression).
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs, vq
+from repro.data.chunks import ChunkSource
+from repro.kernels import ops
+from repro.models import moe, transformer
+
+B, P, GEN = 2, 16, 8
+K_FIT = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = configs.reduced_config(configs.get_config("granite-8b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    prompts = np.asarray(
+        jax.random.randint(jax.random.PRNGKey(1), (B, P), 0, cfg.vocab)
+    )
+    return cfg, params, prompts
+
+
+@pytest.fixture(scope="module")
+def codebook(setup):
+    cfg, params, prompts = setup
+    return vq.fit_kv_codebook(
+        cfg, params, prompts, k=K_FIT, chunk_size=64, prompt_batch=2,
+        max_iters=3, seed=2,
+    )
+
+
+# ----------------------------------------------------------- CacheDumpSource
+def test_source_satisfies_chunk_source_protocol(setup):
+    cfg, params, prompts = setup
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=0, kind="k", chunk_size=24)
+    assert isinstance(src, ChunkSource)
+    sc = src.n_points // (B * cfg.n_kv_heads)
+    assert src.n_points == B * sc * cfg.n_kv_heads
+    assert src.dim == cfg.hd
+
+
+def test_source_chunks_are_exact_and_repeatable(setup):
+    cfg, params, prompts = setup
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=1, kind="v", chunk_size=24)
+    first = list(src.chunks())
+    second = list(src.chunks())
+    assert len(first) == src.n_chunks
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a, b)
+    # all but the last chunk exactly chunk_size; total rows == n_points
+    for c in first[:-1]:
+        assert c.shape == (24, cfg.hd)
+    assert sum(c.shape[0] for c in first) == src.n_points
+
+
+def test_source_chunk_at_matches_iteration(setup):
+    cfg, params, prompts = setup
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=0, kind="v", chunk_size=24)
+    seq = list(src.chunks())
+    for i in (0, len(seq) // 2, len(seq) - 1):
+        np.testing.assert_array_equal(src.chunk_at(i), seq[i])
+
+
+def test_source_rejects_state_space_families(setup):
+    cfg, params, prompts = setup
+    ssm = configs.reduced_config(configs.get_config("mamba2-130m"))
+    with pytest.raises(ValueError):
+        vq.n_kv_layers(ssm)
+
+
+# ------------------------------------------------------------------- fitting
+def test_codebook_fits_through_streaming_engine(codebook, setup):
+    cfg, _, _ = setup
+    audit = codebook.meta["layers"]
+    assert len(audit) == 2 * cfg.n_layers  # one per (layer, K/V)
+    assert all(m["engine"] == "streaming" for m in audit)
+    assert all(m["n_points"] > 0 for m in audit)
+    assert codebook.meta["distances_total"] > 0
+    assert codebook.k_centroids.shape == (cfg.n_layers, K_FIT, cfg.hd)
+    assert np.isfinite(codebook.k_centroids).all()
+    assert np.isfinite(codebook.v_centroids).all()
+
+
+def test_bwkm_beats_random_codebook_mse(codebook, setup):
+    cfg, params, prompts = setup
+    rand = vq.random_kv_codebook(
+        cfg, params, prompts, k=K_FIT, seed=3, chunk_size=64, prompt_batch=2
+    )
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=0, kind="k", chunk_size=64)
+    rows = np.concatenate(list(src.chunks()))
+
+    def mse(cb):
+        recon = vq.dequantize_rows(
+            vq.quantize_rows(rows, cb.k_centroids[0]), cb.k_centroids[0]
+        )
+        return float(np.mean(np.sum((rows - recon) ** 2, axis=1)))
+
+    assert mse(codebook) < mse(rand)
+
+
+# --------------------------------------------------- quantize == assignment
+def test_round_trip_mse_equals_assignment_d1(codebook, setup):
+    cfg, params, prompts = setup
+    src = vq.CacheDumpSource(cfg, params, prompts, layer=0, kind="k", chunk_size=64)
+    rows = np.concatenate(list(src.chunks()))
+    c = codebook.k_centroids[0]
+
+    codes = vq.quantize_rows(rows, c)
+    recon = vq.dequantize_rows(codes, c)
+    mse_roundtrip = float(np.mean(np.sum((rows - recon) ** 2, axis=1)))
+
+    _, d1, _ = ops.assign_top2(jnp.asarray(rows), jnp.asarray(c))
+    assert np.allclose(mse_roundtrip, float(jnp.mean(d1)), rtol=1e-5)
+
+
+def test_quantize_dequantize_cache_round_trip(codebook, setup):
+    cfg, params, prompts = setup
+    _, cache = transformer.prefill(cfg, params, jnp.asarray(prompts))
+    qcache = vq.quantize_cache(codebook, cache)
+    assert qcache["k_codes"].dtype == jnp.uint8
+    assert qcache["k_codes"].shape == cache["k"].shape[:-1]
+    np.testing.assert_array_equal(qcache["slot_pos"], cache["slot_pos"])
+    recon = vq.dequantize_cache(codebook, qcache)
+    assert recon["k"].shape == cache["k"].shape
+    # one uint8 code replaces an hd-dim f32 vector: 4·hd x compression,
+    # and the payload accountant agrees exactly
+    assert vq.kv_cache_nbytes(qcache) * 4 * cfg.hd == vq.kv_cache_nbytes(cache)
+
+
+# -------------------------------------------------------------- code dtypes
+def test_code_dtype_bounds():
+    assert vq.code_dtype_for(2) == np.uint8
+    assert vq.code_dtype_for(256) == np.uint8
+    assert vq.code_dtype_for(257) == np.uint16
+    assert vq.code_dtype_for(65536) == np.uint16
+    with pytest.raises(ValueError):
+        vq.code_dtype_for(65537)
+    with pytest.raises(ValueError):
+        vq.code_dtype_for(0)
+
+
+def test_uint16_codebook_quantizes(setup):
+    cfg, _, _ = setup
+    rng = np.random.RandomState(0)
+    cb = vq.KVCodebook(
+        rng.randn(cfg.n_layers, 300, cfg.hd), rng.randn(cfg.n_layers, 300, cfg.hd)
+    )
+    assert cb.code_dtype == np.uint16
+    codes = vq.quantize_rows(rng.randn(50, cfg.hd).astype(np.float32), cb.k_centroids[0])
+    assert codes.dtype == np.uint16
+    assert codes.max() < 300
+
+
+# ----------------------------------------------------------------- save/load
+def test_save_load_bit_identity(codebook, tmp_path):
+    vq.save_codebook(tmp_path / "cb", codebook)
+    loaded = vq.load_codebook(tmp_path / "cb")
+    np.testing.assert_array_equal(loaded.k_centroids, codebook.k_centroids)
+    np.testing.assert_array_equal(loaded.v_centroids, codebook.v_centroids)
+    assert loaded.meta["k"] == K_FIT
+    assert [m["engine"] for m in loaded.meta["layers"]] == ["streaming"] * len(
+        codebook.meta["layers"]
+    )
+
+
+def test_load_rejects_foreign_checkpoints(setup, tmp_path):
+    from repro.train import checkpoint as train_ckpt
+
+    train_ckpt.save(
+        tmp_path / "other", 0, {"s": {"x": np.zeros(3, np.float32)}},
+        {"artifact": "something_else"},
+    )
+    with pytest.raises(ValueError):
+        vq.load_codebook(tmp_path / "other", step=0)
+    with pytest.raises(FileNotFoundError):
+        vq.load_codebook(tmp_path / "missing")
+
+
+# ------------------------------------------------------------- decode parity
+def test_decode_parity_exact_codebook(setup):
+    """Codebook = the cache's own rows → quantization is lossless → the
+    quantized decode step must reproduce fp16 logits to float tolerance."""
+    cfg, params, prompts = setup
+    _, cache = transformer.prefill(
+        cfg, params, jnp.asarray(prompts), max_seq_len=P + GEN
+    )
+    L = cfg.n_layers
+    exact = vq.KVCodebook(
+        np.asarray(cache["k"], np.float32).reshape(L, -1, cfg.hd),
+        np.asarray(cache["v"], np.float32).reshape(L, -1, cfg.hd),
+    )
+    qcache = vq.quantize_cache(exact, cache)
+    tok = jnp.zeros((B,), jnp.int32)
+    pos = jnp.asarray(P, jnp.int32)
+    raw, _ = transformer.decode(cfg, params, dict(cache), tok, pos)
+    quant, qcache2 = vq.decode_quantized(
+        cfg, params,
+        jnp.asarray(exact.k_centroids), jnp.asarray(exact.v_centroids),
+        qcache, tok, pos,
+    )
+    np.testing.assert_allclose(np.asarray(raw), np.asarray(quant), atol=1e-5)
+    assert qcache2["k_codes"].dtype == qcache["k_codes"].dtype
+
+
+def test_decode_drift_bounded_and_better_than_random(codebook, setup):
+    """Fitted-codebook logit drift vs fp16 is pinned (< 2.0 on the reduced
+    config) and strictly smaller than a random codebook's at equal k,
+    accumulated over a short greedy rollout."""
+    cfg, params, prompts = setup
+    rand = vq.random_kv_codebook(
+        cfg, params, prompts, k=K_FIT, seed=3, chunk_size=64, prompt_batch=2
+    )
+
+    def rollout_drift(cb):
+        _, cache = transformer.prefill(
+            cfg, params, jnp.asarray(prompts), max_seq_len=P + GEN
+        )
+        qcache = vq.quantize_cache(cb, cache)
+        kcb = jnp.asarray(cb.k_centroids)
+        vcb = jnp.asarray(cb.v_centroids)
+        tok = jnp.zeros((B,), jnp.int32)
+        total = 0.0
+        for i in range(4):
+            pos = jnp.asarray(P + i, jnp.int32)
+            raw, cache = transformer.decode(cfg, params, cache, tok, pos)
+            quant, qcache = vq.decode_quantized(cfg, params, kcb, vcb, qcache, tok, pos)
+            total += float(jnp.abs(raw - quant).max())
+            tok = jnp.argmax(raw, axis=-1).astype(jnp.int32)
+        return total
+
+    drift_bwkm = rollout_drift(codebook)
+    drift_rand = rollout_drift(rand)
+    assert np.isfinite(drift_bwkm)
+    assert drift_bwkm < 2.0, f"quantized logit drift regressed: {drift_bwkm}"
+    assert drift_bwkm < drift_rand
+
+
+def test_generate_quantized_runs(codebook, setup):
+    cfg, params, prompts = setup
+    toks = vq.generate_quantized(cfg, params, codebook, jnp.asarray(prompts), GEN)
+    assert toks.shape == (B, GEN)
+    assert int(toks.min()) >= 0 and int(toks.max()) < cfg.vocab
+
+
+def test_teacher_forced_nll_orders_codebooks(codebook, setup):
+    """fp16 NLL on its own greedy continuation must not exceed either
+    quantized NLL by more than noise; BWKM must beat random at equal k."""
+    cfg, params, prompts = setup
+    from repro.launch import serve
+
+    gen = serve.generate(cfg, params, jnp.asarray(prompts), GEN)
+    eval_toks = jnp.concatenate([jnp.asarray(prompts), gen], axis=1)
+    rand = vq.random_kv_codebook(
+        cfg, params, prompts, k=K_FIT, seed=3, chunk_size=64, prompt_batch=2
+    )
+    nll_f = vq.teacher_forced_nll(cfg, params, eval_toks, prompt_len=P)
+    nll_b = vq.teacher_forced_nll(
+        cfg, params, eval_toks, prompt_len=P, codebook=codebook
+    )
+    nll_r = vq.teacher_forced_nll(cfg, params, eval_toks, prompt_len=P, codebook=rand)
+    assert np.isfinite([nll_f, nll_b, nll_r]).all()
+    assert nll_b < nll_r, f"bwkm nll {nll_b} must beat random {nll_r}"
+
+
+# ------------------------------------------------------------ router seeding
+def test_router_from_centroids_unit_columns():
+    rng = np.random.RandomState(0)
+    c = rng.randn(4, 8).astype(np.float32)
+    w = vq.router_from_centroids(c)
+    assert w.shape == (8, 4)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(w), axis=0), 1.0, atol=1e-5)
+
+
+def test_router_dead_centroid_yields_zero_not_nan():
+    """The regression examples/router_init.py used to hit: a zero-norm
+    centroid (dead cluster) must give a zero column, never NaN."""
+    c = np.zeros((3, 6), np.float32)
+    c[0] = 1.0
+    w = np.asarray(vq.router_from_centroids(c))
+    assert np.isfinite(w).all()
+    np.testing.assert_array_equal(w[:, 1], 0.0)
+    np.testing.assert_array_equal(w[:, 2], 0.0)
+    np.testing.assert_allclose(np.linalg.norm(w[:, 0]), 1.0, atol=1e-6)
+
+
+def test_seed_router_and_session_refresh():
+    rng = np.random.RandomState(1)
+    h = rng.randn(512, 16).astype(np.float32)
+    w1, session = vq.seed_router(h, 4, seed=0, max_iters=3)
+    assert w1.shape == (16, 4)
+    assert bool(jnp.isfinite(w1).all())
+    w2, session2 = vq.seed_router(rng.randn(256, 16).astype(np.float32), 4,
+                                  session=session)
+    assert session2 is session
+    assert bool(jnp.isfinite(w2).all())
+    with pytest.raises(ValueError):
+        vq.seed_router(h, 7, session=session)
+
+
+def test_install_router_moe_forward():
+    cfg = configs.reduced_config(configs.get_config("deepseek-moe-16b"))
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(2)
+    w = np.asarray(vq.router_from_centroids(rng.randn(cfg.n_experts, cfg.d_model)))
+    newp = vq.install_router(params, w)
+    assert newp is not params
+    assert newp["layers"]["moe"]["router"].shape == params["layers"]["moe"]["router"].shape
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (2, 8)))
+    logits, _, _ = transformer.forward(cfg, newp, tokens)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_replace_router_validation():
+    p = {"router": jnp.zeros((4, 6, 3), jnp.float32)}
+    out = moe.replace_router(p, np.ones((6, 3), np.float32))  # broadcast L
+    assert out["router"].shape == (4, 6, 3)
+    with pytest.raises(ValueError):
+        moe.replace_router(p, np.ones((5, 3), np.float32))
+    with pytest.raises(ValueError):
+        moe.replace_router(p, np.full((6, 3), np.nan, np.float32))
