@@ -139,13 +139,14 @@ def main(argv=None):
     record = {
         "unit": "distance computations (seeding only) + E^D after matched "
         "Lloyd polish",
+        "measurement": "measured",  # counters from actual runs, not a model
         "workloads": [],
     }
     rows = []
     for name, n, d, k, spread, noise in WORKLOADS:
         r = _run(name, n, d, k, spread, noise, reps=args.reps,
                  polish_iters=args.polish_iters, seed=args.seed)
-        record["workloads"].append(r)
+        record["workloads"].append({"measurement": "measured"} | r)
         s = r["strategies"]
         rows.append((
             f"init_{name}_n{n}_d{d}_k{k}",

@@ -81,7 +81,12 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     rows = []
-    record: dict = {"unit": "bytes/iteration", "shapes": []}
+    # roofline-model numbers, not timings: see bench_wallclock for measured
+    record: dict = {
+        "unit": "bytes/iteration",
+        "measurement": "analytic",
+        "shapes": [],
+    }
     for n, d, k in SHAPES:
         kx, kc = jax.random.split(jax.random.PRNGKey(0))
         x = jax.random.normal(kx, (n, d), jnp.float32)
@@ -118,6 +123,7 @@ def main(argv=None):
         ))
         record["shapes"].append({
             "n": n, "d": d, "k": k,
+            "measurement": "analytic",
             "distance_ops": n * k,
             "blocking": {kk: blk[kk] for kk in ("bn", "bk", "fused_ok", "vmem_bytes")},
             "hbm_bytes_fused": hbm_fused,

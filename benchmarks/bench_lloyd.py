@@ -122,13 +122,14 @@ def main(argv=None):
 
     record = {
         "unit": "distance computations (kernel-reported), bytes/iteration",
+        "measurement": "measured",  # counters from actual runs, not a model
         "workloads": [],
     }
     rows = []
     for name, n, d, k, spread, noise in WORKLOADS:
         r = _run(name, n, d, k, spread, noise,
                  max_iters=args.max_iters, seed=args.seed)
-        record["workloads"].append(r)
+        record["workloads"].append({"measurement": "measured"} | r)
         rows.append((
             f"lloyd_pruned_{name}_n{n}_d{d}_k{k}",
             0.0,  # not a wall-clock bench; the unit is distance ops

@@ -119,11 +119,15 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    record = {"unit": "points/s sustained, ms/batch, bytes", "scenarios": []}
+    record = {
+        "unit": "points/s sustained, ms/batch, bytes",
+        "measurement": "measured",
+        "scenarios": [],
+    }
     rows = []
     for name, n_chunks, nrows, d, k, mode in SCENARIOS:
         r = _run(name, n_chunks, nrows, d, k, mode, seed=args.seed)
-        record["scenarios"].append(r)
+        record["scenarios"].append({"measurement": "measured"} | r)
         def _ms(v):
             return f"{v:.1f}" if v is not None else "n/a"
         rows.append((

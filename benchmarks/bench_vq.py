@@ -148,13 +148,14 @@ def main(argv=None):
         "prompt_len": args.prompt_len,
         "gen": args.gen,
         "unit": "mse per row, bytes, tokens/s, distance ops",
+        "measurement": "measured",
         "ks": [],
     }
     rows = []
     for k in args.ks:
         r = _bench_k(cfg, params, prompts, fit_prompts, k,
                      gen=args.gen, seed=args.seed)
-        record["ks"].append(r)
+        record["ks"].append({"measurement": "measured"} | r)
         rows.append((
             f"vq_{args.arch}_k{k}",
             0.0,  # wall-clock lives in the derived fields

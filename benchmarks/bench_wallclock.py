@@ -1,0 +1,228 @@
+"""Wall-clock truth for the three kernel seams (BENCH_wallclock.json).
+
+Every other number in ``BENCH_kernels.json`` is *analytic* — roofline
+bytes and model seconds that assume the TPU-class peak constants in
+``roofline.analysis``. This harness closes the loop: it times the seam
+the engines actually dispatch to (``ops.assign_update``,
+``ops.assign_update_pruned``, ``ops.min_sqdist_update`` with
+``impl="auto"``) and records measured ms/iteration and effective GB/s
+*alongside* the analytic prediction, per seam × shape × dtype, with the
+model-vs-measured error reported explicitly.
+
+Tagging contract (enforced by ``benchmarks.run`` for every
+``BENCH_*.json``): each entry carries ``measurement: "analytic" |
+"measured"``. On a host with no Pallas backend (CPU CI), timings are
+still *measured* wall-clock — of the ref oracle the auto path resolves
+to — and are additionally tagged ``fallback: true`` with the reason, so
+a reader can never mistake a CPU oracle timing for an accelerator
+number. On a GPU/TPU host the timed blocking comes from the autotune
+cache (``kernels.autotune``), and the entry records the tuned-vs-analytic
+speedup measured there.
+
+  PYTHONPATH=src python -m benchmarks.bench_wallclock
+  PYTHONPATH=src python -m benchmarks.bench_wallclock --quick --no-json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import autotune, ops
+from repro.roofline import analysis
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_wallclock.json"
+
+SEAMS = ("assign_update", "assign_update_pruned", "min_sqdist_update")
+
+# (n, d, k): k doubles as the candidate count L for the fold seam
+SHAPES = [(65536, 16, 32), (65536, 64, 64)]
+SHAPES_QUICK = [(8192, 16, 16)]
+
+ACTIVE_FRAC = 0.4  # pruned seam: fraction of rows the bounds could not skip
+
+
+def _make_operands(seam: str, n: int, d: int, k: int, dtype) -> tuple:
+    kx, kc, ka = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = (jax.random.normal(kx, (n, d)) * 2).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 2).astype(dtype)
+    w = jnp.ones((n,), jnp.float32)
+    if seam == "assign_update":
+        return x, w, c
+    if seam == "assign_update_pruned":
+        cached = jnp.zeros((n,), jnp.int32)
+        active = (jax.random.uniform(ka, (n,)) < ACTIVE_FRAC).astype(jnp.int32)
+        return x, w, c, cached, active
+    mind2 = jnp.full((n,), 3.0e38, jnp.float32)
+    return x, w, c, jnp.ones((k,), jnp.float32), mind2
+
+
+def _seam_fn(seam: str, impl: str):
+    if seam == "assign_update":
+        call = lambda *a: ops.assign_update(*a, impl=impl)  # noqa: E731
+    elif seam == "assign_update_pruned":
+        call = lambda *a: ops.assign_update_pruned(*a, impl=impl)  # noqa: E731
+    else:
+        call = lambda *a: ops.min_sqdist_update(*a, impl=impl)  # noqa: E731
+    return jax.jit(call)
+
+
+def _time_fn(fn, operands, reps: int) -> dict[str, float]:
+    jax.block_until_ready(fn(*operands))  # compile + warm
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*operands))
+        samples.append(time.perf_counter() - t0)
+    samples.sort()
+    return {
+        "best_s": samples[0],
+        "median_s": samples[len(samples) // 2],
+    }
+
+
+def _analytic_prediction(seam: str, n: int, d: int, k: int, dtype_bytes: int) -> dict:
+    """The roofline model's view of the seam at this shape: fused HBM bytes
+    and TPU-class model seconds (``max(compute, memory)``)."""
+    if seam == "min_sqdist_update":
+        blk = analysis.min_sqdist_blocking(d, k, dtype_bytes=dtype_bytes)
+        hbm = analysis.min_sqdist_hbm_bytes(
+            n, d, k, bn=blk["bn"], dtype_bytes=dtype_bytes
+        )
+    else:
+        blk = analysis.assign_update_blocking(d, k, dtype_bytes=dtype_bytes)
+        hbm = analysis.assign_update_hbm_bytes(
+            n, d, k, fused=True, bn=blk["bn"], dtype_bytes=dtype_bytes
+        )
+    flops = 2.0 * n * d * k  # the MXU dot dominates
+    t_compute = flops / analysis.PEAK_FLOPS
+    t_memory = hbm["total_bytes"] / analysis.HBM_BW
+    return {
+        "measurement": "analytic",
+        "model": "tpu-v5e-class roofline (analysis.PEAK_FLOPS / analysis.HBM_BW)",
+        "total_bytes": hbm["total_bytes"],
+        "flops": flops,
+        "predicted_ms": 1e3 * max(t_compute, t_memory),
+        "predicted_gbps": hbm["total_bytes"] / max(t_compute, t_memory) / 1e9,
+        "bound": "memory" if t_memory >= t_compute else "compute",
+    }
+
+
+def _blocking_entry(seam: str, n: int, d: int, k: int, dtype, backend: str) -> dict:
+    """The blocking the dispatch would use: the autotune layer on a Pallas
+    backend (cache > measured > analytic), the analytic plan otherwise."""
+    if backend in ("gpu", "tpu"):
+        blk = autotune.blocking(seam, n=n, d=d, k=k, dtype=dtype, backend=backend)
+        keep = (
+            "bn", "bk", "bl", "source", "seconds", "analytic_seconds",
+            "speedup_vs_analytic", "candidates_timed",
+        )
+        return {f: blk[f] for f in keep if f in blk}
+    if seam == "min_sqdist_update":
+        blk = analysis.min_sqdist_blocking(d, k, dtype_bytes=jnp.dtype(dtype).itemsize)
+        return {"bn": blk["bn"], "bl": blk["bl"], "source": "analytic"}
+    blk = analysis.assign_update_blocking(d, k, dtype_bytes=jnp.dtype(dtype).itemsize)
+    return {"bn": blk["bn"], "bk": blk["bk"], "source": "analytic"}
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--dtypes", nargs="+", default=["float32", "bfloat16"])
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--no-json", action="store_true")
+    args = ap.parse_args(argv)
+
+    backend = ops.backend()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)  # auto-fallback warn
+        impl = ops.resolve_impl("auto")
+    fallback = impl != "pallas"
+
+    record: dict = {
+        "unit": "ms/iteration, GB/s effective",
+        "measurement": "mixed",
+        "jax_backend": backend,
+        "impl": impl,
+        "fallback": fallback,
+        "entries": [],
+    }
+    if fallback:
+        record["fallback_reason"] = (
+            f"no Pallas backend on {backend!r}: timings measure the ref "
+            "oracle the auto path resolves to, not an accelerator kernel"
+        )
+
+    shapes = SHAPES_QUICK if args.quick else SHAPES
+    rows = []
+    for dtype_name in args.dtypes:
+        dtype = jnp.dtype(dtype_name)
+        for n, d, k in shapes:
+            for seam in SEAMS:
+                operands = _make_operands(seam, n, d, k, dtype)
+                t = _time_fn(_seam_fn(seam, impl), operands, args.reps)
+                ana = _analytic_prediction(seam, n, d, k, dtype.itemsize)
+                ms = 1e3 * t["best_s"]
+                gbps = ana["total_bytes"] / t["best_s"] / 1e9
+                entry = {
+                    "seam": seam,
+                    "n": n,
+                    "d": d,
+                    "k": k,
+                    "dtype": dtype_name,
+                    "measurement": "measured",
+                    "impl": impl,
+                    "fallback": fallback,
+                    "ms_per_iter": ms,
+                    "ms_per_iter_median": 1e3 * t["median_s"],
+                    "gbps_effective": gbps,
+                    "blocking": _blocking_entry(seam, n, d, k, dtype, backend),
+                    "analytic": ana,
+                    "measured_over_predicted": ms / ana["predicted_ms"],
+                }
+                record["entries"].append(entry)
+                rows.append((
+                    f"wallclock_{seam}_n{n}_d{d}_k{k}_{dtype_name}",
+                    1e3 * ms,
+                    f"ms={ms:.3f};gbps={gbps:.2f};"
+                    f"pred_ms={ana['predicted_ms']:.4f};"
+                    f"x_model={ms / ana['predicted_ms']:.1f};"
+                    f"fallback={int(fallback)}",
+                ))
+
+    # per-seam model-vs-measured summary (geometric mean over cells)
+    summary = {}
+    for seam in SEAMS:
+        ratios = [
+            e["measured_over_predicted"]
+            for e in record["entries"]
+            if e["seam"] == seam
+        ]
+        geo = 1.0
+        for r in ratios:
+            geo *= r
+        summary[seam] = {
+            "cells": len(ratios),
+            "measured_over_predicted_geomean": geo ** (1.0 / len(ratios)),
+        }
+    record["model_vs_measured"] = summary
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+    if not args.no_json:
+        pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"# wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

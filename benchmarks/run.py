@@ -16,22 +16,83 @@ Emits ``name,us_per_call,derived`` CSV:
   * vq_*        — KV-cache quantization (reconstruction MSE vs k, cache
                   bytes, fit distance ops streaming vs in-core, decode
                   tokens/s ± quantization)
+  * wallclock_* — measured ms/iteration + GB/s per kernel seam vs the
+                  analytic roofline (``--wallclock`` runs only this)
+
+Every ``BENCH_*.json`` this package writes is schema-checked on exit:
+the record and each entry must be tagged ``measurement: analytic |
+measured`` so model numbers can never masquerade as timings.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import pathlib
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+_ENTRY_TAGS = ("analytic", "measured")
+_RECORD_TAGS = _ENTRY_TAGS + ("mixed",)
+
+
+def check_bench_schema(root: pathlib.Path = REPO_ROOT) -> list[str]:
+    """Every ``BENCH_*.json``: the record carries ``measurement`` in
+    {analytic, measured, mixed}; every dict element of a top-level list
+    carries its own ``measurement`` in {analytic, measured}."""
+    errors = []
+    for path in sorted(root.glob("BENCH_*.json")):
+        try:
+            rec = json.loads(path.read_text())
+        except ValueError as e:
+            errors.append(f"{path.name}: unreadable JSON ({e})")
+            continue
+        if rec.get("measurement") not in _RECORD_TAGS:
+            errors.append(
+                f"{path.name}: record 'measurement' must be one of "
+                f"{_RECORD_TAGS}, got {rec.get('measurement')!r}"
+            )
+        for key, val in rec.items():
+            if not isinstance(val, list):
+                continue
+            for i, e in enumerate(val):
+                if isinstance(e, dict) and e.get("measurement") not in _ENTRY_TAGS:
+                    errors.append(
+                        f"{path.name}: {key}[{i}] missing/invalid "
+                        "'measurement' tag (analytic|measured)"
+                    )
+    return errors
+
+
+def _check_or_die() -> None:
+    errors = check_bench_schema()
+    if errors:
+        raise SystemExit(
+            "BENCH_*.json schema check failed:\n  " + "\n  ".join(errors)
+        )
+    print("# BENCH_*.json schema check: ok")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--full", action="store_true")
+    ap.add_argument(
+        "--wallclock", action="store_true",
+        help="run only the wall-clock seam harness + the schema check",
+    )
     args = ap.parse_args()
+
+    if args.wallclock:
+        from benchmarks import bench_wallclock
+
+        bench_wallclock.main(["--quick"] if args.quick else [])
+        _check_or_die()
+        return
 
     from benchmarks import (
         bench_init, bench_kernels, bench_lloyd, bench_service, bench_streaming,
-        bench_tradeoff, bench_vq,
+        bench_tradeoff, bench_vq, bench_wallclock,
     )
 
     if args.quick:
@@ -52,6 +113,8 @@ def main() -> None:
     bench_init.main(["--reps", "1"] if args.quick else [])
     bench_service.main([])
     bench_vq.main(["--ks", "16"] if args.quick else [])
+    bench_wallclock.main(["--quick"] if args.quick else [])
+    _check_or_die()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,318 @@
+"""Measured blocking autotune with a persisted cache (ADR 0008).
+
+The roofline heuristics (``roofline.analysis.assign_update_blocking`` /
+``min_sqdist_blocking``) pick ``(bn, bk)`` from a static per-backend tile
+budget. That is the right *fallback* — it needs no device and never
+regresses the kernel into an unlaunchable configuration — but on a real
+accelerator the best blocking depends on things the model does not see
+(occupancy, L2 behaviour, the Triton pipeliner). This module closes the
+gap the way the Helix layout snippets do for multi-device layouts: time a
+handful of candidate blockings on first use, persist the winner, and serve
+it from the cache forever after.
+
+Contract:
+
+* Cache key: ``(seam, n_bucket, d, K, dtype, backend)`` where ``n_bucket``
+  rounds n up to the next power of two — nearby chunk sizes share one
+  entry, and timings run at the bucket size so the stored choice is valid
+  for every n that maps to it.
+* The analytic choice is ALWAYS in the candidate set, so the tuned
+  blocking is never slower than the heuristic on the timed cell; both
+  timings are stored so benchmarks can report the measured speedup.
+* A cache hit returns the stored choice WITHOUT re-timing (pinned by
+  tests/test_kernels_gpu.py).
+* No device for the requested backend — or a call under an active jax
+  trace, where timing is impossible — falls back to the analytic choice.
+  The no-device fallback is persisted as ``source="analytic"``; the
+  in-trace fallback is NOT persisted, so a later untraced call (e.g. the
+  wall-clock bench) can still tune the cell.
+
+Knobs: ``REPRO_AUTOTUNE=0`` disables timing and persistence entirely
+(pure analytic); ``REPRO_AUTOTUNE_CACHE`` overrides the cache path
+(default ``~/.cache/repro/autotune.json``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.roofline import analysis
+
+__all__ = [
+    "blocking",
+    "cache_path",
+    "candidate_blockings",
+    "clear_memo",
+    "enabled",
+    "n_bucket",
+]
+
+_SCHEMA_VERSION = 1
+
+#: seams this module knows how to time, and the blocking family each uses
+SEAMS = ("assign_update", "assign_update_pruned", "min_sqdist_update")
+
+_memo: dict[str, dict[str, Any]] = {}
+_loaded_path: str | None = None
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "1") != "0"
+
+
+def cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_AUTOTUNE_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "autotune.json"
+
+
+def clear_memo() -> None:
+    """Drop the in-process memo (test hook; the file is untouched)."""
+    global _loaded_path
+    _memo.clear()
+    _loaded_path = None
+
+
+def n_bucket(n: int) -> int:
+    """Next power of two >= n (min 1024): the row-count bucket of the key."""
+    b = 1024
+    while b < n:
+        b *= 2
+    return b
+
+
+def _dtype_tag(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+def cache_key(seam: str, n: int, d: int, k: int, dtype, backend: str) -> str:
+    return f"{seam}|n{n_bucket(n)}|d{d}|K{k}|{_dtype_tag(dtype)}|{backend}"
+
+
+def _load() -> None:
+    """Populate the memo from the cache file once per (process, path)."""
+    global _loaded_path
+    path = str(cache_path())
+    if _loaded_path == path:
+        return
+    _loaded_path = path
+    try:
+        raw = json.loads(pathlib.Path(path).read_text())
+        if raw.get("version") == _SCHEMA_VERSION:
+            _memo.update(raw.get("entries", {}))
+    except (OSError, ValueError):
+        pass  # missing or corrupt cache: start fresh
+
+
+def _persist() -> None:
+    path = cache_path()
+    try:
+        path.parent.mkdir(parents=True, exist_ok=True)
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(
+            json.dumps({"version": _SCHEMA_VERSION, "entries": _memo}, indent=1)
+            + "\n"
+        )
+        tmp.replace(path)
+    except OSError:
+        pass  # read-only filesystems lose persistence, not correctness
+
+
+def _analytic(seam: str, d: int, k: int, dtype_bytes: int, backend: str) -> dict:
+    if seam == "min_sqdist_update":
+        return analysis.min_sqdist_blocking(
+            d, k, dtype_bytes=dtype_bytes, backend=backend
+        )
+    return analysis.assign_update_blocking(
+        d, k, dtype_bytes=dtype_bytes, backend=backend
+    )
+
+
+def _tile_key(seam: str) -> str:
+    """The name of the non-row block dim: ``bl`` for the fold seam, ``bk``
+    for the assignment seams."""
+    return "bl" if seam == "min_sqdist_update" else "bk"
+
+
+def candidate_blockings(
+    seam: str, d: int, k: int, *, dtype_bytes: int = 4, backend: str = "gpu"
+) -> list[dict]:
+    """The candidate set: the analytic choice first, then a small grid of
+    ``(bn, tile)`` pairs that fit the backend's budget."""
+    tk = _tile_key(seam)
+    ana = _analytic(seam, d, k, dtype_bytes, backend)
+    seen = {(ana["bn"], ana[tk])}
+    out = [ana]
+    if backend == "gpu":
+        bns, tiles = (64, 128, 256, 512, 1024), (32, 64, 128, 256)
+    else:  # tpu: sublane-multiple rows, lane-multiple tiles
+        bns, tiles = (128, 256, 512), (128, 256)
+    budget = analysis.kernel_budget_bytes(backend)
+    for bn in bns:
+        for t in tiles:
+            if seam == "min_sqdist_update":
+                cand = analysis.min_sqdist_blocking(
+                    d, k, bn=bn, bl=t, dtype_bytes=dtype_bytes, backend=backend
+                )
+            else:
+                cand = analysis.assign_update_blocking(
+                    d, k, bn=bn, bk=t, dtype_bytes=dtype_bytes, backend=backend
+                )
+            key = (cand["bn"], cand[tk])
+            # a candidate tile must not exceed the padded extent, and its
+            # resident tiles must fit the budget (analytic always passes:
+            # it was constructed under the same budget)
+            extent = cand["lp"] if seam == "min_sqdist_update" else cand["kp_dist"]
+            if key in seen or cand[tk] > extent or cand["vmem_bytes"] > budget:
+                continue
+            seen.add(key)
+            out.append(cand)
+    return out
+
+
+def _device_ready(backend: str) -> bool:
+    b = jax.default_backend()
+    b = "gpu" if b in ("cuda", "rocm") else b
+    return b == backend and backend in ("gpu", "tpu")
+
+
+def _trace_clean() -> bool:
+    fn = getattr(jax.core, "trace_state_clean", None)
+    return bool(fn()) if fn is not None else True
+
+
+def _default_measure(
+    seam: str, n: int, d: int, k: int, dtype, backend: str
+) -> Callable[[dict], float]:
+    """Build the timing closure: run the seam's kernel on synthetic data of
+    the BUCKET shape at a candidate blocking, return best-of-3 seconds."""
+    nb = n_bucket(n)
+    kx, kc = jax.random.split(jax.random.PRNGKey(0))
+    x = (jax.random.normal(kx, (nb, d)) * 2).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 2).astype(dtype)
+    w = jnp.ones((nb,), jnp.float32)
+
+    def run(blk: dict):
+        if backend == "gpu":
+            from repro.kernels import gpu
+
+            if seam == "assign_update":
+                return gpu.assign_update_gpu(x, w, c, bn=blk["bn"], bk=blk["bk"])
+            if seam == "assign_update_pruned":
+                cached = jnp.zeros((nb,), jnp.int32)
+                act = jnp.ones((nb,), jnp.int32)
+                return gpu.assign_update_pruned_gpu(
+                    x, w, c, cached, act, bn=blk["bn"], bk=blk["bk"]
+                )
+            mind2 = jnp.full((nb,), 1e30, jnp.float32)
+            return gpu.min_sqdist_update_gpu(
+                x, w, c, jnp.ones((k,), jnp.float32), mind2,
+                bn=blk["bn"], bl=blk["bl"],
+            )
+        # tpu: the Mosaic kernels take the same (bn, tile) statics
+        if seam == "min_sqdist_update":
+            from repro.kernels import min_sqdist_update as msu
+
+            mind2 = jnp.full((nb,), 1e30, jnp.float32)
+            return msu.min_sqdist_update_pallas(
+                x, w, c, jnp.ones((k,), jnp.float32), mind2,
+                bn=blk["bn"], bl=blk["bl"],
+            )
+        from repro.kernels import fused_assign_update as fau
+
+        if seam == "assign_update_pruned":
+            cached = jnp.zeros((nb,), jnp.int32)
+            act = jnp.ones((nb,), jnp.int32)
+            return fau.fused_assign_update_pruned_pallas(
+                x, w, c, cached, act, bn=blk["bn"], bk=blk["bk"]
+            )
+        return fau.fused_assign_update_pallas(x, w, c, bn=blk["bn"], bk=blk["bk"])
+
+    def measure(blk: dict) -> float:
+        jax.block_until_ready(run(blk))  # compile + warm
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            jax.block_until_ready(run(blk))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
+def blocking(
+    seam: str,
+    *,
+    n: int,
+    d: int,
+    k: int,
+    dtype=jnp.float32,
+    backend: str = "gpu",
+    measure: Callable[[dict], float] | None = None,
+) -> dict[str, Any]:
+    """The blocking to use for ``seam`` at this shape: cached > measured >
+    analytic, per the module contract. ``k`` is the candidate count L for
+    the ``min_sqdist_update`` seam.
+
+    ``measure`` overrides the timing closure (tests inject fakes); pass it
+    only with a genuinely timeable configuration — the default closure is
+    built only when the requested backend's device is actually present.
+    """
+    if seam not in SEAMS:
+        raise ValueError(f"unknown seam {seam!r}; expected one of {SEAMS}")
+    dtype_bytes = jnp.dtype(dtype).itemsize
+    if not enabled():
+        return _analytic(seam, d, k, dtype_bytes, backend) | {"source": "analytic"}
+    _load()
+    key = cache_key(seam, n, d, k, dtype, backend)
+    hit = _memo.get(key)
+    if hit is not None:
+        return dict(hit) | {"source": "cache"}
+
+    ana = _analytic(seam, d, k, dtype_bytes, backend)
+    if measure is None:
+        if not (_device_ready(backend) and _trace_clean()):
+            entry = dict(ana) | {"source": "analytic"}
+            if _device_ready(backend):
+                return entry  # in-trace: do not persist, tune later
+            _memo[key] = dict(ana) | {"source": "analytic"}
+            _persist()
+            return entry
+        measure = _default_measure(seam, n, d, k, dtype, backend)
+
+    tk = _tile_key(seam)
+    timed: list[tuple[float, dict]] = []
+    for cand in candidate_blockings(
+        seam, d, k, dtype_bytes=dtype_bytes, backend=backend
+    ):
+        try:
+            timed.append((measure(cand), cand))
+        except Exception:  # unlaunchable candidate (OOM, lowering limit)
+            continue
+    if not timed:
+        entry = dict(ana) | {"source": "analytic"}
+        _memo[key] = entry
+        _persist()
+        return entry
+    analytic_s = timed[0][0]  # analytic is always the first candidate
+    best_s, best = min(timed, key=lambda t: t[0])
+    entry = dict(best) | {
+        "source": "measured",
+        "seconds": best_s,
+        "analytic_seconds": analytic_s,
+        "analytic_bn": ana["bn"],
+        f"analytic_{tk}": ana[tk],
+        "speedup_vs_analytic": analytic_s / best_s if best_s > 0 else 1.0,
+        "candidates_timed": len(timed),
+    }
+    _memo[key] = entry
+    _persist()
+    return dict(entry)

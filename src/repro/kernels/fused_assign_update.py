@@ -55,7 +55,8 @@ _BIG = 3.0e38  # python float: pallas kernels must not capture traced constants
 
 
 def fused_supported(d: int, k: int) -> bool:
-    """Whether the ``[K, d]`` accumulator fits the kernel VMEM budget."""
+    """Whether the ``[K, d]`` accumulator fits the kernel VMEM budget (the
+    accumulator is always f32, so this does not depend on the input dtype)."""
     return bool(analysis.assign_update_blocking(d, k)["fused_ok"])
 
 
@@ -149,7 +150,9 @@ def fused_assign_update_pallas(
     n, d = x.shape
     k = c.shape[0]
 
-    blk = analysis.assign_update_blocking(d, k, bn=bn, bk=bk)
+    blk = analysis.assign_update_blocking(
+        d, k, bn=bn, bk=bk, dtype_bytes=x.dtype.itemsize
+    )
     if not blk["fused_ok"]:
         raise ValueError(
             f"[K={k}, d={d}] accumulator exceeds the kernel VMEM budget; "
@@ -324,7 +327,9 @@ def fused_assign_update_pruned_pallas(
     n, d = x.shape
     k = c.shape[0]
 
-    blk = analysis.assign_update_blocking(d, k, bn=bn, bk=bk)
+    blk = analysis.assign_update_blocking(
+        d, k, bn=bn, bk=bk, dtype_bytes=x.dtype.itemsize
+    )
     if not blk["fused_ok"]:
         raise ValueError(
             f"[K={k}, d={d}] accumulator exceeds the kernel VMEM budget; "

@@ -110,7 +110,9 @@ def min_sqdist_update_pallas(
     n, d = x.shape
     l = cand.shape[0]
 
-    blk = analysis.min_sqdist_blocking(d, l, bn=bn, bl=bl)
+    blk = analysis.min_sqdist_blocking(
+        d, l, bn=bn, bl=bl, dtype_bytes=x.dtype.itemsize
+    )
     bn, dp, lp = blk["bn"], blk["dp"], blk["lp"]
     np_ = pl.cdiv(n, bn) * bn
     nl = lp // bl

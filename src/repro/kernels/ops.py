@@ -1,9 +1,13 @@
 """Public, jit-friendly entry points for the clustering kernels.
 
-``assign_top2`` / ``cluster_sums`` dispatch to the Pallas TPU kernels when
-they apply (TPU backend, or explicitly requested interpret mode) and to the
-pure-jnp oracles in ``ref.py`` otherwise. The CPU CI container always
-validates the Pallas path via ``interpret=True``.
+Each seam dispatches per backend: the Mosaic (TPU) kernels on a TPU, the
+Triton-lowering kernels in ``gpu.py`` on a GPU, and the pure-jnp oracles
+in ``ref.py`` elsewhere. ``impl="pallas"`` on a CPU host runs the Mosaic
+kernels in interpret mode (the CPU CI container validates the kernel
+bodies this way); ``impl="auto"`` resolves to ``"ref"`` there with a
+once-per-process warning naming the fallback reason. GPU blockings come
+from the measured autotune cache when one is available
+(``kernels.autotune``, ADR 0008), the roofline heuristic otherwise.
 """
 
 from __future__ import annotations
@@ -14,6 +18,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import _warnings
 from repro.kernels import ref
 from repro.kernels.ref import AssignUpdate, MinSqDistUpdate, PrunedAssignUpdate
 
@@ -27,6 +32,7 @@ __all__ = [
     "assign_update_chunk",
     "assign_update_pruned",
     "assign_update_pruned_chunk",
+    "backend",
     "cluster_sums",
     "min_sqdist_update",
     "min_sqdist_update_chunk",
@@ -43,14 +49,34 @@ __all__ = [
 _DEFAULT_IMPL = os.environ.get("REPRO_KERNEL_IMPL", "auto")
 
 
+_VALID_IMPLS = ("auto", "pallas", "ref")
+
+#: backends with a real Pallas lowering for the repo's kernels
+_PALLAS_BACKENDS = ("tpu", "gpu")
+
+
 def set_default_impl(impl: str) -> None:
+    """Set the session default. Raises ``ValueError`` on anything outside
+    ``"auto" | "pallas" | "ref"`` — a typo here must not silently corrupt
+    every later dispatch (and ``assert`` would be stripped under ``-O``)."""
     global _DEFAULT_IMPL
-    assert impl in ("auto", "pallas", "ref")
+    if impl not in _VALID_IMPLS:
+        raise ValueError(
+            f"impl must be one of {'|'.join(_VALID_IMPLS)}, got {impl!r}"
+        )
     _DEFAULT_IMPL = impl
 
 
+def backend() -> str:
+    """The jax default backend, normalised to ``"tpu" | "gpu" | "cpu"``."""
+    b = jax.default_backend()
+    return "gpu" if b in ("cuda", "rocm") else b
+
+
 def pallas_available() -> bool:
-    return jax.default_backend() == "tpu"
+    """Whether the current backend has a real (non-interpret) Pallas lowering
+    for the clustering kernels: Mosaic on TPU, Triton on GPU."""
+    return backend() in _PALLAS_BACKENDS
 
 
 def resolve_impl(impl: str | None) -> str:
@@ -61,14 +87,42 @@ def resolve_impl(impl: str | None) -> str:
     the result as a static argument — resolving inside the traced function
     would freeze whatever the session default was at first trace into the
     jit cache.
+
+    ``"auto"`` resolves to ``"pallas"`` wherever a real lowering exists
+    (TPU and GPU) and to ``"ref"`` elsewhere — warning once per process so
+    a CUDA/TPU user who lands on the oracle path can tell, instead of
+    silently benchmarking pure XLA.
     """
     impl = impl or _DEFAULT_IMPL
     if impl == "auto":
-        return "pallas" if pallas_available() else "ref"
+        if pallas_available():
+            return "pallas"
+        _warnings.warn_once(
+            "kernel-impl-auto-fallback",
+            f"impl='auto' resolved to the pure-JAX 'ref' oracle: backend "
+            f"{jax.default_backend()!r} has no Pallas lowering for the "
+            f"clustering kernels (supported: {', '.join(_PALLAS_BACKENDS)}). "
+            "Set REPRO_KERNEL_IMPL=pallas to force the kernels in interpret "
+            "mode.",
+            category=RuntimeWarning,
+            stacklevel=3,
+        )
+        return "ref"
+    if impl not in ("pallas", "ref"):
+        raise ValueError(
+            f"impl must be one of {'|'.join(_VALID_IMPLS)}, got {impl!r}"
+        )
     return impl
 
 
 _resolve = resolve_impl  # internal alias, kept for existing call sites
+
+
+def _gpu_blocking(seam: str, n: int, d: int, k: int, dtype) -> dict:
+    """The (autotuned > analytic) GPU blocking for a seam — see autotune."""
+    from repro.kernels import autotune
+
+    return autotune.blocking(seam, n=n, d=d, k=k, dtype=dtype, backend="gpu")
 
 
 def assign_top2(
@@ -76,9 +130,16 @@ def assign_top2(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Fused distance + argmin + top-2: ``(assign, d1, d2)``. See ref.assign_top2."""
     if _resolve(impl) == "pallas":
+        if backend() == "gpu":
+            from repro.kernels import gpu
+
+            blk = _gpu_blocking(
+                "assign_update", x.shape[0], x.shape[1], c.shape[0], x.dtype
+            )
+            return gpu.assign_top2_gpu(x, c, bn=blk["bn"], bk=blk["bk"])
         from repro.kernels import distance_assign
 
-        interpret = jax.default_backend() != "tpu"
+        interpret = backend() != "tpu"
         return distance_assign.assign_top2_pallas(x, c, interpret=interpret)
     return ref.assign_top2(x, c)
 
@@ -145,11 +206,16 @@ def cluster_sums(
     *,
     impl: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """Weighted per-cluster sums/counts. See ref.cluster_sums."""
-    if _resolve(impl) == "pallas":
+    """Weighted per-cluster sums/counts. See ref.cluster_sums.
+
+    On GPU the pallas path uses the oracle directly: the one-hot update is
+    a single XLA segment-sum — already one fused GPU kernel — and the
+    Mosaic accumulator kernel has no Triton lowering.
+    """
+    if _resolve(impl) == "pallas" and backend() != "gpu":
         from repro.kernels import cluster_update
 
-        interpret = jax.default_backend() != "tpu"
+        interpret = backend() != "tpu"
         return cluster_update.cluster_sums_pallas(
             x, w, assign, num_clusters, interpret=interpret
         )
@@ -191,10 +257,12 @@ def _assign_update_impl(
     x: jax.Array, w: jax.Array, c: jax.Array, *, impl: str
 ) -> AssignUpdate:
     if impl == "pallas":
+        if backend() == "gpu":
+            return _assign_update_gpu(x, w, c)
         from repro.kernels import distance_assign, fused_assign_update
 
         k, d = c.shape
-        interpret = jax.default_backend() != "tpu"
+        interpret = backend() != "tpu"
         if fused_assign_update.fused_supported(d, k):
             return AssignUpdate(
                 *fused_assign_update.fused_assign_update_pallas(
@@ -213,6 +281,25 @@ def _assign_update_impl(
         err = jnp.sum(w.astype(jnp.float32) * d1)
         return AssignUpdate(assign, d1, d2, sums, counts, err)
     return ref.assign_update(x, w, c)
+
+
+def _assign_update_gpu(x: jax.Array, w: jax.Array, c: jax.Array) -> AssignUpdate:
+    """The GPU (Triton-lowering) dispatch of one dense Lloyd pass: the
+    single-pass kernel while the per-program ``[K, d]`` statistics partial
+    is affordable, else the top-2 kernel plus the XLA segment-sum (the GPU
+    analogue of the TPU two-pass fallback)."""
+    from repro.kernels import gpu
+
+    k, d = c.shape
+    blk = _gpu_blocking("assign_update", x.shape[0], d, k, x.dtype)
+    if gpu.gpu_stats_supported(d, k):
+        return AssignUpdate(
+            *gpu.assign_update_gpu(x, w, c, bn=blk["bn"], bk=blk["bk"])
+        )
+    assign, d1, d2 = gpu.assign_top2_gpu(x, c, bn=blk["bn"], bk=blk["bk"])
+    sums, counts = ref.cluster_sums(x, w, assign, k)
+    err = jnp.sum(w.astype(jnp.float32) * d1)
+    return AssignUpdate(assign, d1, d2, sums, counts, err)
 
 
 def _two_pass_cluster_sums(x, w, assign, k, interpret):
@@ -260,9 +347,20 @@ def min_sqdist_update(
         * jnp.sum((cvalid > 0).astype(jnp.float32))
     )
     if _resolve(impl) == "pallas":
+        if backend() == "gpu":
+            from repro.kernels import gpu
+
+            blk = _gpu_blocking(
+                "min_sqdist_update", x.shape[0], x.shape[1], cand.shape[0],
+                x.dtype,
+            )
+            new, cost = gpu.min_sqdist_update_gpu(
+                x, w, cand, cvalid, mind2, bn=blk["bn"], bl=blk["bl"]
+            )
+            return MinSqDistUpdate(new, cost, n_dist)
         from repro.kernels import min_sqdist_update as msu
 
-        interpret = jax.default_backend() != "tpu"
+        interpret = backend() != "tpu"
         new, cost = msu.min_sqdist_update_pallas(
             x, w, cand, cvalid, mind2, interpret=interpret
         )
@@ -323,10 +421,31 @@ def assign_update_pruned(
         jnp.sum((active.astype(bool) & (w > 0)).astype(jnp.float32)) * c.shape[0]
     )
     if _resolve(impl) == "pallas":
+        k, d = c.shape
+        if backend() == "gpu":
+            from repro.kernels import gpu
+
+            blk = _gpu_blocking(
+                "assign_update_pruned", x.shape[0], d, k, x.dtype
+            )
+            if gpu.gpu_stats_supported(d, k):
+                out = PrunedAssignUpdate(
+                    *gpu.assign_update_pruned_gpu(
+                        x, w, c, assign, active, bn=blk["bn"], bk=blk["bk"]
+                    )
+                )
+                return out._replace(n_dist=n_dist)
+            # GPU two-pass: dense top-2 kernel + XLA segment-sum under the
+            # composed assignment
+            a_new, d1, d2 = gpu.assign_top2_gpu(x, c, bn=blk["bn"], bk=blk["bk"])
+            w32 = w.astype(jnp.float32)
+            a = jnp.where(active.astype(bool), a_new, assign)
+            sums, counts = ref.cluster_sums(x, w, a, k)
+            err = jnp.sum(jnp.where(active.astype(bool), w32 * d1, 0.0))
+            return PrunedAssignUpdate(a, d1, d2, sums, counts, err, n_dist)
         from repro.kernels import fused_assign_update
 
-        k, d = c.shape
-        interpret = jax.default_backend() != "tpu"
+        interpret = backend() != "tpu"
         if fused_assign_update.fused_supported(d, k):
             out = PrunedAssignUpdate(
                 *fused_assign_update.fused_assign_update_pruned_pallas(

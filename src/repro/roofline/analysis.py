@@ -36,9 +36,34 @@ VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM (TPU v4/v5 class)
 #: pipelined (double-buffered) input blocks Mosaic allocates behind the grid
 KERNEL_VMEM_BUDGET = VMEM_BYTES // 2
 
+#: Per-backend on-chip tile budget a single kernel invocation may plan for.
+#: TPU: half of per-core VMEM (double-buffering headroom, see above). GPU:
+#: SM shared-memory class — the Triton lowering stages every block through
+#: shared memory, so the resident tiles of one program must fit an SM's
+#: ~228 KB (A100/H100) with room for two pipeline stages. CPU (interpret
+#: mode) mirrors the TPU plan: the interpreter executes the same blocking.
+KERNEL_BUDGET_BYTES = {
+    "tpu": KERNEL_VMEM_BUDGET,
+    "gpu": 96 * 1024,
+    "cpu": KERNEL_VMEM_BUDGET,
+}
+
+
+def kernel_budget_bytes(backend: str = "tpu") -> int:
+    """The per-backend tile budget; unknown backends get the TPU-class one."""
+    return KERNEL_BUDGET_BYTES.get(backend, KERNEL_VMEM_BUDGET)
+
 
 def _ceil_to(x: int, q: int) -> int:
     return -(-x // q) * q
+
+
+def _pow2_at_least(x: int, lo: int = 16) -> int:
+    """Smallest power of two >= max(x, lo) — Triton block dims must be pow2."""
+    p = lo
+    while p < x:
+        p *= 2
+    return p
 
 
 def assign_update_blocking(
@@ -47,32 +72,51 @@ def assign_update_blocking(
     *,
     bn: int | None = None,
     bk: int = 128,
-    vmem_budget_bytes: int = KERNEL_VMEM_BUDGET,
+    dtype_bytes: int = 4,
+    backend: str = "tpu",
+    vmem_budget_bytes: int | None = None,
 ) -> dict[str, Any]:
     """Block-size selection for the fused assign+accumulate kernel
-    (``kernels/fused_assign_update.py``; ADR 0003).
+    (``kernels/fused_assign_update.py`` on TPU, ``kernels/gpu.py`` on GPU;
+    ADR 0003, ADR 0008).
 
-    The kernel keeps three resident f32 buffers per grid step: the ``[bn, dp]``
-    x tile, one ``[bk, dp]`` centroid tile, and the ``[kp, dp]`` cluster-sum
-    accumulator that lives in VMEM across the *whole* grid. The heuristic
+    The kernel keeps three resident buffers per grid step: the ``[bn, dp]``
+    x tile and ``[bk, dp]`` centroid tile at the *input* dtype
+    (``dtype_bytes`` — bf16 tiles are half the size of f32 ones, admitting
+    ~2x larger blocks), and the f32 ``[kp, dp]`` cluster-sum accumulator
+    (accumulation is always f32 regardless of input dtype). The heuristic
     spends the budget on ``bn`` (bigger row tiles amortise the accumulator
     flush and the per-tile top-2 merge) after reserving the accumulator and
     centroid tile, and reports ``fused_ok`` — whether the accumulator fits at
     all. When it does not, callers select the two-pass path instead
     (``ops.assign_update`` documents the fallback).
+
+    ``backend="gpu"`` selects the Triton-lowering plan instead: power-of-two
+    tile dims (``tl.arange`` requires them), an SM shared-memory-class
+    budget, and ``fused_ok`` gating the per-program ``[kp, dp]`` statistics
+    partial rather than a grid-resident accumulator.
     """
+    if backend == "gpu":
+        return _assign_update_blocking_gpu(
+            d, k, bn=bn, bk=bk, dtype_bytes=dtype_bytes,
+            budget=vmem_budget_bytes,
+        )
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = kernel_budget_bytes(backend)
     dp = _ceil_to(max(d, 1), 128)
     kp_acc = _ceil_to(max(k, 1), 8)  # sums/counts accumulator rows
     kp_dist = _ceil_to(max(k, 1), bk)  # centroid tiles for the distance grid
-    acc_bytes = 4 * kp_acc * (dp + 1)  # sums [kp, dp] + counts [kp, 1]
-    ctile_bytes = 4 * bk * dp
+    acc_bytes = 4 * kp_acc * (dp + 1)  # f32 sums [kp, dp] + counts [kp, 1]
+    ctile_bytes = dtype_bytes * bk * dp
     # the accumulator may use at most half the kernel budget: the x tile must
     # keep enough rows for the one-hot contraction to be MXU-shaped
     fused_ok = acc_bytes <= vmem_budget_bytes // 2
     if bn is None:
         avail = max(vmem_budget_bytes - acc_bytes - ctile_bytes, 0)
-        bn = max(8, min(512, (avail // (4 * dp)) // 8 * 8))
-    vmem_bytes = acc_bytes + ctile_bytes + 4 * bn * dp + 4 * 4 * bn  # + row outs
+        bn = max(8, min(512, (avail // (dtype_bytes * dp)) // 8 * 8))
+    vmem_bytes = (
+        acc_bytes + ctile_bytes + dtype_bytes * bn * dp + 4 * 4 * bn  # + row outs
+    )
     return {
         "bn": bn,
         "bk": bk,
@@ -81,6 +125,56 @@ def assign_update_blocking(
         "kp_dist": kp_dist,
         "acc_bytes": acc_bytes,
         "vmem_bytes": vmem_bytes,
+        "fused_ok": fused_ok,
+    }
+
+
+def _assign_update_blocking_gpu(
+    d: int,
+    k: int,
+    *,
+    bn: int | None = None,
+    bk: int | None = None,
+    dtype_bytes: int = 4,
+    budget: int | None = None,
+) -> dict[str, Any]:
+    """The GPU (Triton-lowering) plan for the assign+update seam.
+
+    One program owns a ``[bn, dp]`` row block, loops over ``[bk, dp]``
+    centroid tiles sliced from the full padded centroid array, and writes a
+    per-program ``[kp, dp]`` f32 statistics partial (reduced in XLA — the
+    parallel-grid analogue of the TPU kernel's grid-resident accumulator).
+    Resident per stage: the x tile and one centroid tile at the input dtype
+    plus the f32 ``[bn, bk]`` distance tile; ``fused_ok`` gates the size of
+    the per-program statistics partial (the HBM-side cost of the reduction).
+    """
+    if budget is None:
+        budget = kernel_budget_bytes("gpu")
+    dp = _pow2_at_least(max(d, 1))
+    kp = _pow2_at_least(max(k, 1))
+    if bk is None:
+        bk = min(kp, 128)
+    bk = min(_pow2_at_least(bk, lo=16), kp)
+    ctile_bytes = dtype_bytes * bk * dp
+    # per-program [kp, dp] f32 partial + [kp] counts; 4 MB caps the
+    # [n/bn, kp, dp] HBM-side partial buffer the XLA reduction consumes
+    acc_bytes = 4 * kp * (dp + 1)
+    fused_ok = acc_bytes <= 4 * 1024 * 1024
+    if bn is None:
+        avail = max(budget - ctile_bytes, dtype_bytes * dp * 16)
+        # x tile [bn, dp] at input dtype + f32 [bn, bk] distance tile
+        bn = 16
+        while bn * 2 * (dtype_bytes * dp + 4 * bk) <= avail and bn < 1024:
+            bn *= 2
+    smem_bytes = ctile_bytes + dtype_bytes * bn * dp + 4 * bn * bk
+    return {
+        "bn": bn,
+        "bk": bk,
+        "dp": dp,
+        "kp_acc": kp,
+        "kp_dist": kp,
+        "acc_bytes": acc_bytes,
+        "vmem_bytes": smem_bytes,
         "fused_ok": fused_ok,
     }
 
@@ -121,27 +215,69 @@ def min_sqdist_blocking(
     *,
     bn: int | None = None,
     bl: int = 128,
-    vmem_budget_bytes: int = KERNEL_VMEM_BUDGET,
+    dtype_bytes: int = 4,
+    backend: str = "tpu",
+    vmem_budget_bytes: int | None = None,
 ) -> dict[str, Any]:
     """Block-size selection for the k-means|| fold kernel
-    (``kernels/min_sqdist_update.py``; ADR 0005).
+    (``kernels/min_sqdist_update.py`` on TPU, ``kernels/gpu.py`` on GPU;
+    ADR 0005, ADR 0008).
 
-    Resident f32 buffers per grid step: the ``[bn, dp]`` x tile, one
-    ``[bl, dp]`` candidate tile with its ``[1, bl]`` validity row, and three
-    ``[bn, 1]`` columns (weights, incoming min-d², the carried output).
-    Unlike the fused assign+update kernel there is no ``[K, d]`` accumulator
-    to pin, so after the candidate tile is reserved the whole budget goes to
-    ``bn`` — the kernel always fits (``fused_ok`` has no analogue here).
+    Resident buffers per grid step: the ``[bn, dp]`` x tile and ``[bl, dp]``
+    candidate tile at the *input* dtype (``dtype_bytes``) with the f32
+    ``[1, bl]`` validity row, and three f32 ``[bn, 1]`` columns (weights,
+    incoming min-d², the carried output — state stays f32 regardless of
+    input dtype). Unlike the fused assign+update kernel there is no
+    ``[K, d]`` accumulator to pin, so after the candidate tile is reserved
+    the whole budget goes to ``bn`` — the kernel always fits (``fused_ok``
+    has no analogue here). ``backend="gpu"`` selects the Triton-lowering
+    plan: power-of-two dims and the SM shared-memory-class budget.
     """
+    if backend == "gpu":
+        return _min_sqdist_blocking_gpu(
+            d, l, bn=bn, bl=bl, dtype_bytes=dtype_bytes,
+            budget=vmem_budget_bytes,
+        )
+    if vmem_budget_bytes is None:
+        vmem_budget_bytes = kernel_budget_bytes(backend)
     dp = _ceil_to(max(d, 1), 128)
     lp = _ceil_to(max(l, 1), bl)
-    ctile_bytes = 4 * bl * dp + 4 * bl  # candidate tile + validity row
+    ctile_bytes = dtype_bytes * bl * dp + 4 * bl  # candidate tile + validity
     if bn is None:
-        avail = max(vmem_budget_bytes - ctile_bytes, 4 * dp * 8)
-        # x tile [bn, dp] + three [bn, 1] columns per row
-        bn = max(8, min(1024, (avail // (4 * (dp + 3))) // 8 * 8))
-    vmem_bytes = ctile_bytes + 4 * bn * dp + 4 * 3 * bn + 4
+        avail = max(vmem_budget_bytes - ctile_bytes, dtype_bytes * dp * 8)
+        # x tile [bn, dp] at input dtype + three f32 [bn, 1] columns per row
+        bn = max(8, min(1024, (avail // (dtype_bytes * dp + 3 * 4)) // 8 * 8))
+    vmem_bytes = ctile_bytes + dtype_bytes * bn * dp + 4 * 3 * bn + 4
     return {"bn": bn, "bl": bl, "dp": dp, "lp": lp, "vmem_bytes": vmem_bytes}
+
+
+def _min_sqdist_blocking_gpu(
+    d: int,
+    l: int,
+    *,
+    bn: int | None = None,
+    bl: int | None = None,
+    dtype_bytes: int = 4,
+    budget: int | None = None,
+) -> dict[str, Any]:
+    """The GPU (Triton-lowering) plan for the k-means|| fold seam: one
+    program per ``[bn, dp]`` row block looping over ``[bl, dp]`` candidate
+    tiles, per-program scalar cost partial reduced in XLA."""
+    if budget is None:
+        budget = kernel_budget_bytes("gpu")
+    dp = _pow2_at_least(max(d, 1))
+    lp = _pow2_at_least(max(l, 1))
+    if bl is None:
+        bl = min(lp, 128)
+    bl = min(_pow2_at_least(bl, lo=16), lp)
+    ctile_bytes = dtype_bytes * bl * dp + 4 * bl
+    if bn is None:
+        avail = max(budget - ctile_bytes, dtype_bytes * dp * 16)
+        bn = 16
+        while bn * 2 * (dtype_bytes * dp + 4 * bl + 3 * 4) <= avail and bn < 1024:
+            bn *= 2
+    smem_bytes = ctile_bytes + dtype_bytes * bn * dp + 4 * bn * bl + 3 * 4 * bn
+    return {"bn": bn, "bl": bl, "dp": dp, "lp": lp, "vmem_bytes": smem_bytes}
 
 
 def min_sqdist_hbm_bytes(

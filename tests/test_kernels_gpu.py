@@ -1,0 +1,377 @@
+"""GPU (Triton-lowering) kernel backend: parity, autotune, and the ISSUE-8
+bugfix regressions.
+
+Three layers:
+
+* Interpret-mode smoke (runs on every backend, including CPU CI): the
+  GPU-structured kernels in ``kernels/gpu.py`` — parallel row-block grid,
+  ``fori_loop`` over centroid tiles, per-program statistics partials —
+  execute under ``interpret=True`` and must match the ref oracle exactly
+  on labels and to f32-accumulation tolerance on statistics. This is the
+  same discipline the Mosaic kernels get from the property suite; it
+  validates the kernel bodies without a device.
+* Real-device parity (auto-skipped without a GPU): the same checks with
+  ``interpret=False``, i.e. through the actual Triton lowering, plus the
+  acceptance-criteria pin that ``impl="auto"`` resolves to pallas.
+* The autotune cache contract (ADR 0008) with injected fake timers, and
+  regressions for the three bugs this PR fixes: the dtype-blind blocking
+  heuristics, the TPU-only ``pallas_available``, and the assert-stripped
+  ``set_default_impl`` validation.
+
+bf16 tolerance note: both the GPU kernels and the ref oracle cast inputs
+to f32 and accumulate in f32, so *same-dtype* parity stays tight even for
+bf16 inputs. Against the **f32 oracle on unrounded inputs** the error is
+dominated by bf16 input quantisation (~2^-8 relative per element), so
+those pins use rtol/atol 5e-2 — wide enough for the rounding, tight
+enough to catch a kernel that accumulates in bf16 (which errs at the
+1e-1+ level on these shapes).
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import _warnings
+from repro.kernels import autotune, gpu, ops, ref
+from repro.roofline import analysis
+
+_ON_GPU = ops.backend() == "gpu"
+
+F32_TOL = dict(rtol=1e-5, atol=1e-5)
+BF16_SAME_DTYPE_TOL = dict(rtol=1e-3, atol=1e-3)
+BF16_VS_F32_ORACLE_TOL = dict(rtol=5e-2, atol=5e-2)
+
+SHAPES = [(300, 17, 7), (256, 128, 128), (37, 2, 9), (65, 7, 33)]
+
+
+def _data(n, d, k, dtype=jnp.float32, seed=0):
+    kx, kc, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = (jax.random.normal(kx, (n, d)) * 3).astype(dtype)
+    c = (jax.random.normal(kc, (k, d)) * 3).astype(dtype)
+    w = jax.random.uniform(kw, (n,), minval=0.0, maxval=3.0)
+    return x, w, c
+
+
+def _assert_assign_update_parity(out, r, tol):
+    a, d1, d2, sums, counts, err = out
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r.assign))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(r.d1), **tol)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(r.d2), **tol)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), **tol)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(r.counts), **tol)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=max(tol["rtol"], 1e-5))
+
+
+# ------------------------------------------------- interpret-mode smoke (CI)
+@pytest.mark.parametrize("n,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gpu_assign_update_interpret_matches_ref(n, d, k, dtype):
+    x, w, c = _data(n, d, k, dtype)
+    tol = F32_TOL if dtype == jnp.float32 else BF16_SAME_DTYPE_TOL
+    out = gpu.assign_update_gpu(x, w, c, interpret=True)
+    _assert_assign_update_parity(out, ref.assign_update(x, w, c), tol)
+
+
+@pytest.mark.parametrize("n,d,k", SHAPES)
+def test_gpu_pruned_interpret_matches_ref(n, d, k):
+    x, w, c = _data(n, d, k)
+    key = jax.random.PRNGKey(n + d + k)
+    active = (jax.random.uniform(key, (n,)) < 0.4).astype(jnp.int32)
+    cached = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, k)
+    out = gpu.assign_update_pruned_gpu(x, w, c, cached, active, interpret=True)
+    r = ref.assign_update_pruned(x, w, c, cached, active)
+    a, d1, d2, sums, counts, err = out
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r.assign))
+    act = np.asarray(active).astype(bool)
+    np.testing.assert_allclose(np.asarray(d1)[act], np.asarray(r.d1)[act], **F32_TOL)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), **F32_TOL)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(r.counts), **F32_TOL)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=1e-5)
+
+
+def test_gpu_pruned_all_inactive_skips_but_keeps_stats():
+    x, w, c = _data(200, 9, 11)
+    cached = jax.random.randint(jax.random.PRNGKey(3), (200,), 0, 11)
+    active = jnp.zeros((200,), jnp.int32)
+    a, _, _, sums, counts, err = gpu.assign_update_pruned_gpu(
+        x, w, c, cached, active, interpret=True
+    )
+    r = ref.assign_update_pruned(x, w, c, cached, active)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(cached))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), **F32_TOL)
+    assert float(err) == 0.0  # no active rows: the error sum has no terms
+
+
+@pytest.mark.parametrize("n,d,l", [(300, 17, 7), (128, 33, 64), (37, 2, 9)])
+def test_gpu_min_sqdist_interpret_matches_ref(n, d, l):
+    x, w, _ = _data(n, d, 3)
+    cand = (jax.random.normal(jax.random.PRNGKey(7), (l, d)) * 3).astype(jnp.float32)
+    cvalid = (jnp.arange(l) < max(l - 2, 1)).astype(jnp.float32)
+    mind2 = jax.random.uniform(jax.random.PRNGKey(8), (n,)) * 50
+    new, cost = gpu.min_sqdist_update_gpu(x, w, cand, cvalid, mind2, interpret=True)
+    r = ref.min_sqdist_update(x, w, cand, cvalid, mind2)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(r.mind2), **F32_TOL)
+    np.testing.assert_allclose(float(cost), float(r.cost), rtol=1e-5)
+
+
+def test_gpu_assign_top2_interpret_matches_ref():
+    x, _, c = _data(300, 17, 7)
+    a, d1, d2 = gpu.assign_top2_gpu(x, c, interpret=True)
+    r = ref.assign_update(x, jnp.ones((300,), jnp.float32), c)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r.assign))
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(r.d1), **F32_TOL)
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(r.d2), **F32_TOL)
+
+
+def test_gpu_bf16_inputs_f32_accumulation_vs_f32_oracle():
+    """Mixed-precision pin: bf16 inputs, f32 accumulators, compared to the
+    f32 oracle on UNROUNDED inputs.
+
+    Per-cluster statistics are NOT comparable across the two precisions —
+    input rounding legitimately flips near-tied assignments, moving whole
+    ``w·x`` terms between clusters — so this pins the assignment-insensitive
+    invariants: total mass, the global ``Σ w·x`` (exact over any
+    assignment), per-point ``d1`` (near-ties keep it close even when the
+    winner flips), and the weighted cost. All sit at the bf16 input
+    quantisation level (~2^-8 relative); a kernel that accumulated in bf16
+    would miss these by an order of magnitude on this shape. Same-dtype
+    accumulation parity is pinned by the interpret parity test above."""
+    n, d, k = 512, 64, 32
+    x, w, c = _data(n, d, k, jnp.float32)
+    out = gpu.assign_update_gpu(
+        x.astype(jnp.bfloat16), w, c.astype(jnp.bfloat16), interpret=True
+    )
+    r = ref.assign_update(x, w, c)
+    _, d1, _, sums, counts, err = out
+    np.testing.assert_allclose(
+        np.asarray(sums).sum(axis=0),
+        (np.asarray(w)[:, None] * np.asarray(x)).sum(axis=0),
+        **BF16_VS_F32_ORACLE_TOL,
+    )
+    np.testing.assert_allclose(
+        float(jnp.sum(counts)), float(jnp.sum(w)), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        np.asarray(d1), np.asarray(r.d1), rtol=5e-2, atol=0.5
+    )
+    np.testing.assert_allclose(float(err), float(r.err), rtol=5e-2)
+
+
+# --------------------------------------------- real-device parity (GPU only)
+@pytest.mark.skipif(not _ON_GPU, reason="needs a GPU (Triton lowering)")
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gpu_device_assign_update_parity(dtype):
+    x, w, c = _data(4096, 32, 27, dtype)
+    tol = F32_TOL if dtype == jnp.float32 else BF16_SAME_DTYPE_TOL
+    out = gpu.assign_update_gpu(x, w, c)
+    _assert_assign_update_parity(out, ref.assign_update(x, w, c), tol)
+
+
+@pytest.mark.skipif(not _ON_GPU, reason="needs a GPU (Triton lowering)")
+def test_gpu_device_pruned_and_min_sqdist_parity():
+    x, w, c = _data(4096, 32, 27)
+    key = jax.random.PRNGKey(5)
+    active = (jax.random.uniform(key, (4096,)) < 0.4).astype(jnp.int32)
+    cached = jax.random.randint(jax.random.fold_in(key, 1), (4096,), 0, 27)
+    a, _, _, sums, counts, err = gpu.assign_update_pruned_gpu(x, w, c, cached, active)
+    r = ref.assign_update_pruned(x, w, c, cached, active)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(r.assign))
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(r.sums), **F32_TOL)
+    np.testing.assert_allclose(float(err), float(r.err), rtol=1e-5)
+
+    cand = (jax.random.normal(jax.random.fold_in(key, 2), (64, 32)) * 3).astype(
+        jnp.float32
+    )
+    mind2 = jnp.full((4096,), 1e30, jnp.float32)
+    new, cost = gpu.min_sqdist_update_gpu(
+        x, w, cand, jnp.ones((64,), jnp.float32), mind2
+    )
+    rm = ref.min_sqdist_update(x, w, cand, jnp.ones((64,), jnp.float32), mind2)
+    np.testing.assert_allclose(np.asarray(new), np.asarray(rm.mind2), **F32_TOL)
+    np.testing.assert_allclose(float(cost), float(rm.cost), rtol=1e-5)
+
+
+@pytest.mark.skipif(not _ON_GPU, reason="needs a GPU")
+def test_auto_resolves_to_pallas_on_gpu():
+    assert ops.pallas_available()
+    assert ops.resolve_impl("auto") == "pallas"
+
+
+# ------------------------------------------------------ autotune cache (ADR 0008)
+@pytest.fixture()
+def fresh_cache(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path / "autotune.json"))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    autotune.clear_memo()
+    yield tmp_path / "autotune.json"
+    autotune.clear_memo()
+
+
+def test_autotune_measures_once_then_serves_cache(fresh_cache):
+    calls = []
+
+    def fake_measure(blk):
+        calls.append((blk["bn"], blk["bk"]))
+        # make a non-analytic candidate the winner so "measured" is
+        # distinguishable from "analytic echoed back"
+        return 1.0 if len(calls) == 1 else 0.5 + 0.01 * len(calls)
+
+    blk = autotune.blocking(
+        "assign_update", n=4096, d=32, k=64, backend="gpu", measure=fake_measure
+    )
+    assert blk["source"] == "measured"
+    assert blk["candidates_timed"] == len(calls) > 1
+    assert blk["speedup_vs_analytic"] >= 1.0
+    assert (blk["bn"], blk["bk"]) == calls[1]  # the 0.5 s candidate won
+
+    n_calls = len(calls)
+    hit = autotune.blocking(
+        "assign_update", n=4096, d=32, k=64, backend="gpu", measure=fake_measure
+    )
+    assert hit["source"] == "cache"
+    assert len(calls) == n_calls  # cache hit must NOT re-time
+    assert (hit["bn"], hit["bk"]) == (blk["bn"], blk["bk"])
+
+
+def test_autotune_never_returns_slower_than_analytic(fresh_cache):
+    # analytic (the first candidate) is fastest: the tuner must keep it
+    times = iter([0.1] + [0.2] * 64)
+    blk = autotune.blocking(
+        "min_sqdist_update", n=2048, d=16, k=128, backend="gpu",
+        measure=lambda b: next(times),
+    )
+    ana = analysis.min_sqdist_blocking(16, 128, backend="gpu")
+    assert blk["source"] == "measured"
+    assert (blk["bn"], blk["bl"]) == (ana["bn"], ana["bl"])
+    assert blk["speedup_vs_analytic"] == 1.0
+
+
+def test_autotune_cache_survives_process_reload(fresh_cache):
+    autotune.blocking(
+        "assign_update", n=1024, d=8, k=16, backend="gpu", measure=lambda b: 0.1
+    )
+    autotune.clear_memo()  # simulate a new process: memo empty, file present
+    hit = autotune.blocking(
+        "assign_update", n=1024, d=8, k=16, backend="gpu",
+        measure=lambda b: pytest.fail("cache hit must not re-time"),
+    )
+    assert hit["source"] == "cache"
+    assert fresh_cache.exists()
+
+
+def test_autotune_no_device_falls_back_to_analytic(fresh_cache):
+    if _ON_GPU:
+        pytest.skip("this host HAS a GPU; the fallback branch is unreachable")
+    blk = autotune.blocking("assign_update", n=4096, d=32, k=64, backend="gpu")
+    ana = analysis.assign_update_blocking(32, 64, backend="gpu")
+    assert blk["source"] == "analytic"
+    assert (blk["bn"], blk["bk"]) == (ana["bn"], ana["bk"])
+
+
+def test_autotune_disabled_env_is_pure_analytic(fresh_cache, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "0")
+    blk = autotune.blocking(
+        "assign_update", n=4096, d=32, k=64, backend="gpu",
+        measure=lambda b: pytest.fail("disabled autotune must not time"),
+    )
+    assert blk["source"] == "analytic"
+    assert not fresh_cache.exists()
+
+
+def test_autotune_bucket_shares_nearby_n(fresh_cache):
+    assert autotune.n_bucket(1) == 1024  # floor
+    assert autotune.n_bucket(1025) == 2048
+    assert autotune.cache_key("assign_update", 1500, 8, 4, jnp.float32, "gpu") == \
+        autotune.cache_key("assign_update", 2048, 8, 4, jnp.bfloat16, "gpu").replace(
+            "bfloat16", "float32"
+        )
+
+
+def test_autotune_candidates_analytic_first_and_within_budget():
+    for seam, tile in [("assign_update", "bk"), ("min_sqdist_update", "bl")]:
+        cands = autotune.candidate_blockings(seam, 32, 64, backend="gpu")
+        ana = (
+            analysis.min_sqdist_blocking(32, 64, backend="gpu")
+            if seam == "min_sqdist_update"
+            else analysis.assign_update_blocking(32, 64, backend="gpu")
+        )
+        assert (cands[0]["bn"], cands[0][tile]) == (ana["bn"], ana[tile])
+        assert len(cands) > 1
+        budget = analysis.kernel_budget_bytes("gpu")
+        assert all(c["vmem_bytes"] <= budget for c in cands)
+        seen = {(c["bn"], c[tile]) for c in cands}
+        assert len(seen) == len(cands)  # no duplicate timings
+
+
+def test_autotune_unknown_seam_raises():
+    with pytest.raises(ValueError, match="unknown seam"):
+        autotune.blocking("frobnicate", n=1, d=1, k=1)
+
+
+# ------------------------------------------------- ISSUE-8 bugfix regressions
+def test_blocking_accounts_for_dtype_bytes():
+    """Regression (bug a): the heuristics hard-coded 4-byte elements, so
+    bf16 tiles were budgeted at twice their real size. With the x tile at
+    the input dtype and the budget fixed, halving the element size must
+    roughly double the admissible row block."""
+    # GPU path: bn grows in power-of-two steps, so the doubling is exact
+    f32 = analysis.assign_update_blocking(64, 128, dtype_bytes=4, backend="gpu")
+    bf16 = analysis.assign_update_blocking(64, 128, dtype_bytes=2, backend="gpu")
+    assert bf16["bn"] == 2 * f32["bn"]
+
+    # TPU path at a shape where bn is interior (not clamped at the 512 cap):
+    # the centroid tile ALSO halves, so the gain is >= 2x
+    f32_t = analysis.assign_update_blocking(8192, 32, dtype_bytes=4)
+    bf16_t = analysis.assign_update_blocking(8192, 32, dtype_bytes=2)
+    assert 8 < f32_t["bn"] and bf16_t["bn"] < 512, \
+        "shape must keep both dtypes in the interior regime"
+    assert bf16_t["bn"] >= 2 * f32_t["bn"]
+
+    f32_m = analysis.min_sqdist_blocking(4096, 128, dtype_bytes=4)
+    bf16_m = analysis.min_sqdist_blocking(4096, 128, dtype_bytes=2)
+    assert 8 < f32_m["bn"] < 1024
+    assert bf16_m["bn"] >= 2 * f32_m["bn"]
+
+    # f32 accumulators do NOT shrink with the input dtype
+    assert bf16["acc_bytes"] == f32["acc_bytes"]
+
+
+def test_pallas_available_is_per_backend():
+    """Regression (bug b): ``pallas_available`` returned ``backend == tpu``,
+    silently demoting GPU hosts to the ref oracle."""
+    b = ops.backend()
+    assert ops.pallas_available() == (b in ("tpu", "gpu"))
+    assert b != "cuda"  # backend() must normalise cuda/rocm to "gpu"
+
+
+def test_auto_fallback_warns_exactly_once():
+    if _ON_GPU:
+        pytest.skip("no fallback on a pallas-capable host")
+    _warnings.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert ops.resolve_impl("auto") == "ref"
+        assert ops.resolve_impl("auto") == "ref"
+    runtime = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(runtime) == 1, "fallback must warn once, not per call"
+    assert "ref" in str(runtime[0].message)
+
+
+def test_set_default_impl_rejects_typos_loudly():
+    """Regression (bug c): validation was a bare ``assert``, stripped under
+    ``python -O`` — a typo'd env/config value silently fell through."""
+    with pytest.raises(ValueError, match="pallas"):
+        ops.set_default_impl("palas")
+    with pytest.raises(ValueError):
+        ops.resolve_impl("bogus")
+    # valid values still round-trip
+    before = ops.resolve_impl(None)
+    try:
+        ops.set_default_impl("ref")
+        assert ops.resolve_impl(None) == "ref"
+    finally:
+        ops.set_default_impl("auto")
+    assert ops.resolve_impl(None) == before

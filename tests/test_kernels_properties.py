@@ -138,6 +138,25 @@ def test_fused_matches_ref_examples(n, d, k, wmode):
         assert bool(jnp.all(jnp.isinf(out[2])))
 
 
+def test_mixed_precision_bf16_inputs_f32_accumulators():
+    """The mixed-precision contract (ADR 0008): bf16 inputs halve the HBM
+    traffic of the x/centroid tiles, but every statistic is produced by f32
+    accumulation — the outputs' dtype must not inherit the input dtype, and
+    same-dtype parity with the (also f32-accumulating) ref oracle stays at
+    the bf16 tolerance, not looser."""
+    x, w, c = _data(300, 33, 17, jnp.bfloat16)
+    out = fused_assign_update_pallas(x, w, c, interpret=True)
+    _assert_parity(x, w, c, out, TOL[jnp.bfloat16])
+    a, d1, d2, sums, counts, err = out
+    for arr in (d1, d2, sums, counts, err):
+        assert arr.dtype == jnp.float32
+    out_ops = ops.assign_update(x, w, c, impl="pallas")
+    assert out_ops.sums.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.asarray(out_ops.sums), np.asarray(sums), rtol=1e-6, atol=1e-6
+    )
+
+
 def test_zero_weight_rows_are_inert_but_assigned():
     """Zero-weight rows still get a valid assignment (BWKM's inactive
     representative rows rely on it) while contributing nothing to stats."""
