@@ -1,0 +1,189 @@
+"""Fault-injection bench: quality vs lost mass, and retry/recovery overhead.
+
+Two questions an operator of the fault-tolerant execution layer (DESIGN.md
+§5, ADR 0009) asks before turning on skip-and-reweight:
+
+  * **Quality vs loss** — how much does the final clustering error degrade
+    as terminally-lost chunks remove mass from the stream? Per loss level
+    the streaming engine fits the same dataset under a seeded terminal-fault
+    schedule (every scheduled chunk exhausts its retries and is skipped),
+    and the JSON records realised lost-mass fraction against the relative
+    error increase over the lossless fit — the curve that justifies the
+    "bounded error growth" claim.
+  * **Retry overhead** — what does surviving *transient* faults cost in
+    wall-clock? The same fit runs clean and under an N%-of-chunks
+    one-failure schedule (zero backoff delay, so the measured overhead is
+    the retry machinery itself, not the injected sleeps), and the JSON
+    records both walls plus the RunHealth counters proving the injected
+    schedule was exercised.
+
+Results go to ``BENCH_faults.json`` at the repo root with ``measurement``
+tags, like every other BENCH file.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core.bwkm import BWKMConfig
+from repro.data import chunks as ck
+from repro.data.resilient import ResilientChunkSource, RetryPolicy
+from repro.streaming import stream_bwkm
+from repro.testing.faults import FlakyIOSource, seeded_fault_schedule
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parent.parent / "BENCH_faults.json"
+
+LOSS_RATES = [0.0, 0.05, 0.1, 0.2, 0.3]
+TRANSIENT_RATE = 0.25
+
+
+def _data(seed: int, n: int, d: int, k: int) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(k, d).astype(np.float32) * 8.0
+    z = rng.randint(0, k, n)
+    return (centers[z] + rng.randn(n, d).astype(np.float32)).astype(np.float32)
+
+
+def _error_f64(x: np.ndarray, c) -> float:
+    x = np.asarray(x, np.float64)
+    c = np.asarray(c, np.float64)
+    err = 0.0
+    for start in range(0, x.shape[0], 65536):
+        seg = x[start : start + 65536]
+        d2 = ((seg[:, None, :] - c[None, :, :]) ** 2).sum(-1)
+        err += float(d2.min(axis=1).sum())
+    return err
+
+
+def _fit(x, chunk, cfg, source):
+    t0 = time.perf_counter()
+    res = stream_bwkm.fit_streaming(jax.random.PRNGKey(1), source, cfg)
+    wall = time.perf_counter() - t0
+    return res, wall
+
+
+def _policy() -> RetryPolicy:
+    # zero delay: the bench measures machinery overhead, not injected sleeps
+    return RetryPolicy(max_attempts=3, base_delay_s=0.0, max_delay_s=0.0)
+
+
+def quality_vs_loss(x, chunk, cfg, *, seed):
+    n = x.shape[0]
+    clean_res, _ = _fit(x, chunk, cfg, ck.ArrayChunkSource(x, chunk))
+    e_clean = _error_f64(x, clean_res.centroids)
+    out = []
+    for rate in LOSS_RATES:
+        src = ck.ArrayChunkSource(x, chunk)
+        # terminal faults: fail far past max_attempts on the scheduled chunks
+        schedule = {
+            i: 10**9
+            for i in seeded_fault_schedule(src.n_chunks, rate=rate, seed=seed)
+        }
+        resilient = ResilientChunkSource(
+            FlakyIOSource(src, schedule), policy=_policy(), on_exhausted="skip"
+        )
+        res, wall = _fit(x, chunk, cfg, resilient)
+        e = _error_f64(x, res.centroids)
+        h = res.health
+        out.append({
+            "measurement": "measured",
+            "target_loss_rate": rate,
+            "lost_chunks": h.lost_chunks,
+            "lost_points": h.lost_points,
+            "lost_mass_frac": h.lost_points / n,
+            "retries": h.retries,
+            "error": e,
+            "error_rel_increase": (e - e_clean) / e_clean,
+            "wall_s": wall,
+            "stop_reason": res.stop_reason,
+        })
+    return e_clean, out
+
+
+def retry_overhead(x, chunk, cfg, *, seed):
+    src_clean = ck.ArrayChunkSource(x, chunk)
+    _, wall_clean = _fit(x, chunk, cfg, src_clean)
+
+    src = ck.ArrayChunkSource(x, chunk)
+    schedule = seeded_fault_schedule(src.n_chunks, rate=TRANSIENT_RATE, seed=seed)
+    resilient = ResilientChunkSource(FlakyIOSource(src, schedule), policy=_policy())
+    res, wall_faulty = _fit(x, chunk, cfg, resilient)
+
+    # wrapper-only baseline: the resilient layer with nothing to retry
+    src2 = ck.ArrayChunkSource(x, chunk)
+    _, wall_wrapped = _fit(x, chunk, cfg, ResilientChunkSource(src2, policy=_policy()))
+
+    return {
+        "measurement": "measured",
+        "transient_fault_rate": TRANSIENT_RATE,
+        "faulty_chunks": len(schedule),
+        "retries": res.health.retries,
+        "degraded": res.health.degraded,
+        "wall_clean_s": wall_clean,
+        "wall_wrapped_s": wall_wrapped,
+        "wall_faulty_s": wall_faulty,
+        "overhead_wrapped_frac": wall_wrapped / wall_clean - 1.0,
+        "overhead_faulty_frac": wall_faulty / wall_clean - 1.0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=str(DEFAULT_OUT), help="JSON results path")
+    ap.add_argument("--no-json", action="store_true")
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--d", type=int, default=8)
+    ap.add_argument("--k", type=int, default=9)
+    ap.add_argument("--chunk", type=int, default=4096)
+    ap.add_argument("--max-iters", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    x = _data(args.seed, args.n, args.d, args.k)
+    cfg = BWKMConfig(k=args.k, max_iters=args.max_iters)
+
+    e_clean, curve = quality_vs_loss(x, args.chunk, cfg, seed=args.seed + 1)
+    overhead = retry_overhead(x, args.chunk, cfg, seed=args.seed + 2)
+
+    record = {
+        "unit": "E^D(C) f64 (error), seconds (wall), fractions",
+        "measurement": "measured",
+        "n": args.n,
+        "d": args.d,
+        "k": args.k,
+        "chunk": args.chunk,
+        "error_clean": e_clean,
+        "quality_vs_loss": curve,
+        "retry_overhead": [overhead],
+    }
+
+    print("name,us_per_call,derived")
+    for row in curve:
+        print(
+            f"faults_loss{row['target_loss_rate']:.2f}_n{args.n}_k{args.k},0,"
+            f"lost_mass={row['lost_mass_frac']:.3f};"
+            f"err_rel_increase={row['error_rel_increase']:.4f};"
+            f"retries={row['retries']};wall_s={row['wall_s']:.2f}"
+        )
+    print(
+        f"faults_retry_overhead_n{args.n}_k{args.k},0,"
+        f"retries={overhead['retries']};"
+        f"overhead_wrapped={overhead['overhead_wrapped_frac']:.3f};"
+        f"overhead_faulty={overhead['overhead_faulty_frac']:.3f}"
+    )
+
+    if not args.no_json:
+        pathlib.Path(args.out).write_text(json.dumps(record, indent=2) + "\n")
+        print(f"# wrote {args.out}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

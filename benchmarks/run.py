@@ -13,6 +13,8 @@ Emits ``name,us_per_call,derived`` CSV:
                   kmeans++/forgy/afkmc2: passes, distance ops, final error)
   * service_*   — online service under drift (sustained points/sec, refit
                   latency, checkpoint size)
+  * faults_*    — fault-injected streaming (quality vs lost-mass curve,
+                  retry/recovery wall-clock overhead)
   * vq_*        — KV-cache quantization (reconstruction MSE vs k, cache
                   bytes, fit distance ops streaming vs in-core, decode
                   tokens/s ± quantization)
@@ -91,8 +93,8 @@ def main() -> None:
         return
 
     from benchmarks import (
-        bench_init, bench_kernels, bench_lloyd, bench_service, bench_streaming,
-        bench_tradeoff, bench_vq, bench_wallclock,
+        bench_faults, bench_init, bench_kernels, bench_lloyd, bench_service,
+        bench_streaming, bench_tradeoff, bench_vq, bench_wallclock,
     )
 
     if args.quick:
@@ -112,6 +114,9 @@ def main() -> None:
     bench_lloyd.main([])
     bench_init.main(["--reps", "1"] if args.quick else [])
     bench_service.main([])
+    bench_faults.main(
+        ["--n", "30000", "--max-iters", "5"] if args.quick else []
+    )
     bench_vq.main(["--ks", "16"] if args.quick else [])
     bench_wallclock.main(["--quick"] if args.quick else [])
     _check_or_die()

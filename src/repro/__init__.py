@@ -31,9 +31,11 @@ from repro.api import (
 )
 from repro.core.bwkm import BWKMConfig
 from repro.data.chunks import ChunkSource, as_chunk_source
+from repro.data.resilient import ResilientChunkSource, RetryPolicy
+from repro.health import RunHealth
 from repro import vq
 
-__version__ = "0.3.0"
+__version__ = "0.4.0"
 
 __all__ = [
     "BWKM",
@@ -43,6 +45,10 @@ __all__ = [
     "Engine",
     "FitResult",
     "InitStrategy",
+    # PR 9 fault-tolerant execution layer (DESIGN.md §5, ADR 0009)
+    "ResilientChunkSource",
+    "RetryPolicy",
+    "RunHealth",
     "ServiceConfig",
     "as_chunk_source",
     "get_engine",

@@ -91,6 +91,12 @@ def from_driver_result(res: Any, engine: str) -> FitResult:
         metadata["points_streamed"] = stream.points_streamed
         metadata["n_chunks"] = stream.n_chunks
         metadata["chunk_size"] = stream.chunk_size
+    # RunHealth ledger (DESIGN.md §5) — duck-typed so this module keeps its
+    # no-repro-imports guarantee; every engine attaches one (all-zero when
+    # the run was clean).
+    health = getattr(res, "health", None)
+    if health is not None and hasattr(health, "as_dict"):
+        metadata["health"] = health.as_dict()
     return FitResult(
         centroids=res.centroids,
         distances=float(res.distances),

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.core import bounds, init_partition, lloyd, misassignment as mis
 from repro.core import partition as part_mod
 from repro.core.partition import Partition
+from repro.health import RunHealth
 
 __all__ = ["BWKMConfig", "BWKMResult", "fit", "fit_incore", "seed_centroids"]
 
@@ -94,6 +95,9 @@ class BWKMResult:
     boundary_sizes: list[int]
     stop_reason: str
     trace: list[dict]  # per-iteration snapshots for the trade-off benchmark
+    # fault/degradation ledger (DESIGN.md §5); None only on legacy paths —
+    # the three engines always attach one, all-zero for a clean run
+    health: RunHealth | None = None
 
 
 def fit_incore(
@@ -108,6 +112,18 @@ def fit_incore(
     This is the in-core engine behind the ``repro.BWKM`` facade; call the
     facade unless you need driver-native access to the ``Partition``.
     """
+    health = RunHealth()
+    # Quarantine non-finite rows before anything can fold them into sums
+    # (one NaN row would otherwise poison every centroid). The filter is a
+    # deterministic function of the data, so reruns are bit-identical.
+    finite_rows = jnp.all(jnp.isfinite(x), axis=1)
+    n_bad = int(x.shape[0] - jnp.sum(finite_rows))
+    if n_bad:
+        health.quarantined_rows = n_bad
+        x = jnp.asarray(x)[finite_rows]
+        if x.shape[0] == 0:
+            raise ValueError("every input row was non-finite; nothing to cluster")
+
     n, d = x.shape
     p = config.resolve(n, d)
     k = config.k
@@ -206,6 +222,7 @@ def fit_incore(
         boundary_sizes=boundary_sizes,
         stop_reason=stop_reason,
         trace=trace,
+        health=health,
     )
 
 

@@ -4,6 +4,7 @@ out-of-core chunk sources for the streaming BWKM driver."""
 
 from repro.data.chunks import (
     ArrayChunkSource,
+    ChunkReadError,
     ChunkSource,
     MemmapChunkSource,
     ShardedFileSource,
@@ -12,6 +13,7 @@ from repro.data.chunks import (
     reservoir_sample,
     write_npy_shards,
 )
+from repro.data.resilient import ChunkLostError, ResilientChunkSource, RetryPolicy
 from repro.data.synthetic import PAPER_DATASETS, gmm_dataset, paper_dataset
 from repro.data.tokens import TokenStream
 
@@ -20,9 +22,13 @@ __all__ = [
     "gmm_dataset",
     "paper_dataset",
     "TokenStream",
+    "ChunkLostError",
+    "ChunkReadError",
     "ChunkSource",
     "ArrayChunkSource",
     "MemmapChunkSource",
+    "ResilientChunkSource",
+    "RetryPolicy",
     "ShardedFileSource",
     "as_chunk_source",
     "padded_device_chunks",

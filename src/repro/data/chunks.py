@@ -30,6 +30,7 @@ from typing import Iterator, Protocol, Sequence, runtime_checkable
 import numpy as np
 
 __all__ = [
+    "ChunkReadError",
     "ChunkSource",
     "ArrayChunkSource",
     "MemmapChunkSource",
@@ -42,6 +43,22 @@ __all__ = [
     "resolve_paths",
     "write_npy_shards",
 ]
+
+
+class ChunkReadError(OSError):
+    """A chunk could not be produced from backing storage.
+
+    Raised by file-backed sources when a shard vanishes, truncates, or fails
+    to parse *mid-iteration* (the constructor already validated it), naming
+    the offending path and the logical chunk index so operators — and the
+    retry policy in ``repro.data.resilient`` — know exactly what was lost.
+    """
+
+    def __init__(self, message: str, *, path: str | None = None,
+                 chunk_index: int | None = None):
+        super().__init__(message)
+        self.path = path
+        self.chunk_index = chunk_index
 
 
 @runtime_checkable
@@ -179,12 +196,37 @@ class ShardedFileSource:
     def n_chunks(self) -> int:
         return _n_chunks(self.n_points, self._chunk_size)
 
+    def _load_shard(self, shard_i: int, chunk_index: int) -> np.ndarray:
+        """Re-map shard ``shard_i`` and re-verify it against the geometry the
+        constructor recorded: a shard deleted, truncated, or rewritten
+        mid-iteration surfaces as a :class:`ChunkReadError` naming the path
+        and the logical chunk index — not as a silent short read or an
+        anonymous ``OSError`` deep inside a pass."""
+        p = self.paths[shard_i]
+        expected = (self._rows[shard_i], self._dim)
+        try:
+            arr = np.load(p, mmap_mode="r")
+        except (OSError, ValueError) as e:
+            raise ChunkReadError(
+                f"shard {p!r} unreadable while producing chunk {chunk_index} "
+                f"(deleted or truncated mid-iteration?): {e}",
+                path=p, chunk_index=chunk_index,
+            ) from e
+        if arr.ndim != 2 or arr.shape != expected:
+            raise ChunkReadError(
+                f"shard {p!r} changed shape while producing chunk "
+                f"{chunk_index}: expected {expected}, found {arr.shape}",
+                path=p, chunk_index=chunk_index,
+            )
+        return arr
+
     def chunks(self) -> Iterator[np.ndarray]:
         cs = self._chunk_size
         pending: list[np.ndarray] = []
         pending_rows = 0
-        for p in self.paths:
-            arr = np.load(p, mmap_mode="r")
+        emitted = 0
+        for shard_i in range(len(self.paths)):
+            arr = self._load_shard(shard_i, emitted)
             start = 0
             while start < arr.shape[0]:
                 take = min(cs - pending_rows, arr.shape[0] - start)
@@ -194,6 +236,7 @@ class ShardedFileSource:
                 if pending_rows == cs:
                     yield pending[0] if len(pending) == 1 else np.concatenate(pending)
                     pending, pending_rows = [], 0
+                    emitted += 1
         if pending_rows:
             yield pending[0] if len(pending) == 1 else np.concatenate(pending)
 
@@ -202,10 +245,10 @@ class ShardedFileSource:
         stop = min(start + self._chunk_size, self.n_points)
         offsets = np.concatenate([[0], np.cumsum(self._rows)])
         parts: list[np.ndarray] = []
-        for s, (lo, hi) in zip(self.paths, zip(offsets[:-1], offsets[1:])):
+        for shard_i, (lo, hi) in enumerate(zip(offsets[:-1], offsets[1:])):
             if hi <= start or lo >= stop:
                 continue
-            arr = np.load(s, mmap_mode="r")
+            arr = self._load_shard(shard_i, index)
             parts.append(np.array(arr[max(start - lo, 0) : stop - lo]))
         return parts[0] if len(parts) == 1 else np.concatenate(parts)
 

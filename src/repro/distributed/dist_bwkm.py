@@ -24,8 +24,9 @@ mesh shape → elastic restart).
 
 from __future__ import annotations
 
+import math
 from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,16 +39,28 @@ from repro.core import partition as part_mod
 from repro.core.lloyd import weighted_lloyd
 from repro.core.partition import Partition
 from repro.distributed import sharding as sh
+from repro.health import RunHealth
 
-__all__ = ["shard_points", "dist_recompute_stats", "dist_route_points",
-           "dist_assign_step", "dist_lloyd", "DistLloydResult",
-           "fit", "fit_distributed"]
+__all__ = ["ShardLossError", "shard_points", "dist_recompute_stats",
+           "dist_route_points", "dist_assign_step", "dist_lloyd",
+           "DistLloydResult", "fit", "fit_distributed", "n_data_shards"]
 
 _BIG = 3.0e38
 
 
+class ShardLossError(RuntimeError):
+    """Shard-stat losses in one round exceeded ``max_shard_loss_frac`` —
+    drop-and-reweight would no longer be a defensible approximation, so the
+    round aborts instead of silently fitting a sliver of the data."""
+
+
 def _data_axes():
     return sh.batch_axes()
+
+
+def n_data_shards() -> int:
+    """Number of data-parallel shards on the current mesh (1 when unmeshed)."""
+    return math.prod(sh.axis_size(a) for a in sh.batch_axes()) or 1
 
 
 def shard_points(x: jax.Array) -> jax.Array:
@@ -61,43 +74,95 @@ def shard_points(x: jax.Array) -> jax.Array:
 
 
 # ------------------------------------------------------------- shard_map ops
-def _stats_body(x_loc, bid_loc, *, m):
+def _stats_body(x_loc, bid_loc, alive_loc, *, m):
     """Local ``partition.block_stats`` + cross-shard combine. The psum/pmin/
     pmax quartet is exactly ``combine_block_stats`` folded over the data
     axes — the same associative statistics the streaming driver folds over
-    chunks (docs/DESIGN.md §6.4)."""
-    st = part_mod.block_stats(x_loc, bid_loc, m)
+    chunks (docs/DESIGN.md §6.4).
+
+    Fault tolerance (DESIGN.md §5): rows with ``alive == 0`` (a shard whose
+    stats are declared lost for this round) are routed to the scratch
+    segment, and a shard whose local stats come back non-finite (a NaN row
+    poisoned its fold) zeroes its whole contribution before the psum — both
+    read as "that shard's BlockStats are missing", and the driver reweights
+    the surviving mass. The replicated ``ok_shards`` count tells the driver
+    how many shards actually contributed finite stats.
+    """
+    st = part_mod.block_stats(x_loc, bid_loc, m, valid=alive_loc > 0)
+    ok = jnp.all(jnp.isfinite(st.psum)) & jnp.all(jnp.isfinite(st.count))
+    psum_l = jnp.where(ok, st.psum, 0.0)
+    count_l = jnp.where(ok, st.count, 0.0)
+    lo_l = jnp.where(ok, st.lo, _BIG)
+    hi_l = jnp.where(ok, st.hi, -_BIG)
     axes = _data_axes()
-    psum_ = jax.lax.psum(st.psum, axes)
-    count = jax.lax.psum(st.count, axes)
-    lo = jax.lax.pmin(st.lo, axes)
-    hi = jax.lax.pmax(st.hi, axes)
+    psum_ = jax.lax.psum(psum_l, axes)
+    count = jax.lax.psum(count_l, axes)
+    lo = jax.lax.pmin(lo_l, axes)
+    hi = jax.lax.pmax(hi_l, axes)
+    ok_shards = jax.lax.psum(ok.astype(jnp.float32), axes)
     empty = count <= 0
     lo = jnp.where(empty[:, None], _BIG, lo)
     hi = jnp.where(empty[:, None], -_BIG, hi)
-    return psum_, count, lo, hi
+    return psum_, count, lo, hi, ok_shards
 
 
-def dist_recompute_stats(part: Partition, x: jax.Array, bid: jax.Array) -> Partition:
-    """psum-combined (Σx, count, lo, hi) over sharded points."""
+def _recompute_stats_ok(
+    part: Partition,
+    x: jax.Array,
+    bid: jax.Array,
+    alive_rows: jax.Array | None = None,
+) -> tuple[Partition, int]:
+    """:func:`dist_recompute_stats` plus the number of shards whose local
+    stats survived finite (the drop-and-reweight driver needs it; plain
+    callers don't)."""
     mesh = sh.current_mesh()
     m = part.capacity
+    n = x.shape[0]
     if mesh is None:
-        return part_mod.recompute_stats(part._replace(block_id=bid), x)
-    n, d = x.shape
+        valid = (alive_rows > 0) if alive_rows is not None else None
+        st = part_mod.block_stats(x, bid, m, valid=valid)
+        ok = bool(jnp.all(jnp.isfinite(st.psum)) & jnp.all(jnp.isfinite(st.count)))
+        if not ok:
+            st = st._replace(psum=jnp.zeros_like(st.psum),
+                             count=jnp.zeros_like(st.count),
+                             lo=jnp.full_like(st.lo, _BIG),
+                             hi=jnp.full_like(st.hi, -_BIG))
+        return (
+            part._replace(psum=st.psum, count=st.count, lo=st.lo, hi=st.hi,
+                          block_id=bid),
+            int(ok),
+        )
+    d = x.shape[1]
     row_spec = sh.logical_to_spec(("batch", "tensor"), (n, d))
     bid_spec = sh.logical_to_spec(("batch",), (n,))
+    if alive_rows is None:
+        alive_rows = jnp.ones(n, jnp.float32)
     fn = sh.shard_map(
         partial(_stats_body, m=m),
         mesh=mesh,
-        in_specs=(row_spec, bid_spec),
+        in_specs=(row_spec, bid_spec, bid_spec),
         out_specs=(
-            P(None, row_spec[1]), P(None), P(None, row_spec[1]), P(None, row_spec[1]),
+            P(None, row_spec[1]), P(None), P(None, row_spec[1]),
+            P(None, row_spec[1]), P(),
         ),
         check_vma=False,
     )
-    psum_, count, lo, hi = fn(x, bid)
-    return part._replace(psum=psum_, count=count, lo=lo, hi=hi, block_id=bid)
+    psum_, count, lo, hi, ok_shards = fn(x, bid, jnp.asarray(alive_rows, jnp.float32))
+    part = part._replace(psum=psum_, count=count, lo=lo, hi=hi, block_id=bid)
+    return part, int(ok_shards)
+
+
+def dist_recompute_stats(
+    part: Partition,
+    x: jax.Array,
+    bid: jax.Array,
+    alive_rows: jax.Array | None = None,
+) -> Partition:
+    """psum-combined (Σx, count, lo, hi) over sharded points. ``alive_rows``
+    (f32 0/1 per row, sharded like ``bid``) drops rows from the fold — the
+    row-level encoding of "this shard's stats are lost this round"."""
+    part, _ = _recompute_stats_ok(part, x, bid, alive_rows)
+    return part
 
 
 def _route_body(x_loc, bid_loc, fits, axis, mid, right_row):
@@ -320,12 +385,77 @@ def dist_lloyd(
 
 
 # ------------------------------------------------------------------ driver
+def _alive_mask_for(
+    n: int, n_shards: int, lost: Sequence[int]
+) -> jax.Array | None:
+    """f32 row mask zeroing the contiguous row blocks of the lost shards
+    (``shard_points`` places rows contiguously over the data axes)."""
+    if not lost:
+        return None
+    # Same geometry as repro.testing.faults.shard_loss_rows_mask, inlined so
+    # the production driver does not import the test harness.
+    if n % n_shards != 0:
+        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
+    import numpy as np
+
+    mask = np.ones(n, np.float32)
+    per = n // n_shards
+    for s in lost:
+        if not 0 <= int(s) < n_shards:
+            raise ValueError(f"shard {s} out of range [0, {n_shards})")
+        mask[int(s) * per : (int(s) + 1) * per] = 0.0
+    return jnp.asarray(mask)
+
+
+def _apply_shard_loss(
+    part: Partition,
+    *,
+    n: int,
+    n_ok: int,
+    n_shards: int,
+    n_injected: int,
+    health: RunHealth,
+    max_shard_loss_frac: float,
+    round_index: int,
+) -> Partition:
+    """Round-level drop-and-reweight (DESIGN.md §5): if the recomputed stats
+    are missing mass (injected shard loss, or shards whose local stats went
+    non-finite), scale ``psum``/``count`` of the survivors by ``n / Σcount``
+    so total mass is restored. The uniform scale leaves every representative
+    mean ``psum/count`` and all weight *ratios* unchanged — weighted Lloyd's
+    fixed points on the surviving blocks are invariant — while keeping the
+    reported weighted errors on the same scale as a lossless run. Aborts
+    with :class:`ShardLossError` when the lost fraction exceeds
+    ``max_shard_loss_frac``.
+    """
+    total = float(jnp.sum(part.count))
+    lost_frac = max(0.0, 1.0 - total / float(n))
+    n_lost = n_injected + max(0, n_shards - n_ok - n_injected)
+    if n_lost == 0 and lost_frac <= 1e-6:
+        return part
+    if lost_frac > max_shard_loss_frac:
+        raise ShardLossError(
+            f"round {round_index}: lost {lost_frac:.1%} of the data mass "
+            f"({n_lost} of {n_shards} shards) — exceeds "
+            f"max_shard_loss_frac={max_shard_loss_frac:.1%}; aborting rather "
+            "than fitting the remnant"
+        )
+    scale = float(n) / max(total, 1e-30)
+    part = part._replace(psum=part.psum * scale, count=part.count * scale)
+    health.lost_shards += n_lost
+    health.degraded_rounds += 1
+    health.lost_mass_frac = max(health.lost_mass_frac, lost_frac)
+    return part
+
+
 def fit_distributed(
     key: jax.Array,
     x: jax.Array,
     config: core_bwkm.BWKMConfig,
     *,
     checkpoint_dir: str | None = None,
+    shard_faults: "dict[int, Sequence[int]] | None" = None,
+    max_shard_loss_frac: float = 0.5,
 ) -> core_bwkm.BWKMResult:
     """Distributed Algorithm 5. ``x`` should be placed with shard_points.
 
@@ -334,11 +464,32 @@ def fit_distributed(
     semantics; representatives/centroids are computed replicated from psum'd
     statistics, so the trajectory is the single-host one up to psum
     summation order.
+
+    Fault injection: ``shard_faults`` maps a stats round (0 = the initial
+    routing round, ``i`` = the split round of outer iteration ``i``) to data
+    shard indices whose ``BlockStats`` are lost that round. Survivors are
+    mass-reweighted (``Σw`` correction, DESIGN.md §5) and the round
+    continues; :class:`ShardLossError` aborts the fit when a round loses
+    more than ``max_shard_loss_frac`` of the data mass. The returned
+    ``BWKMResult.health`` ledger records shards lost and degraded rounds.
     """
     n, d = x.shape
     p = config.resolve(n, d)
     k = config.k
     mesh = sh.current_mesh()
+    health = RunHealth()
+    n_shards = n_data_shards()
+    faults = {int(r): tuple(s) for r, s in (shard_faults or {}).items()}
+
+    def _stats_round(part_in, bid_in, round_index):
+        lost = faults.get(round_index, ())
+        alive = _alive_mask_for(n, n_shards, lost)
+        part_out, n_ok = _recompute_stats_ok(part_in, x, bid_in, alive)
+        return _apply_shard_loss(
+            part_out, n=n, n_ok=n_ok, n_shards=n_shards, n_injected=len(lost),
+            health=health, max_shard_loss_frac=max_shard_loss_frac,
+            round_index=round_index,
+        )
 
     # --- initial partition: Algorithm 2 on a host-gathered SAMPLE (the
     # paper's init only ever touches O(r·s) points; gathering the sample is
@@ -357,7 +508,7 @@ def fit_distributed(
     # route the full dataset through the sample-built boxes: nearest box by
     # containment (boxes partition the sample's bounding box; clip points)
     bid = _route_into_boxes(x, sample_part)
-    part = dist_recompute_stats(sample_part, x, bid)
+    part = _stats_round(sample_part, bid, 0)
 
     reps, w = part_mod.representatives(part)
     c = core_bwkm.seed_centroids(config.init, k_pp, reps, w, k)
@@ -390,7 +541,8 @@ def fit_distributed(
                 {"centroids": c, "boxes": {"lo": part.lo, "hi": part.hi,
                                            "active": part.active,
                                            "n_blocks": part.n_blocks}},
-                extra={"distances": distances, "iteration": it},
+                extra={"distances": distances, "iteration": it,
+                       "health": health.as_dict()},
             )
 
         if f_size == 0:
@@ -406,7 +558,10 @@ def fit_distributed(
 
         key, k_cut = jax.random.split(key)
         chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
-        part, bid = _dist_split(part, x, bid, chosen)
+        part, bid = _dist_split(
+            part, x, bid, chosen,
+            recompute=lambda p, b, _round=it: _stats_round(p, b, _round),
+        )
         reps, w = part_mod.representatives(part)
 
     return core_bwkm.BWKMResult(
@@ -419,6 +574,7 @@ def fit_distributed(
         boundary_sizes=boundary_sizes,
         stop_reason=stop_reason,
         trace=[],
+        health=health,
     )
 
 
@@ -445,14 +601,18 @@ def fit(
     return fit_distributed(key, x, config, checkpoint_dir=checkpoint_dir)
 
 
-def _dist_split(part: Partition, x, bid, chosen):
+def _dist_split(part: Partition, x, bid, chosen, *, recompute=None):
     """``split_blocks`` with distributed routing + stats: the shared
     ``split_plan`` is resolved once (replicated), routing and statistics run
-    per shard."""
+    per shard. ``recompute`` lets the driver substitute the fault-aware
+    stats round (drop-and-reweight) for the plain recompute."""
     plan = part_mod.split_plan(part, chosen)
     new_bid = dist_route_points(x, bid, plan.fits, plan.axis, plan.mid, plan.right_row)
     part = part_mod.apply_split_plan(part, plan)
-    part = dist_recompute_stats(part, x, new_bid)
+    if recompute is None:
+        part = dist_recompute_stats(part, x, new_bid)
+    else:
+        part = recompute(part, new_bid)
     return part, new_bid
 
 

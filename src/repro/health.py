@@ -1,0 +1,75 @@
+"""RunHealth — the degradation ledger every execution path reports.
+
+DESIGN.md §5: a fit that survived faults must say so. Every engine attaches
+a :class:`RunHealth` to its driver result (surfaced as
+``FitResult.metadata["health"]``), the long-lived service carries one across
+batches and writes it into every checkpoint manifest, and the resilient
+chunk source (``repro.data.resilient``) mutates one as it retries, skips,
+and quarantines. A clean run reports all-zero counters — the record is
+always present, so "degraded" is an explicit bit, never an absent key.
+
+This module is dependency-free on purpose: ``core``, ``data``,
+``distributed``, ``streaming``, and ``service`` all import it, and it
+imports nothing of theirs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["RunHealth"]
+
+
+@dataclasses.dataclass
+class RunHealth:
+    """Mutable fault/degradation counters for one run (or one source's life).
+
+    Counters are cumulative over the object's lifetime: a multi-pass
+    streaming fit that retries the same chunk in two passes counts both
+    retries. ``lost_mass_frac`` records the *worst* single-round lost mass
+    fraction the distributed drop-and-reweight path corrected for.
+    """
+
+    retries: int = 0  # fetch attempts beyond each chunk's first
+    deadline_hits: int = 0  # fetches discarded for exceeding the deadline
+    lost_chunks: int = 0  # chunks terminally skipped (skip-and-reweight)
+    lost_points: int = 0  # rows inside those lost chunks
+    quarantined_rows: int = 0  # non-finite rows dropped before compute
+    lost_shards: int = 0  # distributed: (shard, round) stat losses
+    degraded_rounds: int = 0  # rounds that ran on reweighted partial mass
+    lost_mass_frac: float = 0.0  # max per-round lost mass fraction corrected
+
+    @property
+    def degraded(self) -> bool:
+        """True iff the run was not a faithful pass over all the data
+        (retries alone don't degrade a run — every byte still arrived)."""
+        return bool(
+            self.lost_chunks
+            or self.lost_points
+            or self.quarantined_rows
+            or self.lost_shards
+            or self.degraded_rounds
+        )
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["degraded"] = self.degraded
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict | None) -> "RunHealth":
+        if not d:
+            return cls()
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+    def merged(self, other: "RunHealth | None") -> "RunHealth":
+        """Counter-wise sum (max for ``lost_mass_frac``) — used to combine a
+        source's ledger with an engine's own into one reported record."""
+        if other is None:
+            return dataclasses.replace(self)
+        out = RunHealth()
+        for f in dataclasses.fields(RunHealth):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            setattr(out, f.name, max(a, b) if f.name == "lost_mass_frac" else a + b)
+        return out

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.bwkm import BWKMConfig
 from repro.core.partition import Partition
+from repro.health import RunHealth
 from repro.train import checkpoint as train_ckpt
 
 __all__ = ["load_session", "save_session", "session_state_template"]
@@ -67,13 +68,23 @@ def _config_from_manifest(d: dict[str, Any]) -> "ServiceConfig":
 
 
 def save_session(
-    directory: str | pathlib.Path, session: "BWKMSession", *, cursor: int
+    directory: str | pathlib.Path,
+    session: "BWKMSession",
+    *,
+    cursor: int,
+    health: "RunHealth | None" = None,
+    keep_last_n: int | None = None,
 ) -> pathlib.Path:
     """Write ``<dir>/step_<cursor>/`` atomically. ``cursor`` = index of the
-    first stream chunk the session has NOT consumed."""
+    first stream chunk the session has NOT consumed. ``health`` overrides the
+    session's own ledger in the manifest (``run_service`` passes the session
+    ledger merged with the source's); ``keep_last_n`` forwards to the
+    retention GC in ``train.checkpoint.save``."""
     state = session.state
     if state is None:
         raise ValueError("cannot checkpoint an uninitialized session")
+    if health is None:
+        health = getattr(session, "health", None)
     extra = {
         "schema": _SCHEMA,
         "cursor": int(cursor),
@@ -83,8 +94,12 @@ def save_session(
         "batches": int(state.batches),
         "points": float(state.points),
         "config": _config_to_manifest(session.config),
+        "health": health.as_dict() if health is not None else {},
     }
-    return train_ckpt.save(directory, int(cursor), {"session": state}, extra)
+    return train_ckpt.save(
+        directory, int(cursor), {"session": state}, extra,
+        keep_last_n=keep_last_n,
+    )
 
 
 def load_session(
@@ -112,4 +127,5 @@ def load_session(
     restored, _ = train_ckpt.restore(directory, step, {"session": template})
     session = BWKMSession(_config_from_manifest(extra["config"]))
     session.state = restored["session"]
+    session.health = RunHealth.from_dict(extra.get("health"))
     return session, int(extra["cursor"])

@@ -39,6 +39,7 @@ from repro.core import partition as part_mod
 from repro.core.bwkm import BWKMConfig
 from repro.core.partition import BlockStats, Partition
 from repro.data import chunks as ck
+from repro.health import RunHealth
 from repro.kernels import ops
 
 __all__ = [
@@ -68,6 +69,10 @@ class ServiceConfig:
     refit_lloyd_iters: int = 20
     max_splits_per_refit: int | None = None
     seed: int = 0
+    # checkpoint retention: GC all but the newest N step dirs on each save
+    # (train.checkpoint semantics: the newest *verified* step is never
+    # deleted). None = keep everything.
+    keep_checkpoints: int | None = None
 
     def __post_init__(self):
         if not 0.0 < self.decay <= 1.0:
@@ -128,6 +133,9 @@ class BWKMSession:
         self.config = config
         self.state: SessionState | None = None
         self.last_metrics: dict[str, Any] | None = None
+        # cumulative degradation ledger (DESIGN.md §5); checkpointed in every
+        # manifest and restored by load_session
+        self.health = RunHealth()
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -146,6 +154,18 @@ class BWKMSession:
         x = jnp.asarray(np.ascontiguousarray(batch, np.float32))
         if x.ndim != 2 or x.shape[0] == 0:
             raise ValueError(f"expected non-empty [n, d] batch, got {x.shape}")
+        # Quarantine non-finite rows (a NaN would poison every block stat the
+        # batch merges into — and unlike a batch fit, the service can't
+        # recompute). Deterministic per batch, so recovery replays match.
+        finite = jnp.all(jnp.isfinite(x), axis=1)
+        n_bad = int(x.shape[0] - jnp.sum(finite))
+        if n_bad:
+            self.health.quarantined_rows += n_bad
+            x = x[finite]
+            if x.shape[0] == 0:
+                metrics = self._noop_metrics(quarantined=n_bad)
+                self.last_metrics = metrics
+                return metrics
         if self.state is None:
             metrics = self._bootstrap(x)
         else:
@@ -157,6 +177,24 @@ class BWKMSession:
             metrics = self._update(x)
         self.last_metrics = metrics
         return metrics
+
+    def _noop_metrics(self, *, quarantined: int) -> dict[str, Any]:
+        """Metrics for a batch fully consumed by quarantine: the session
+        state is untouched (same schema as a real batch, so consumers that
+        index fixed keys keep working)."""
+        state = self.state
+        return {
+            "batch": int(state.batches) if state is not None else 0,
+            "n_points": 0,
+            "quarantined": quarantined,
+            "boundary_frac": 0.0,
+            "refit": False,
+            "n_splits": 0,
+            "n_blocks": int(state.partition.n_blocks) if state is not None else 0,
+            "error": float(self.last_metrics["error"])
+            if self.last_metrics and "error" in self.last_metrics
+            else float("nan"),
+        }
 
     def _bootstrap(self, x: jax.Array) -> dict[str, Any]:
         cfg = self.config
@@ -305,6 +343,21 @@ def run_service(
     """
     from repro.service import checkpoint as svc_ckpt
 
+    def _checkpoint(cursor: int) -> None:
+        # The manifest health combines the session's own ledger with the
+        # feeding source's (e.g. a ResilientChunkSource's retry/skip
+        # counters) — one record says how trustworthy the state is.
+        src_health = getattr(source, "health", None)
+        health = (
+            session.health.merged(src_health)
+            if isinstance(src_health, RunHealth)
+            else session.health
+        )
+        svc_ckpt.save_session(
+            checkpoint_dir, session, cursor=cursor, health=health,
+            keep_last_n=session.config.keep_checkpoints,
+        )
+
     metrics: list[dict[str, Any]] = []
     cursor = start_chunk
     for chunk in ck.chunks_from(source, start_chunk):
@@ -317,9 +370,9 @@ def run_service(
             and checkpoint_every > 0
             and cursor % checkpoint_every == 0
         ):
-            svc_ckpt.save_session(checkpoint_dir, session, cursor=cursor)
+            _checkpoint(cursor)
     if checkpoint_dir and session.initialized:
-        svc_ckpt.save_session(checkpoint_dir, session, cursor=cursor)
+        _checkpoint(cursor)
     return metrics
 
 

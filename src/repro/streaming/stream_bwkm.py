@@ -43,6 +43,7 @@ from repro.core import partition as part_mod
 from repro.core.lloyd import weighted_lloyd
 from repro.core.partition import BlockStats, Partition
 from repro.data.chunks import ChunkSource, padded_device_chunks
+from repro.health import RunHealth
 from repro.kernels import ops
 from repro.streaming import init as stream_init
 
@@ -300,6 +301,10 @@ def fit_streaming(
         part, bids = _split_pass(source, bids, part, plan, stats)
         reps, w = part_mod.representatives(part)
 
+    # A ResilientChunkSource (repro.data.resilient) carries the fault ledger
+    # for the whole fit — retries, skipped chunks, quarantined rows; a bare
+    # source means a clean run by construction (any fault would have raised).
+    health = getattr(source, "health", None)
     return StreamBWKMResult(
         centroids=c,
         partition=part,
@@ -311,6 +316,7 @@ def fit_streaming(
         stop_reason=stop_reason,
         trace=trace,
         stream=stats,
+        health=health if isinstance(health, RunHealth) else RunHealth(),
     )
 
 

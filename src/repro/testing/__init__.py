@@ -1,0 +1,29 @@
+"""First-class fault-injection harness (DESIGN.md §5, ADR 0009).
+
+Deterministic, seeded fault injectors for every failure mode the
+fault-tolerant execution layer claims to survive — promoted out of
+``tests/test_service_recovery.py`` so the unit tests, the service recovery
+suite, and ``benchmarks/bench_faults.py`` all drive the *same* fault models.
+"""
+
+from repro.testing.faults import (
+    CorruptChunkSource,
+    CrashingSource,
+    FakeClock,
+    FlakyIOSource,
+    InjectedCrash,
+    StragglerSource,
+    seeded_fault_schedule,
+    shard_loss_rows_mask,
+)
+
+__all__ = [
+    "CorruptChunkSource",
+    "CrashingSource",
+    "FakeClock",
+    "FlakyIOSource",
+    "InjectedCrash",
+    "StragglerSource",
+    "seeded_fault_schedule",
+    "shard_loss_rows_mask",
+]

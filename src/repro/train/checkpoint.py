@@ -1,4 +1,4 @@
-"""Checkpoint save/restore with elastic resharding.
+"""Checkpoint save/restore with elastic resharding and integrity checks.
 
 Checkpoints are mesh-independent: every leaf is gathered to host and stored
 as a flat ``path -> array`` npz plus a JSON manifest (step, config digest,
@@ -7,6 +7,19 @@ rules of the *current* mesh — so a run checkpointed on 16×16 restarts on
 2×16×16 (or 1 CPU) unchanged: elastic up/down-scaling, and the recovery
 path after node failure (synchronous-collective designs restart from the
 last checkpoint; see DESIGN.md §5).
+
+Integrity (ADR 0009): the manifest carries a CRC-32 per stored array;
+:func:`restore` re-hashes every leaf it loads and raises
+:class:`CheckpointCorruptionError` naming the first bad key — a truncated or
+bit-flipped checkpoint fails loudly at restore instead of resuming training
+from garbage. :func:`save` is replace-safe: re-saving an existing step
+(crash-recovery replays the in-flight step) swaps the new directory in via
+rename and clears any stale ``.tmp_step_*`` debris from interrupted saves.
+
+Retention: ``save(..., keep_last_n=N)`` garbage-collects older step
+directories, always keeping the ``N`` newest plus — belt and braces — never
+deleting the newest step that actually verifies, so a corrupt latest save
+can't orphan the run. Default (``None``) keeps everything.
 
 In a multi-controller deployment each host would write only its addressable
 shards (same manifest format, per-shard files); the single-process container
@@ -17,16 +30,30 @@ from __future__ import annotations
 
 import json
 import pathlib
+import shutil
+import zipfile
+import zlib
 from typing import Any
 
 import jax
 import numpy as np
 
-from repro.distributed import sharding as sh
+from repro.distributed import sharding as sh  # noqa: F401  (re-export surface)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = [
+    "CheckpointCorruptionError",
+    "save",
+    "restore",
+    "latest_step",
+    "verify",
+]
 
 _SEP = "§"
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A stored array's checksum does not match its manifest entry (or a
+    manifest/npz file is missing or unreadable)."""
 
 
 def _flatten(tree: Any) -> dict[str, np.ndarray]:
@@ -40,30 +67,97 @@ def _flatten(tree: Any) -> dict[str, np.ndarray]:
     return flat
 
 
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
 def save(
     directory: str | pathlib.Path,
     step: int,
     state: dict[str, Any],
     extra: dict | None = None,
+    *,
+    keep_last_n: int | None = None,
 ) -> pathlib.Path:
-    """Write ``<dir>/step_<n>/state.npz`` + manifest. Atomic via rename."""
+    """Write ``<dir>/step_<n>/state.npz`` + manifest. Atomic via rename;
+    replace-safe when the step directory already exists. ``keep_last_n``
+    garbage-collects older steps after a successful write."""
     directory = pathlib.Path(directory)
     final = directory / f"step_{step:08d}"
     tmp = directory / f".tmp_step_{step:08d}"
-    tmp.mkdir(parents=True, exist_ok=True)
+    if tmp.exists():  # debris from a save that died mid-write
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
     flat = {}
     for name, tree in state.items():
         for k, v in _flatten(tree).items():
             flat[f"{name}{_SEP}{k}"] = v
     np.savez(tmp / "state.npz", **flat)
-    manifest = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    manifest = {
+        "step": step,
+        "keys": sorted(flat),
+        "checksums": {k: _crc(v) for k, v in flat.items()},
+        "extra": extra or {},
+    }
     (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
     if final.exists():
-        import shutil
-
-        shutil.rmtree(final)
-    tmp.rename(final)
+        # Swap, don't delete-then-rename: move the old step aside first so a
+        # crash between the two renames still leaves one complete directory.
+        old = directory / f".old_step_{step:08d}"
+        if old.exists():
+            shutil.rmtree(old)
+        final.rename(old)
+        tmp.rename(final)
+        shutil.rmtree(old)
+    else:
+        tmp.rename(final)
+    if keep_last_n is not None:
+        _gc(directory, keep_last_n)
     return final
+
+
+def _gc(directory: pathlib.Path, keep_last_n: int) -> None:
+    """Delete step directories beyond the ``keep_last_n`` newest. The newest
+    step that passes :func:`verify` is always kept, whatever ``keep_last_n``
+    says — retention must never destroy the only restorable checkpoint."""
+    keep_last_n = max(1, int(keep_last_n))
+    steps = sorted(
+        (int(p.name.split("_")[1]), p)
+        for p in directory.glob("step_*")
+        if p.is_dir()
+    )
+    newest_verified: pathlib.Path | None = None
+    for _, p in reversed(steps):
+        if verify(p):
+            newest_verified = p
+            break
+    for _, p in steps[:-keep_last_n] if keep_last_n < len(steps) else []:
+        if p == newest_verified:
+            continue
+        shutil.rmtree(p)
+
+
+def verify(step_dir: str | pathlib.Path) -> bool:
+    """True iff the step directory's arrays all match their manifest
+    checksums. Pre-checksum checkpoints (no ``checksums`` field) verify as
+    True — there is nothing to check them against."""
+    step_dir = pathlib.Path(step_dir)
+    try:
+        manifest = json.loads((step_dir / "manifest.json").read_text())
+        data = np.load(step_dir / "state.npz")
+    except (OSError, ValueError, json.JSONDecodeError, zipfile.BadZipFile):
+        return False
+    sums = manifest.get("checksums")
+    try:
+        if set(manifest["keys"]) - set(data.files):
+            return False
+        if sums is None:
+            return True
+        return all(_crc(data[k]) == int(v) for k, v in sums.items())
+    except (KeyError, ValueError, zlib.error):
+        return False
+    finally:
+        data.close()
 
 
 def latest_step(directory: str | pathlib.Path) -> int | None:
@@ -84,10 +178,18 @@ def restore(
 ) -> tuple[dict[str, Any], dict]:
     """Restore onto the current mesh. ``state_template`` supplies pytree
     structure; ``shardings`` (same structure) supplies target placements —
-    this is where elastic resharding happens."""
+    this is where elastic resharding happens. Every loaded array is verified
+    against its manifest checksum first; mismatch raises
+    :class:`CheckpointCorruptionError` naming the offending key."""
     directory = pathlib.Path(directory) / f"step_{step:08d}"
-    data = np.load(directory / "state.npz")
-    manifest = json.loads((directory / "manifest.json").read_text())
+    try:
+        data = np.load(directory / "state.npz")
+        manifest = json.loads((directory / "manifest.json").read_text())
+    except (OSError, ValueError, json.JSONDecodeError, zipfile.BadZipFile) as e:
+        raise CheckpointCorruptionError(
+            f"checkpoint {directory} is unreadable: {e}"
+        ) from e
+    sums = manifest.get("checksums")  # absent on pre-ADR-0009 checkpoints
 
     out: dict[str, Any] = {}
     for name, tree in state_template.items():
@@ -105,6 +207,12 @@ def restore(
                 for p in path
             )
             arr = data[key]
+            if sums is not None and key in sums and _crc(arr) != int(sums[key]):
+                raise CheckpointCorruptionError(
+                    f"checkpoint {directory} is corrupt: array {key!r} fails "
+                    "its CRC-32 manifest check (truncated or bit-flipped "
+                    "storage); restore from an older step"
+                )
             assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
             target = shard_entry[1] if shard_entry is not None else None
             leaves.append(

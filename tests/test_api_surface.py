@@ -15,6 +15,11 @@ EXPECTED_SURFACE = [
     "Engine",
     "FitResult",
     "InitStrategy",
+    # PR 9: fault-tolerant execution layer — retrying/skip-and-reweight
+    # chunk feeds and the RunHealth degradation ledger are public contract
+    "ResilientChunkSource",
+    "RetryPolicy",
+    "RunHealth",
     "ServiceConfig",
     "__version__",
     "as_chunk_source",

@@ -1,0 +1,278 @@
+"""Unit suite for the fault-injection harness and the resilient chunk feed.
+
+Covers the promoted ``repro.testing.faults`` injectors, the
+``ResilientChunkSource`` retry/skip/quarantine policy (including backoff
+determinism), and the ``ShardedFileSource`` mid-iteration failure contract
+(the error must name the offending path and chunk index).
+"""
+
+import numpy as np
+import pytest
+
+from repro.data import chunks as ck
+from repro.data.resilient import ChunkLostError, ResilientChunkSource, RetryPolicy
+from repro.health import RunHealth
+from repro.testing.faults import (
+    CorruptChunkSource,
+    CrashingSource,
+    FakeClock,
+    FlakyIOSource,
+    InjectedCrash,
+    StragglerSource,
+    seeded_fault_schedule,
+    shard_loss_rows_mask,
+)
+
+N, D, CS = 1000, 3, 256  # 4 chunks: 256+256+256+232
+
+
+def _data(seed: int = 0) -> np.ndarray:
+    return np.random.RandomState(seed).randn(N, D).astype(np.float32)
+
+
+def _source(seed: int = 0) -> ck.ArrayChunkSource:
+    return ck.ArrayChunkSource(_data(seed), CS)
+
+
+def _collect(src) -> np.ndarray:
+    got = list(src.chunks())
+    return np.concatenate(got) if got else np.zeros((0, D), np.float32)
+
+
+# ---------------------------------------------------------------- injectors
+def test_seeded_schedule_deterministic():
+    a = seeded_fault_schedule(100, rate=0.3, seed=7)
+    b = seeded_fault_schedule(100, rate=0.3, seed=7)
+    c = seeded_fault_schedule(100, rate=0.3, seed=8)
+    assert a == b
+    assert a != c
+    assert all(v == 1 for v in a.values())
+    assert seeded_fault_schedule(100, rate=0.0, seed=7) == {}
+
+
+def test_flaky_source_fails_then_recovers():
+    flaky = FlakyIOSource(_source(), {1: 2})
+    with pytest.raises(IOError):
+        _collect(flaky)  # first pass dies at chunk 1
+    with pytest.raises(IOError):
+        flaky.chunk_at(1)  # second lifetime fetch still fails
+    np.testing.assert_array_equal(flaky.chunk_at(1), _source().chunk_at(1))
+    assert flaky.attempts[1] == 3  # lifetime semantics: counted across passes
+
+
+def test_flaky_source_protocol_passthrough():
+    inner = _source()
+    flaky = FlakyIOSource(inner, {})
+    assert (flaky.n_points, flaky.dim, flaky.chunk_size, flaky.n_chunks) == (
+        inner.n_points, inner.dim, inner.chunk_size, inner.n_chunks,
+    )
+    np.testing.assert_array_equal(_collect(flaky), _data())
+
+
+def test_corrupt_source_stable_across_passes():
+    cor = CorruptChunkSource(_source(), {0: 5, 3: 2}, seed=3)
+    a, b = _collect(cor), _collect(cor)
+    np.testing.assert_array_equal(a, b)  # same rows poisoned every pass
+    bad = ~np.isfinite(a).all(axis=1)
+    assert bad.sum() == 7
+    # corruption confined to the scheduled chunks
+    assert not bad[CS : 3 * CS].any()
+
+
+def test_straggler_sleeps_then_recovers():
+    clock = FakeClock()
+    strag = StragglerSource(_source(), {2: 1.5}, times=1, sleep=clock.sleep)
+    _collect(strag)
+    assert clock.sleeps == [1.5]
+    _collect(strag)  # recovered: no further delay
+    assert clock.sleeps == [1.5]
+
+
+def test_crashing_source_raises_at_chunk():
+    crash = CrashingSource(_source(), crash_at=2)
+    got = []
+    with pytest.raises(InjectedCrash):
+        for chunk in crash.chunks():
+            got.append(chunk)
+    assert len(got) == 2
+
+
+def test_shard_loss_mask_geometry():
+    mask = shard_loss_rows_mask(8, 4, [1, 3])
+    np.testing.assert_array_equal(mask, [1, 1, 0, 0, 1, 1, 0, 0])
+    with pytest.raises(ValueError):
+        shard_loss_rows_mask(10, 4, [0])
+    with pytest.raises(ValueError):
+        shard_loss_rows_mask(8, 4, [4])
+
+
+# ------------------------------------------------------- RetryPolicy/backoff
+def test_backoff_deterministic_and_bounded():
+    pol = RetryPolicy(base_delay_s=0.1, max_delay_s=1.0, jitter=0.5, seed=3)
+    delays = [pol.delay_s(2, a) for a in range(6)]
+    assert delays == [pol.delay_s(2, a) for a in range(6)]  # deterministic
+    for a, d in enumerate(delays):
+        cap = min(1.0, 0.1 * 2**a)
+        assert 0.5 * cap <= d <= cap  # jitter shaves at most `jitter` off
+    # decorrelated across chunks and seeds
+    assert pol.delay_s(0, 1) != pol.delay_s(1, 1)
+    assert pol.delay_s(0, 1) != RetryPolicy(seed=4, jitter=0.5).delay_s(0, 1)
+
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError):
+        RetryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RetryPolicy(jitter=1.5)
+    with pytest.raises(ValueError):
+        ResilientChunkSource(_source(), on_exhausted="explode")
+
+
+# ---------------------------------------------------- ResilientChunkSource
+def _resilient(inner, **kw) -> ResilientChunkSource:
+    clock = FakeClock()
+    kw.setdefault("policy", RetryPolicy(max_attempts=3, base_delay_s=0.01))
+    return ResilientChunkSource(inner, sleep=clock.sleep, clock=clock.time, **kw)
+
+
+def test_resilient_retries_transient_faults_to_identical_stream():
+    res = _resilient(FlakyIOSource(_source(), {0: 1, 2: 2}))
+    np.testing.assert_array_equal(_collect(res), _data())
+    assert res.health.retries == 3  # exactly the injected schedule
+    assert res.health.lost_chunks == 0
+    assert not res.health.degraded
+
+
+def test_resilient_raise_mode_names_chunk():
+    res = _resilient(FlakyIOSource(_source(), {1: 99}))
+    with pytest.raises(ChunkLostError) as ei:
+        _collect(res)
+    assert ei.value.chunk_index == 1
+    assert isinstance(ei.value, ck.ChunkReadError)  # catchable as read error
+
+
+def test_resilient_skip_mode_is_sticky_and_accounts_mass():
+    res = _resilient(FlakyIOSource(_source(), {3: 99}), on_exhausted="skip")
+    got = list(res.chunks())
+    assert got[3].shape == (0, D)  # lost position yields empty, not absent
+    assert res.lost_chunk_indices == frozenset({3})
+    assert res.health.lost_chunks == 1
+    assert res.health.lost_points == N - 3 * CS  # the ragged tail chunk
+    assert res.health.degraded
+    retries_after_pass1 = res.health.retries
+    got2 = list(res.chunks())  # later passes: same shape, no re-attempts
+    assert got2[3].shape == (0, D)
+    assert res.health.retries == retries_after_pass1
+    np.testing.assert_array_equal(
+        np.concatenate(got), np.concatenate(got2)
+    )
+
+
+def test_resilient_quarantines_nonfinite_rows():
+    cor = CorruptChunkSource(_source(), {1: 4}, seed=2)
+    res = _resilient(cor)
+    got = _collect(res)
+    assert np.isfinite(got).all()
+    assert got.shape == (N - 4, D)
+    assert res.health.quarantined_rows == 4
+    # quarantine is deterministic: second pass drops the same rows
+    np.testing.assert_array_equal(got, _collect(res))
+    assert res.health.quarantined_rows == 8  # cumulative ledger
+
+
+def test_resilient_deadline_counts_stragglers():
+    clock = FakeClock()
+    strag = StragglerSource(_source(), {1: 5.0}, times=1, sleep=clock.sleep)
+    res = ResilientChunkSource(
+        strag,
+        policy=RetryPolicy(max_attempts=3, base_delay_s=0.01, deadline_s=1.0),
+        sleep=clock.sleep,
+        clock=clock.time,
+    )
+    np.testing.assert_array_equal(_collect(res), _data())
+    assert res.health.deadline_hits == 1
+    assert res.health.retries == 1
+
+
+def test_resilient_accumulates_into_shared_ledger():
+    ledger = RunHealth()
+    res = _resilient(FlakyIOSource(_source(), {0: 1}), health=ledger)
+    _collect(res)
+    assert ledger.retries == 1
+
+
+def test_resilient_chunk_at_range_check():
+    res = _resilient(_source())
+    with pytest.raises(IndexError):
+        res.chunk_at(res.n_chunks)
+
+
+# ------------------------------------------- ShardedFileSource failure modes
+def _shards(tmp_path, seed=0):
+    x = _data(seed)
+    paths = ck.write_npy_shards(x, tmp_path / "shards", rows_per_shard=300)
+    return x, [str(p) for p in paths]
+
+
+def test_sharded_source_shard_deleted_mid_iteration(tmp_path):
+    x, paths = _shards(tmp_path)
+    src = ck.ShardedFileSource(paths, CS)
+    it = src.chunks()
+    next(it)  # chunk 0 out cleanly
+    import os
+
+    os.remove(paths[2])
+    with pytest.raises(ck.ChunkReadError) as ei:
+        list(it)
+    assert ei.value.path == paths[2]
+    assert ei.value.chunk_index is not None
+    assert paths[2] in str(ei.value)
+
+
+def test_sharded_source_shard_truncated_mid_iteration(tmp_path):
+    x, paths = _shards(tmp_path)
+    src = ck.ShardedFileSource(paths, CS)
+    it = src.chunks()
+    next(it)
+    # rewrite shard 1 shorter: the constructor-recorded geometry no longer holds
+    np.save(paths[1], x[:17])
+    with pytest.raises(ck.ChunkReadError) as ei:
+        list(it)
+    assert ei.value.path == paths[1]
+    assert "shape" in str(ei.value) or "truncated" in str(ei.value)
+
+
+def test_sharded_source_chunk_at_failure_names_chunk(tmp_path):
+    x, paths = _shards(tmp_path)
+    src = ck.ShardedFileSource(paths, CS)
+    import os
+
+    os.remove(paths[-1])
+    bad_chunk = src.n_chunks - 1
+    with pytest.raises(ck.ChunkReadError) as ei:
+        src.chunk_at(bad_chunk)
+    assert ei.value.chunk_index == bad_chunk
+
+
+def test_resilient_over_sharded_survives_transient_deletion(tmp_path):
+    """The composed stack: a shard vanishes for one fetch, reappears, and the
+    retry layer delivers the intact stream."""
+    x, paths = _shards(tmp_path)
+
+    class VanishingShard(ck.ShardedFileSource):
+        def __init__(self, paths, cs):
+            super().__init__(paths, cs)
+            self.tripped = False
+
+        def _load_shard(self, shard_i, chunk_index):
+            if shard_i == 1 and not self.tripped:
+                self.tripped = True
+                raise ck.ChunkReadError(
+                    "transient outage", path=self.paths[1],
+                    chunk_index=chunk_index,
+                )
+            return super()._load_shard(shard_i, chunk_index)
+
+    res = _resilient(VanishingShard(paths, CS))
+    np.testing.assert_array_equal(_collect(res), x)
+    assert res.health.retries == 1

@@ -1,10 +1,11 @@
 """Crash-injection resume suite for the online service (ISSUE 6).
 
-A fault-injecting :class:`ChunkSource` wrapper raises at parameterized chunk
-boundaries mid-``run_service``; a session resumed from its last checkpoint
-(or from scratch when the crash predates the first checkpoint) and fed the
-rest of the stream must match the uninterrupted run — ≤1e-5 on centroids
-and exactly on predict labels — for both the in-core (resident array) and
+The :class:`~repro.testing.faults.CrashingSource` injector (promoted to the
+first-class harness in ISSUE 9) raises at parameterized chunk boundaries
+mid-``run_service``; a session resumed from its last checkpoint (or from
+scratch when the crash predates the first checkpoint) and fed the rest of
+the stream must match the uninterrupted run — ≤1e-5 on centroids and
+exactly on predict labels — for both the in-core (resident array) and
 streaming (sharded .npy files) source regimes.
 """
 
@@ -16,6 +17,8 @@ import jax
 from repro.core.bwkm import BWKMConfig
 from repro.data import chunks as ck
 from repro.service import BWKMSession, ServiceConfig, resume_service, run_service
+from repro.testing.faults import CrashingSource as FaultInjectingSource
+from repro.testing.faults import InjectedCrash
 
 CHUNK_ROWS = 256
 N_CHUNKS = 8
@@ -28,46 +31,6 @@ CONFIG = ServiceConfig(
     refit_boundary_frac=0.02,
     seed=5,
 )
-
-
-class InjectedCrash(RuntimeError):
-    pass
-
-
-class FaultInjectingSource:
-    """Wrap a source; accessing chunk ``crash_at`` raises :class:`InjectedCrash`
-    (the mid-stream process death the recovery path must survive)."""
-
-    def __init__(self, inner: ck.ChunkSource, crash_at: int):
-        self._inner = inner
-        self.crash_at = crash_at
-
-    @property
-    def n_points(self) -> int:
-        return self._inner.n_points
-
-    @property
-    def dim(self) -> int:
-        return self._inner.dim
-
-    @property
-    def chunk_size(self) -> int:
-        return self._inner.chunk_size
-
-    @property
-    def n_chunks(self) -> int:
-        return self._inner.n_chunks
-
-    def chunks(self):
-        for i, chunk in enumerate(self._inner.chunks()):
-            if i == self.crash_at:
-                raise InjectedCrash(f"injected crash at chunk {i}")
-            yield chunk
-
-    def chunk_at(self, index: int) -> np.ndarray:
-        if index == self.crash_at:
-            raise InjectedCrash(f"injected crash at chunk {index}")
-        return ck.chunk_at(self._inner, index)
 
 
 @pytest.fixture(scope="module")
