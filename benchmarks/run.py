@@ -24,6 +24,12 @@ Emits ``name,us_per_call,derived`` CSV:
 Every ``BENCH_*.json`` this package writes is schema-checked on exit:
 the record and each entry must be tagged ``measurement: analytic |
 measured`` so model numbers can never masquerade as timings.
+
+``--check-regress`` re-runs the two deterministic-counter benches
+(bench_lloyd, bench_kernels) into a temp dir and fails if any counter —
+distance ops, HBM bytes, active rows, iteration counts — drifts more than
+1% from the committed ``BENCH_lloyd.json``/``BENCH_kernels.json``.
+Wall-clock fields are never compared. Runs in the bench-smoke CI job.
 """
 
 from __future__ import annotations
@@ -31,11 +37,93 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import re
+import tempfile
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 _ENTRY_TAGS = ("analytic", "measured")
 _RECORD_TAGS = _ENTRY_TAGS + ("mixed",)
+
+# ------------------------------------------------------------ --check-regress
+#
+# The perf-trajectory gate (ISSUE 10): re-run the two benches whose outputs
+# are pure deterministic counters — bench_lloyd (kernel-reported distance
+# ops per iteration) and bench_kernels (analytic HBM bytes under the
+# selected blocking) — and diff the counters against the committed
+# BENCH_lloyd.json / BENCH_kernels.json within 1%. Wall-clock fields
+# (``*_s``, ``seconds``, ``tpu_model_s``) never participate: only numbers a
+# code change can move deterministically are gated, so the check is stable
+# on any runner while still catching a refactor that silently changes how
+# many distances the engines compute or how many bytes a pass touches.
+
+_REGRESS_FILES = ("BENCH_lloyd.json", "BENCH_kernels.json")
+# leaf keys that ARE deterministic counters (everything else is skipped)
+_COUNTER_KEY = re.compile(
+    r"(distance_ops|n_dist|_bytes$|^active_rows$|^iterations(_dense)?$"
+    r"|^pruned_fraction$|^reduction)"
+)
+
+
+def _counter_leaves(obj, path=()):
+    """Yield ``(path, value)`` for every numeric leaf whose key names a
+    deterministic counter."""
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(v, (dict, list)):
+                yield from _counter_leaves(v, path + (k,))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if _COUNTER_KEY.search(k):
+                    yield path + (k,), float(v)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _counter_leaves(v, path + (str(i),))
+
+
+def check_regress(fresh_dir: pathlib.Path, root: pathlib.Path = REPO_ROOT,
+                  rel_tol: float = 0.01) -> list[str]:
+    """Compare fresh counter leaves against the committed records. A missing
+    committed file is an error (the gate exists to protect it); a counter
+    present on one side only is an error (schema drift is a regression too)."""
+    errors = []
+    for name in _REGRESS_FILES:
+        committed_path, fresh_path = root / name, fresh_dir / name
+        if not committed_path.exists():
+            errors.append(f"{name}: no committed record at {committed_path}")
+            continue
+        committed = dict(_counter_leaves(json.loads(committed_path.read_text())))
+        fresh = dict(_counter_leaves(json.loads(fresh_path.read_text())))
+        for path in sorted(set(committed) | set(fresh)):
+            dotted = ".".join(path)
+            if path not in committed:
+                errors.append(f"{name}: {dotted} only in fresh run")
+            elif path not in fresh:
+                errors.append(f"{name}: {dotted} only in committed record")
+            else:
+                want, got = committed[path], fresh[path]
+                if abs(got - want) > rel_tol * max(abs(want), 1.0):
+                    errors.append(
+                        f"{name}: {dotted} moved {want} -> {got} "
+                        f"(>{rel_tol:.0%} drift)"
+                    )
+    return errors
+
+
+def _run_check_regress() -> None:
+    from benchmarks import bench_kernels, bench_lloyd
+
+    with tempfile.TemporaryDirectory() as td:
+        tdp = pathlib.Path(td)
+        bench_lloyd.main(["--out", str(tdp / "BENCH_lloyd.json")])
+        bench_kernels.main(["--out", str(tdp / "BENCH_kernels.json")])
+        errors = check_regress(tdp)
+    if errors:
+        raise SystemExit(
+            "--check-regress: deterministic counters drifted from the "
+            "committed BENCH records:\n  " + "\n  ".join(errors)
+            + "\n(an intentional perf change must re-commit the records)"
+        )
+    print("# --check-regress: deterministic counters within 1% of committed")
 
 
 def check_bench_schema(root: pathlib.Path = REPO_ROOT) -> list[str]:
@@ -83,7 +171,17 @@ def main() -> None:
         "--wallclock", action="store_true",
         help="run only the wall-clock seam harness + the schema check",
     )
+    ap.add_argument(
+        "--check-regress", action="store_true",
+        help="re-run bench_lloyd/bench_kernels and fail if their "
+             "deterministic counters drift >1%% from the committed "
+             "BENCH_*.json records",
+    )
     args = ap.parse_args()
+
+    if args.check_regress:
+        _run_check_regress()
+        return
 
     if args.wallclock:
         from benchmarks import bench_wallclock

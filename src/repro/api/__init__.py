@@ -18,7 +18,7 @@ from repro.api.engines import (
 )
 from repro.api.estimator import BWKM, DEFAULT_CHUNK_SIZE
 from repro.api.inits import InitStrategy, list_inits, register_init, resolve_init
-from repro.api.result import FitResult, TupleFitResult, from_driver_result
+from repro.api.result import FitResult, from_driver_result
 from repro.service.session import BWKMSession, ServiceConfig
 
 __all__ = [
@@ -29,7 +29,6 @@ __all__ = [
     "FitResult",
     "InitStrategy",
     "ServiceConfig",
-    "TupleFitResult",
     "from_driver_result",
     "get_engine",
     "list_engines",

@@ -1,11 +1,11 @@
 """Engine registry + auto-selection for the estimator facade (DESIGN.md §9).
 
-One BWKM algorithm, three execution engines:
+One BWKM algorithm (``engine.driver.fit_plane``), three execution planes:
 
-  * ``incore``      — ``core.bwkm.fit_incore`` over a resident array.
-  * ``streaming``   — ``streaming.fit_streaming`` over a ChunkSource;
-                      O(chunk + M·d) device memory, multi-pass.
-  * ``distributed`` — ``distributed.fit_distributed`` over mesh-sharded
+  * ``incore``      — ``engine.incore.InCorePlane`` over a resident array.
+  * ``streaming``   — ``engine.streaming.StreamingPlane`` over a
+                      ChunkSource; O(chunk + M·d) device memory, multi-pass.
+  * ``distributed`` — ``engine.sharded.ShardedPlane`` over mesh-sharded
                       points (degenerates to single-device with no mesh).
 
 Selection rules for ``engine="auto"`` (docs/adr/0002-estimator-api.md):
@@ -119,19 +119,24 @@ def _fit_incore(key, data, config, *, chunk_size, trace_centroids, checkpoint_di
     del chunk_size
     _warn_dropped("incore", checkpoint_dir=checkpoint_dir,
                   init_sample_size=config.init_sample_size)
-    from repro.core import bwkm as core_bwkm
+    from repro.engine import driver, incore
 
     x = adapters.to_array(data)
-    res = core_bwkm.fit_incore(key, x, config, trace_centroids=trace_centroids)
+    res = driver.fit_plane(
+        key, incore.InCorePlane(x), config, trace_centroids=trace_centroids
+    )
     return from_driver_result(res, "incore")
 
 
 def _fit_streaming(key, data, config, *, chunk_size, trace_centroids, checkpoint_dir):
     _warn_dropped("streaming", checkpoint_dir=checkpoint_dir)
-    from repro.streaming import stream_bwkm
+    from repro.engine import driver, streaming
 
     source = adapters.to_chunk_source(data, chunk_size)
-    res = stream_bwkm.fit_streaming(key, source, config, trace_centroids=trace_centroids)
+    res = driver.fit_plane(
+        key, streaming.StreamingPlane(source), config,
+        trace_centroids=trace_centroids,
+    )
     return from_driver_result(res, "streaming")
 
 
@@ -139,10 +144,11 @@ def _fit_distributed(key, data, config, *, chunk_size, trace_centroids, checkpoi
     del chunk_size
     _warn_dropped("distributed", trace_centroids=trace_centroids,  # keeps no trace
                   init_sample_size=config.init_sample_size)
-    from repro.distributed import dist_bwkm
+    from repro.engine import driver, sharded
 
-    x = dist_bwkm.shard_points(adapters.to_array(data))
-    res = dist_bwkm.fit_distributed(key, x, config, checkpoint_dir=checkpoint_dir)
+    x = sharded.shard_points(adapters.to_array(data))
+    plane = sharded.ShardedPlane(x, checkpoint_dir=checkpoint_dir)
+    res = driver.fit_plane(key, plane, config)
     return from_driver_result(res, "distributed")
 
 

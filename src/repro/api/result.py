@@ -1,7 +1,7 @@
 """Unified fit-result schema for every execution engine (DESIGN.md §9).
 
 Before the estimator facade, each entry point reported results in its own
-shape: ``core.bwkm.fit`` returned a ``BWKMResult``, the streaming driver a
+shape: the in-core driver returned a ``BWKMResult``, the streaming driver a
 ``StreamBWKMResult`` (extra ``stream`` field), and the five baselines bare
 ``(centroids, distances)`` tuples. :class:`FitResult` is the one schema all
 of them now share — the facade, the trade-off benchmark, and the tests can
@@ -15,10 +15,9 @@ conversion from driver-native results is duck-typed.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any
 
-__all__ = ["FitResult", "TupleFitResult", "from_driver_result"]
+__all__ = ["FitResult", "from_driver_result"]
 
 
 @dataclasses.dataclass
@@ -46,34 +45,6 @@ class FitResult:
     def schema(self) -> tuple[str, ...]:
         """Field names every engine agrees on (used by the contract tests)."""
         return tuple(f.name for f in dataclasses.fields(FitResult))
-
-
-class TupleFitResult(FitResult):
-    """Deprecation shim: a :class:`FitResult` that still unpacks like the
-    pre-facade ``(centroids, distances)`` tuple the baselines returned.
-
-    ``c, d = forgy_kmeans(...)`` keeps working but warns; new code reads
-    ``.centroids`` / ``.distances`` like every other engine result.
-    """
-
-    def _warn(self) -> None:
-        warnings.warn(
-            f"tuple access on {self.engine} results is deprecated; use the "
-            "FitResult fields (.centroids, .distances) instead",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-    def __iter__(self):
-        self._warn()
-        return iter((self.centroids, self.distances))
-
-    def __getitem__(self, i):
-        self._warn()
-        return (self.centroids, self.distances)[i]
-
-    def __len__(self) -> int:
-        return 2
 
 
 def from_driver_result(res: Any, engine: str) -> FitResult:

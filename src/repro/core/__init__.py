@@ -1,13 +1,12 @@
 """BWKM core: the paper's contribution as composable JAX modules."""
 
-from repro.core.bwkm import BWKMConfig, BWKMResult, fit, fit_incore
+from repro.core.bwkm import BWKMConfig, BWKMResult, fit_incore
 from repro.core.lloyd import LloydResult
 from repro.core.partition import Partition, create_partition, split_blocks
 
 __all__ = [
     "BWKMConfig",
     "BWKMResult",
-    "fit",  # deprecated alias; fit_incore is the canonical entry point
     "fit_incore",
     "LloydResult",
     "Partition",

@@ -11,9 +11,9 @@
 Every routine returns the unified :class:`repro.api.result.FitResult`
 schema (``centroids``, ``distances``, ``iterations``, ``stop_reason``,
 ``engine="baseline:<name>"``), so the trade-off benchmark consumes one
-schema for every method. The old ``(centroids, distance_computations)``
-tuple unpacking still works through a deprecation shim
-(:class:`~repro.api.result.TupleFitResult`).
+schema for every method. (``result.py`` deliberately imports nothing from
+``repro``, which is why this core module may import it — the one sanctioned
+downward reference, see tools/check_layering.py.)
 """
 
 from __future__ import annotations
@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.result import TupleFitResult
+from repro.api.result import FitResult
 from repro.core import kmeanspp
 from repro.core.lloyd import lloyd, weighted_lloyd
 
@@ -31,7 +31,7 @@ __all__ = ["forgy_kmeans", "kmeanspp_kmeans", "kmc2_kmeans", "minibatch_kmeans",
 
 def _result(name, centroids, distances, *, iterations=0, stop_reason="init-only",
             **metadata):
-    return TupleFitResult(
+    return FitResult(
         centroids=centroids,
         distances=float(distances),
         iterations=int(iterations),

@@ -1,10 +1,13 @@
-"""BWKM — Boundary Weighted K-means (paper Algorithm 5).
+"""BWKM — Boundary Weighted K-means (paper Algorithm 5): in-core entry point.
 
-Host-level driver alternating (i) weighted Lloyd over the current partition's
-representatives with (ii) ε-proportional boundary splitting. All inner steps
-are jitted static-shape programs over the fixed-capacity ``Partition``.
+The algorithm itself — weighted Lloyd over the current partition's
+representatives alternating with ε-proportional boundary splitting, plus
+the Section-2.4.2 stopping criteria — lives ONCE in
+:func:`repro.engine.driver.fit_plane`; this module keeps the shared
+config/result types and the resident-array entry point
+(:func:`fit_incore` = the driver over :class:`repro.engine.incore.InCorePlane`).
 
-Stopping criteria implemented (paper Section 2.4.2):
+Stopping criteria (paper Section 2.4.2):
   * ``boundary-empty``  — F = ∅: every block is well assigned; by Theorem 3
                            the weighted fixed point is a Lloyd fixed point on D.
   * ``distance-budget`` — the practical computational criterion.
@@ -20,14 +23,12 @@ import warnings
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import bounds, init_partition, lloyd, misassignment as mis
-from repro.core import partition as part_mod
+from repro.core import init_partition
 from repro.core.partition import Partition
 from repro.health import RunHealth
 
-__all__ = ["BWKMConfig", "BWKMResult", "fit", "fit_incore", "seed_centroids"]
+__all__ = ["BWKMConfig", "BWKMResult", "fit_incore", "seed_centroids"]
 
 
 def seed_centroids(
@@ -110,141 +111,13 @@ def fit_incore(
     """Run BWKM on ``x [n, d]``. Returns centroids and the audit trail.
 
     This is the in-core engine behind the ``repro.BWKM`` facade; call the
-    facade unless you need driver-native access to the ``Partition``.
+    facade unless you need driver-native access to the ``Partition``. The
+    engine import is deferred — the engine package is layered ABOVE the
+    core primitives (tools/check_layering.py), and this wrapper is the
+    sanctioned upward reference.
     """
-    health = RunHealth()
-    # Quarantine non-finite rows before anything can fold them into sums
-    # (one NaN row would otherwise poison every centroid). The filter is a
-    # deterministic function of the data, so reruns are bit-identical.
-    finite_rows = jnp.all(jnp.isfinite(x), axis=1)
-    n_bad = int(x.shape[0] - jnp.sum(finite_rows))
-    if n_bad:
-        health.quarantined_rows = n_bad
-        x = jnp.asarray(x)[finite_rows]
-        if x.shape[0] == 0:
-            raise ValueError("every input row was non-finite; nothing to cluster")
+    from repro.engine import driver, incore
 
-    n, d = x.shape
-    p = config.resolve(n, d)
-    k = config.k
-
-    key, k_init, k_pp = jax.random.split(key, 3)
-    part = init_partition.build_initial_partition(
-        k_init, x, k, m=p["m"], m_prime=p["m_prime"], s=p["s"], r=p["r"],
-        capacity=p["capacity"],
+    return driver.fit_plane(
+        key, incore.InCorePlane(x), config, trace_centroids=trace_centroids
     )
-    # Init cost (Alg 2): r·s·(K-means++ over ≤m reps) + routing; we charge the
-    # dominant distance term r · s_rounds · m · K the paper bounds in Thm A.3.
-    distances = float(p["r"] * p["s"] * k + p["m"] * k)
-
-    reps, w = part_mod.representatives(part)
-    c = seed_centroids(config.init, k_pp, reps, w, k)
-    distances += float(int(part.n_blocks)) * k  # seeding distance cost
-
-    weighted_errors: list[float] = []
-    n_blocks: list[int] = []
-    boundary_sizes: list[int] = []
-    trace: list[dict] = []
-    stop_reason = "max-iters"
-
-    displacement_eps_w = None
-    if config.displacement_epsilon is not None:
-        l = float(
-            jnp.linalg.norm(jnp.max(x, axis=0) - jnp.min(x, axis=0))
-        )
-        displacement_eps_w = bounds.displacement_threshold(
-            l, n, config.displacement_epsilon
-        )
-
-    it = 0
-    for it in range(1, config.max_iters + 1):
-        res = lloyd.weighted_lloyd(
-            reps, w, c,
-            max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
-            prune=config.prune,
-        )
-        c = res.centroids
-        distances += float(res.distances)
-        weighted_errors.append(float(res.error))
-        n_blocks.append(int(part.n_blocks))
-
-        eps = mis.misassignment(part, res.d1, res.d2)
-        f_size = int(jnp.sum(eps > 0))
-        boundary_sizes.append(f_size)
-        if trace_centroids:
-            trace.append(
-                {
-                    "iteration": it,
-                    "distances": distances,
-                    "centroids": jax.device_get(c),
-                    "n_blocks": int(part.n_blocks),
-                    "boundary": f_size,
-                }
-            )
-
-        # --- stopping criteria (Section 2.4.2) ---
-        if f_size == 0:
-            stop_reason = "boundary-empty"  # Theorem 3 applies
-            break
-        if config.distance_budget is not None and distances >= config.distance_budget:
-            stop_reason = "distance-budget"
-            break
-        if (
-            displacement_eps_w is not None
-            and it > 1
-            and float(res.max_shift) <= displacement_eps_w
-        ):
-            stop_reason = "displacement"
-            break
-        if config.gap_bound_threshold is not None:
-            gap = float(bounds.thm2_gap_bound(part, eps, res.d1))
-            if gap <= config.gap_bound_threshold:
-                stop_reason = "gap-bound"
-                break
-        free_rows = p["capacity"] - int(part.n_blocks)
-        if free_rows <= 0:
-            stop_reason = "capacity"
-            break
-
-        # --- Step 3: sample |F| blocks ∝ ε with replacement, split, retighten ---
-        key, k_cut = jax.random.split(key)
-        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
-        part = part_mod.split_blocks(part, x, chosen)
-        reps, w = part_mod.representatives(part)
-
-    return BWKMResult(
-        centroids=c,
-        partition=part,
-        iterations=it,
-        distances=distances,
-        weighted_errors=weighted_errors,
-        n_blocks=n_blocks,
-        boundary_sizes=boundary_sizes,
-        stop_reason=stop_reason,
-        trace=trace,
-        health=health,
-    )
-
-
-def fit(
-    key: jax.Array,
-    x: jax.Array,
-    config: BWKMConfig,
-    *,
-    trace_centroids: bool = False,
-) -> BWKMResult:
-    """Deprecated alias of :func:`fit_incore` — use ``repro.BWKM`` instead.
-
-    Warns once per process (``repro._warnings``): repeated-fit loops hit
-    this shim per call and a per-call warning is pure noise.
-    """
-    from repro import _warnings
-
-    _warnings.warn_once(
-        "core.bwkm.fit",
-        "core.bwkm.fit is deprecated; use repro.BWKM(...).fit(x) "
-        "(engine='incore') or core.bwkm.fit_incore",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return fit_incore(key, x, config, trace_centroids=trace_centroids)

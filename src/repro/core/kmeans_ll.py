@@ -12,13 +12,17 @@ it, and the existing :func:`repro.core.kmeanspp.weighted_kmeanspp` reduces
 the weighted candidates to the K seeds — the same reduction the paper's
 Algorithm 5 Step 1 runs over partition representatives.
 
-Every data pass dispatches through the chunk-shaped kernel seam
-``kernels.ops.min_sqdist_update`` (ADR 0005): one HBM read of x per round
-folds the round's new candidates into the running min-d² and produces the
-cost ``φ`` that normalises the next round's Bernoulli draws. The streaming
-(`repro.streaming.kmeans_ll`) and distributed (`repro.distributed.
-dist_kmeans_ll`) drivers run the identical round structure over chunks and
-shards respectively.
+The oversampling loop itself lives ONCE in
+:func:`repro.engine.driver.plane_kmeans_parallel`; this module is the
+resident-array entry point (the driver over
+:class:`repro.engine.incore.InCoreLLSession`). Every data pass dispatches
+through the chunk-shaped kernel seam ``kernels.ops.min_sqdist_update``
+(ADR 0005): one HBM read of x per round folds the round's new candidates
+into the running min-d² and produces the cost ``φ`` that normalises the
+next round's Bernoulli draws. The streaming
+(``repro.streaming.kmeans_ll``) and distributed
+(``repro.distributed.dist_kmeans_ll``) entry points run the SAME driver
+loop over their own sessions.
 
 Static-shape contract: the per-round Bernoulli draw count is random, so
 each round's accepted rows are packed into a fixed-capacity batch of
@@ -31,13 +35,11 @@ weighting pass can never assign points to them.
 
 from __future__ import annotations
 
-from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import kmeanspp
 from repro.kernels import ops
 
 __all__ = ["KMeansLLResult", "default_oversampling", "kmeans_parallel"]
@@ -61,57 +63,6 @@ def default_oversampling(k: int) -> int:
     return 2 * k
 
 
-@partial(jax.jit, static_argnames=("k", "l", "rounds", "cap_round", "impl"))
-def _kmeans_ll(key, x, w, *, k, l, rounds, cap_round, impl):
-    n, d = x.shape
-    w = w.astype(jnp.float32)
-    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
-    keys = jax.random.split(key, rounds + 2)
-
-    cap_total = 1 + rounds * cap_round
-    cand = jnp.full((cap_total, d), _FAR, x.dtype)
-    cvalid = jnp.zeros((cap_total,), jnp.float32).at[0].set(1.0)
-    cand = cand.at[0].set(x[jax.random.categorical(keys[0], logw)])
-
-    # seed fold: min-d² and φ w.r.t. the single first candidate
-    out = ops.min_sqdist_update(
-        x, w, cand[:1], cvalid[:1], jnp.full((n,), _BIG, jnp.float32), impl=impl
-    )
-    mind2, phi, n_dist = out.mind2, out.cost, out.n_dist
-
-    for rd in range(rounds):
-        k_draw = keys[rd + 1]
-        p = jnp.minimum(1.0, l * w * mind2 / jnp.maximum(phi, 1e-30))
-        u = jax.random.uniform(k_draw, (n,))
-        accept = (u < p) & (w > 0)
-        # pack accepted rows into the round's fixed-capacity batch in
-        # acceptance-priority order: the smallest uniforms are the draws any
-        # smaller acceptance probability would also have kept
-        neg, idx = jax.lax.top_k(-jnp.where(accept, u, jnp.inf), cap_round)
-        newv = jnp.isfinite(neg).astype(jnp.float32)
-        newc = x[idx]
-        out = ops.min_sqdist_update(x, w, newc, newv, mind2, impl=impl)
-        mind2, phi = out.mind2, out.cost
-        n_dist = n_dist + out.n_dist
-        start = 1 + rd * cap_round
-        cand = cand.at[start : start + cap_round].set(
-            jnp.where(newv[:, None] > 0, newc, _FAR)
-        )
-        cvalid = cvalid.at[start : start + cap_round].set(newv)
-
-    # weighting pass: each candidate inherits the total weight of the points
-    # nearest to it (its own point included, so every valid candidate has
-    # positive weight); parked rows attract nothing and weigh 0
-    au = ops.assign_update(x, w, cand, impl=impl)
-    n_valid = jnp.sum(cvalid)
-    n_active = jnp.sum((w > 0).astype(jnp.float32))
-    n_dist = n_dist + n_active * n_valid  # the pass needs valid columns only
-    n_dist = n_dist + n_valid * max(k - 1, 1)  # K-means++ over the candidates
-
-    c = kmeanspp.weighted_kmeanspp(keys[-1], cand, au.counts, k)
-    return c, n_valid, n_dist
-
-
 def kmeans_parallel(
     key: jax.Array,
     x: jax.Array,
@@ -133,20 +84,23 @@ def kmeans_parallel(
     analytic ``O(log φ)``). Returns the ``[k, d]`` seeds, or the full
     :class:`KMeansLLResult` when ``return_info`` is set.
     """
+    from repro.engine import driver
+    from repro.engine.incore import InCoreLLSession
+
     n = x.shape[0]
     if w is None:
         w = jnp.ones((n,), jnp.float32)
-    l = int(oversampling) if oversampling is not None else default_oversampling(k)
-    r = int(rounds) if rounds is not None else 5
-    if l < 1 or r < 1:
-        raise ValueError(f"oversampling and rounds must be >= 1, got {l}, {r}")
-    cap_round = max(8, -(-2 * l // 8) * 8)
-    c, n_valid, n_dist = _kmeans_ll(
+    l, r, cap_round = driver.resolve_ll_params(k, oversampling, rounds)  # noqa: E741
+    sess = InCoreLLSession(
         key, x, w, k=k, l=l, rounds=r, cap_round=cap_round,
         impl=ops.resolve_impl(impl),
     )
+    out = driver.plane_kmeans_parallel(sess, rounds=r)
     if not return_info:
-        return c
+        return out["centroids"]
     return KMeansLLResult(
-        centroids=c, n_candidates=n_valid, distances=n_dist, passes=r + 2
+        centroids=out["centroids"],
+        n_candidates=out["n_candidates"],
+        distances=out["distances"],
+        passes=out["passes"],
     )

@@ -165,8 +165,8 @@ def route_into_boxes(
     """Assign every point to the box with the smallest *clipped L∞* distance:
     containment for points inside some box, nearest box for out-of-sample
     tails. ``O(n·M)`` elementwise — the one routing rule shared by the
-    streaming pass (`stream_bwkm._box_route_stats`), the distributed shard
-    body (`dist_bwkm._route_into_boxes`), and the online service's
+    streaming pass (`engine.streaming._box_route_stats`), the sharded plane
+    (`engine.sharded._route_into_boxes`), and the online service's
     mini-batch merge (`service.session`)."""
     lo_ = jnp.where(active[:, None], lo, _BIG)
     hi_ = jnp.where(active[:, None], hi, -_BIG)

@@ -1,299 +1,49 @@
-"""Distributed BWKM: the paper's algorithm on the production mesh.
+"""Distributed BWKM entry point: the paper's algorithm on the production mesh.
+
+The outer loop is the shared :func:`repro.engine.driver.fit_plane` over
+:class:`repro.engine.sharded.ShardedPlane`; the mesh dialect of the data
+passes (sanitizing ``shard_map`` stats bodies, drop-and-reweight, the
+sample→build→broadcast init) lives in :mod:`repro.engine.sharded` and is
+re-exported here for callers that reach for the distributed layer directly.
 
 Layout (docs/DESIGN.md §3, fault tolerance §5):
   * points      ``x [n, d]``   — rows over ``(pod, data)``, features
-                                  optionally over ``model`` (distances
-                                  decompose additively over d → one psum).
+                                  optionally over ``model``.
   * block stats ``[M, ·]``     — partial per shard, ``psum`` over the data
                                   axes; exact, since sums/counts/min/max are
                                   associative-commutative.
-  * representatives / centroids — tiny (M ≤ thousands): replicated compute,
-                                  identical across shards by construction
-                                  (same psum'd inputs + same PRNG key).
+  * representatives / centroids — tiny: replicated compute, identical across
+                                  shards by construction.
 
 Points never leave their shard; per-iteration traffic is O(M·d + M·K)
-statistics. The host driver mirrors ``core.bwkm.fit`` step for step, so the
-algorithm is the paper's Algorithm 5 verbatim.
-
-Fault tolerance: the driver state (centroids, block boxes, iteration,
-distance budget) is checkpointed via ``train.checkpoint`` every round;
-``block_id`` is *not* checkpointed — it is recomputed from the block boxes
-in O(n·log M) on restart (cheaper than storing n int32s, and correct on any
-mesh shape → elastic restart).
+statistics.
 """
 
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import NamedTuple, Sequence
+from typing import Sequence
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bwkm as core_bwkm
+from repro.engine import driver as engine_driver
+from repro.engine.sharded import (  # noqa: F401  (re-exported surface)
+    DistLloydResult,
+    ShardLossError,
+    ShardedPlane,
+    dist_assign_step,
+    dist_recompute_stats,
+    dist_route_points,
+    n_data_shards,
+    shard_points,
+)
+from repro.engine.sharded import ShardedLloydSession
 from repro.core import lloyd as lloyd_mod
-from repro.core import misassignment as mis
-from repro.core import partition as part_mod
-from repro.core.lloyd import weighted_lloyd
-from repro.core.partition import Partition
-from repro.distributed import sharding as sh
-from repro.health import RunHealth
+from repro.kernels import ops
 
 __all__ = ["ShardLossError", "shard_points", "dist_recompute_stats",
            "dist_route_points", "dist_assign_step", "dist_lloyd",
-           "DistLloydResult", "fit", "fit_distributed", "n_data_shards"]
-
-_BIG = 3.0e38
-
-
-class ShardLossError(RuntimeError):
-    """Shard-stat losses in one round exceeded ``max_shard_loss_frac`` —
-    drop-and-reweight would no longer be a defensible approximation, so the
-    round aborts instead of silently fitting a sliver of the data."""
-
-
-def _data_axes():
-    return sh.batch_axes()
-
-
-def n_data_shards() -> int:
-    """Number of data-parallel shards on the current mesh (1 when unmeshed)."""
-    return math.prod(sh.axis_size(a) for a in sh.batch_axes()) or 1
-
-
-def shard_points(x: jax.Array) -> jax.Array:
-    """Place the dataset: rows over (pod, data), features over model."""
-    mesh = sh.current_mesh()
-    if mesh is None:
-        return x
-    return jax.device_put(
-        x, NamedSharding(mesh, sh.logical_to_spec(("batch", "tensor"), x.shape))
-    )
-
-
-# ------------------------------------------------------------- shard_map ops
-def _stats_body(x_loc, bid_loc, alive_loc, *, m):
-    """Local ``partition.block_stats`` + cross-shard combine. The psum/pmin/
-    pmax quartet is exactly ``combine_block_stats`` folded over the data
-    axes — the same associative statistics the streaming driver folds over
-    chunks (docs/DESIGN.md §6.4).
-
-    Fault tolerance (DESIGN.md §5): rows with ``alive == 0`` (a shard whose
-    stats are declared lost for this round) are routed to the scratch
-    segment, and a shard whose local stats come back non-finite (a NaN row
-    poisoned its fold) zeroes its whole contribution before the psum — both
-    read as "that shard's BlockStats are missing", and the driver reweights
-    the surviving mass. The replicated ``ok_shards`` count tells the driver
-    how many shards actually contributed finite stats.
-    """
-    st = part_mod.block_stats(x_loc, bid_loc, m, valid=alive_loc > 0)
-    ok = jnp.all(jnp.isfinite(st.psum)) & jnp.all(jnp.isfinite(st.count))
-    psum_l = jnp.where(ok, st.psum, 0.0)
-    count_l = jnp.where(ok, st.count, 0.0)
-    lo_l = jnp.where(ok, st.lo, _BIG)
-    hi_l = jnp.where(ok, st.hi, -_BIG)
-    axes = _data_axes()
-    psum_ = jax.lax.psum(psum_l, axes)
-    count = jax.lax.psum(count_l, axes)
-    lo = jax.lax.pmin(lo_l, axes)
-    hi = jax.lax.pmax(hi_l, axes)
-    ok_shards = jax.lax.psum(ok.astype(jnp.float32), axes)
-    empty = count <= 0
-    lo = jnp.where(empty[:, None], _BIG, lo)
-    hi = jnp.where(empty[:, None], -_BIG, hi)
-    return psum_, count, lo, hi, ok_shards
-
-
-def _recompute_stats_ok(
-    part: Partition,
-    x: jax.Array,
-    bid: jax.Array,
-    alive_rows: jax.Array | None = None,
-) -> tuple[Partition, int]:
-    """:func:`dist_recompute_stats` plus the number of shards whose local
-    stats survived finite (the drop-and-reweight driver needs it; plain
-    callers don't)."""
-    mesh = sh.current_mesh()
-    m = part.capacity
-    n = x.shape[0]
-    if mesh is None:
-        valid = (alive_rows > 0) if alive_rows is not None else None
-        st = part_mod.block_stats(x, bid, m, valid=valid)
-        ok = bool(jnp.all(jnp.isfinite(st.psum)) & jnp.all(jnp.isfinite(st.count)))
-        if not ok:
-            st = st._replace(psum=jnp.zeros_like(st.psum),
-                             count=jnp.zeros_like(st.count),
-                             lo=jnp.full_like(st.lo, _BIG),
-                             hi=jnp.full_like(st.hi, -_BIG))
-        return (
-            part._replace(psum=st.psum, count=st.count, lo=st.lo, hi=st.hi,
-                          block_id=bid),
-            int(ok),
-        )
-    d = x.shape[1]
-    row_spec = sh.logical_to_spec(("batch", "tensor"), (n, d))
-    bid_spec = sh.logical_to_spec(("batch",), (n,))
-    if alive_rows is None:
-        alive_rows = jnp.ones(n, jnp.float32)
-    fn = sh.shard_map(
-        partial(_stats_body, m=m),
-        mesh=mesh,
-        in_specs=(row_spec, bid_spec, bid_spec),
-        out_specs=(
-            P(None, row_spec[1]), P(None), P(None, row_spec[1]),
-            P(None, row_spec[1]), P(),
-        ),
-        check_vma=False,
-    )
-    psum_, count, lo, hi, ok_shards = fn(x, bid, jnp.asarray(alive_rows, jnp.float32))
-    part = part._replace(psum=psum_, count=count, lo=lo, hi=hi, block_id=bid)
-    return part, int(ok_shards)
-
-
-def dist_recompute_stats(
-    part: Partition,
-    x: jax.Array,
-    bid: jax.Array,
-    alive_rows: jax.Array | None = None,
-) -> Partition:
-    """psum-combined (Σx, count, lo, hi) over sharded points. ``alive_rows``
-    (f32 0/1 per row, sharded like ``bid``) drops rows from the fold — the
-    row-level encoding of "this shard's stats are lost this round"."""
-    part, _ = _recompute_stats_ok(part, x, bid, alive_rows)
-    return part
-
-
-def _route_body(x_loc, bid_loc, fits, axis, mid, right_row):
-    plan = part_mod.SplitPlan(fits, axis, mid, right_row, jnp.sum(fits))
-    return part_mod.route_split(x_loc, bid_loc, plan)
-
-
-def dist_route_points(
-    x: jax.Array, bid: jax.Array, fits, axis, mid, right_row
-) -> jax.Array:
-    """Repair local block ids after a split round — ``partition.route_split``
-    applied per shard (pure local gather+compare).
-
-    Feature sharding caveat: the split coordinate lives on one model shard;
-    we broadcast the needed column via the replicated-stat path (axis/mid are
-    replicated; x columns are gathered only for the split axes).
-    """
-    mesh = sh.current_mesh()
-    if mesh is None:
-        return _route_body(x, bid, fits, axis, mid, right_row)
-    n, d = x.shape
-    row_spec = sh.logical_to_spec(("batch", None), (n, d))  # gather features
-    bid_spec = sh.logical_to_spec(("batch",), (n,))
-    fn = sh.shard_map(
-        _route_body,
-        mesh=mesh,
-        in_specs=(row_spec, bid_spec, P(None), P(None), P(None), P(None)),
-        out_specs=bid_spec,
-        check_vma=False,
-    )
-    return fn(x, bid, fits, axis, mid, right_row)
-
-
-def _assign_body(x_loc, c, w_loc, *, impl):
-    """One full-dataset assignment + partial cluster stats (for the
-    distributed Lloyd baseline / final refinement). The per-shard body is
-    the same fused ``kernels.ops.assign_update`` pass the in-core Lloyd and
-    the streaming chunk fold run; the psum quartet is the cross-shard
-    combine."""
-    from repro.kernels import ops
-
-    fu = ops.assign_update(x_loc, w_loc, c, impl=impl)
-    axes = _data_axes()
-    return (
-        jax.lax.psum(fu.sums, axes),
-        jax.lax.psum(fu.counts, axes),
-        jax.lax.psum(fu.err, axes),
-        fu.assign,
-    )
-
-
-def dist_assign_step(x: jax.Array, c: jax.Array, w: jax.Array | None = None):
-    """Distributed Lloyd iteration over the full dataset (the scalable
-    baseline the paper compares against): returns (new_c, error)."""
-    from repro.kernels import ops
-
-    mesh = sh.current_mesh()
-    n, d = x.shape
-    impl = ops.resolve_impl(None)
-    w = jnp.ones(n, jnp.float32) if w is None else w
-    if mesh is None:
-        sums, counts, err, _ = _assign_body(x, c, w, impl=impl)
-    else:
-        row_spec = sh.logical_to_spec(("batch", None), (n, d))
-        fn = sh.shard_map(
-            partial(_assign_body, impl=impl),
-            mesh=mesh,
-            in_specs=(row_spec, P(None, None), sh.logical_to_spec(("batch",), (n,))),
-            out_specs=(P(None, None), P(None), P(), sh.logical_to_spec(("batch",), (n,))),
-            check_vma=False,
-        )
-        sums, counts, err, _ = fn(x, c, w)
-    new_c = jnp.where(
-        (counts > 0)[:, None], sums / jnp.maximum(counts, 1e-30)[:, None], c
-    )
-    return new_c, err
-
-
-# ---------------------------------------- pruned distributed Lloyd (ADR 0004)
-def _dense_full_body(x_loc, c, w_loc, *, impl):
-    """Seeding pass for :func:`dist_lloyd`: the fused dense pass plus the
-    per-shard bound state (sqrt of the exact top-2) and the Σ w‖x‖² term of
-    the algebraic error identity. Stats/err/w2/n_dist psum; per-row state
-    stays shard-local."""
-    from repro.kernels import ops
-
-    fu = ops.assign_update(x_loc, w_loc, c, impl=impl)
-    axes = _data_axes()
-    w2 = jnp.sum(w_loc * jnp.sum(x_loc.astype(jnp.float32) ** 2, axis=-1))
-    return (
-        jax.lax.psum(fu.sums, axes),
-        jax.lax.psum(fu.counts, axes),
-        jax.lax.psum(fu.err, axes),
-        jax.lax.psum(fu.n_dist, axes),
-        jax.lax.psum(w2, axes),
-        fu.assign,
-        jnp.sqrt(jnp.maximum(fu.d1, 0.0)),
-        jnp.sqrt(jnp.maximum(fu.d2, 0.0)),
-    )
-
-
-def _pruned_body(x_loc, c_new, w_loc, a_loc, ub_loc, lb_loc, drift, *, impl):
-    """One pruned Lloyd iteration per shard: the drift vector arrives
-    replicated (it derives from the psum'd statistics, so every shard
-    computes the identical centroids and drift), bounds update locally,
-    only unsettled rows rescan, and the composed-assignment statistics
-    psum back — points never leave their shard, per-iteration traffic stays
-    O(K·d)."""
-    from repro.kernels import ops
-
-    ub, lb = lloyd_mod.drift_bound_update(ub_loc, lb_loc, a_loc, drift)
-    active = ub >= lb
-    fu = ops.assign_update_pruned(x_loc, w_loc, c_new, a_loc, active, impl=impl)
-    ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
-    lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
-    axes = _data_axes()
-    return (
-        jax.lax.psum(fu.sums, axes),
-        jax.lax.psum(fu.counts, axes),
-        jax.lax.psum(fu.n_dist, axes),
-        fu.assign,
-        ub,
-        lb,
-    )
-
-
-class DistLloydResult(NamedTuple):
-    centroids: jax.Array  # [K, d] replicated
-    error: float  # exact weighted error at the final centroids
-    iters: int
-    distances: float  # kernel-reported, summed over shards
+           "DistLloydResult", "fit_distributed", "n_data_shards"]
 
 
 def dist_lloyd(
@@ -308,144 +58,22 @@ def dist_lloyd(
 ) -> DistLloydResult:
     """Full-dataset distributed Lloyd with drift-bound pruning (ADR 0004).
 
-    The sharded analogue of ``core.lloyd.weighted_lloyd``'s pruned loop:
-    per-row (assignment, upper, lower) bound state lives sharded alongside
-    the points across iterations, the drift vector is replicated for free
-    (centroids are computed from psum'd statistics), and each iteration
-    psums the composed-assignment statistics plus the kernel-reported
-    distance count. ``prune=False`` degrades to iterated
+    The shared :func:`repro.engine.driver.plane_lloyd` loop over the sharded
+    session: per-row (assignment, upper, lower) bound state lives sharded
+    alongside the points across iterations, the drift vector is replicated
+    for free (centroids are computed from psum'd statistics), and each
+    iteration psums the composed-assignment statistics plus the
+    kernel-reported distance count. ``prune=False`` degrades to iterated
     :func:`dist_assign_step` semantics.
     """
-    from repro.kernels import ops
-
-    mesh = sh.current_mesh()
-    n, d = x.shape
-    k = c.shape[0]
-    impl = ops.resolve_impl(impl)
-    prune = lloyd_mod.resolve_prune(prune)
-    w = jnp.ones(n, jnp.float32) if w is None else w.astype(jnp.float32)
-
-    row_spec = sh.logical_to_spec(("batch", None), (n, d))
-    vec_spec = sh.logical_to_spec(("batch",), (n,))
-
-    if mesh is None:
-        seed = partial(_dense_full_body, impl=impl)
-        step = partial(_pruned_body, impl=impl)
-        dense_step = partial(_assign_body, impl=impl)
-    else:
-        seed = sh.shard_map(
-            partial(_dense_full_body, impl=impl),
-            mesh=mesh,
-            in_specs=(row_spec, P(None, None), vec_spec),
-            out_specs=(P(None, None), P(None), P(), P(), P(),
-                       vec_spec, vec_spec, vec_spec),
-            check_vma=False,
-        )
-        step = sh.shard_map(
-            partial(_pruned_body, impl=impl),
-            mesh=mesh,
-            in_specs=(row_spec, P(None, None), vec_spec, vec_spec, vec_spec,
-                      vec_spec, P(None)),
-            out_specs=(P(None, None), P(None), P(), vec_spec, vec_spec,
-                       vec_spec),
-            check_vma=False,
-        )
-        dense_step = sh.shard_map(
-            partial(_assign_body, impl=impl),
-            mesh=mesh,
-            in_specs=(row_spec, P(None, None), vec_spec),
-            out_specs=(P(None, None), P(None), P(), vec_spec),
-            check_vma=False,
-        )
-
-    sums, counts, err, n_dist, w2sum, assign, ub, lb = seed(x, c, w)
-    distances = float(n_dist)
-    prev_err = jnp.inf
-    it = 0
-    while it < max_iters and abs(float(prev_err) - float(err)) > (
-        epsilon * max(float(err), 1e-30)
-    ):
-        c_new = lloyd_mod._next_centroids(sums, counts, c)
-        drift = jnp.linalg.norm(c_new - c, axis=-1)
-        if prune:
-            sums, counts, n_dist, assign, ub, lb = step(
-                x, c_new, w, assign, ub, lb, drift
-            )
-        else:
-            sums, counts, _, assign = dense_step(x, c_new, w)
-            n_dist = jnp.sum((w > 0).astype(jnp.float32)) * k
-        c = c_new
-        prev_err, err = err, lloyd_mod.stats_error(w2sum, c_new, sums, counts)
-        distances += float(n_dist)
-        it += 1
-
-    return DistLloydResult(
-        centroids=c, error=float(err), iters=it, distances=distances
+    sess = ShardedLloydSession(
+        x, w, k=c.shape[0],
+        impl=ops.resolve_impl(impl), prune=lloyd_mod.resolve_prune(prune),
     )
-
-
-# ------------------------------------------------------------------ driver
-def _alive_mask_for(
-    n: int, n_shards: int, lost: Sequence[int]
-) -> jax.Array | None:
-    """f32 row mask zeroing the contiguous row blocks of the lost shards
-    (``shard_points`` places rows contiguously over the data axes)."""
-    if not lost:
-        return None
-    # Same geometry as repro.testing.faults.shard_loss_rows_mask, inlined so
-    # the production driver does not import the test harness.
-    if n % n_shards != 0:
-        raise ValueError(f"n={n} not divisible by n_shards={n_shards}")
-    import numpy as np
-
-    mask = np.ones(n, np.float32)
-    per = n // n_shards
-    for s in lost:
-        if not 0 <= int(s) < n_shards:
-            raise ValueError(f"shard {s} out of range [0, {n_shards})")
-        mask[int(s) * per : (int(s) + 1) * per] = 0.0
-    return jnp.asarray(mask)
-
-
-def _apply_shard_loss(
-    part: Partition,
-    *,
-    n: int,
-    n_ok: int,
-    n_shards: int,
-    n_injected: int,
-    health: RunHealth,
-    max_shard_loss_frac: float,
-    round_index: int,
-) -> Partition:
-    """Round-level drop-and-reweight (DESIGN.md §5): if the recomputed stats
-    are missing mass (injected shard loss, or shards whose local stats went
-    non-finite), scale ``psum``/``count`` of the survivors by ``n / Σcount``
-    so total mass is restored. The uniform scale leaves every representative
-    mean ``psum/count`` and all weight *ratios* unchanged — weighted Lloyd's
-    fixed points on the surviving blocks are invariant — while keeping the
-    reported weighted errors on the same scale as a lossless run. Aborts
-    with :class:`ShardLossError` when the lost fraction exceeds
-    ``max_shard_loss_frac``.
-    """
-    total = float(jnp.sum(part.count))
-    lost_frac = max(0.0, 1.0 - total / float(n))
-    n_lost = n_injected + max(0, n_shards - n_ok - n_injected)
-    if n_lost == 0 and lost_frac <= 1e-6:
-        return part
-    if lost_frac > max_shard_loss_frac:
-        raise ShardLossError(
-            f"round {round_index}: lost {lost_frac:.1%} of the data mass "
-            f"({n_lost} of {n_shards} shards) — exceeds "
-            f"max_shard_loss_frac={max_shard_loss_frac:.1%}; aborting rather "
-            "than fitting the remnant"
-        )
-    scale = float(n) / max(total, 1e-30)
-    part = part._replace(psum=part.psum * scale, count=part.count * scale)
-    health.lost_shards += n_lost
-    health.degraded_rounds += 1
-    health.lost_mass_frac = max(health.lost_mass_frac, lost_frac)
-    return part
+    c, err, it, distances, _ = engine_driver.plane_lloyd(
+        sess, c, max_iters=max_iters, epsilon=epsilon
+    )
+    return DistLloydResult(centroids=c, error=err, iters=it, distances=distances)
 
 
 def fit_distributed(
@@ -473,162 +101,10 @@ def fit_distributed(
     more than ``max_shard_loss_frac`` of the data mass. The returned
     ``BWKMResult.health`` ledger records shards lost and degraded rounds.
     """
-    n, d = x.shape
-    p = config.resolve(n, d)
-    k = config.k
-    mesh = sh.current_mesh()
-    health = RunHealth()
-    n_shards = n_data_shards()
-    faults = {int(r): tuple(s) for r, s in (shard_faults or {}).items()}
-
-    def _stats_round(part_in, bid_in, round_index):
-        lost = faults.get(round_index, ())
-        alive = _alive_mask_for(n, n_shards, lost)
-        part_out, n_ok = _recompute_stats_ok(part_in, x, bid_in, alive)
-        return _apply_shard_loss(
-            part_out, n=n, n_ok=n_ok, n_shards=n_shards, n_injected=len(lost),
-            health=health, max_shard_loss_frac=max_shard_loss_frac,
-            round_index=round_index,
-        )
-
-    # --- initial partition: Algorithm 2 on a host-gathered SAMPLE (the
-    # paper's init only ever touches O(r·s) points; gathering the sample is
-    # O(s·d), not O(n·d)), then broadcast boxes + distributed re-route.
-    key, k_init, k_pp, k_s = jax.random.split(key, 4)
-    s_init = min(n, max(p["s"] * p["r"] * 4, 4 * p["m"]))
-    idx = jax.random.choice(k_s, n, shape=(s_init,), replace=False)
-    x_sample = jax.device_get(x[jnp.sort(idx)])  # gather once, small
-    sample_part = (
-        core_bwkm.init_partition.build_initial_partition(
-            k_init, jnp.asarray(x_sample), k,
-            m=p["m"], m_prime=p["m_prime"], s=min(p["s"], s_init), r=p["r"],
-            capacity=p["capacity"],
-        )
+    plane = ShardedPlane(
+        x,
+        checkpoint_dir=checkpoint_dir,
+        shard_faults=shard_faults,
+        max_shard_loss_frac=max_shard_loss_frac,
     )
-    # route the full dataset through the sample-built boxes: nearest box by
-    # containment (boxes partition the sample's bounding box; clip points)
-    bid = _route_into_boxes(x, sample_part)
-    part = _stats_round(sample_part, bid, 0)
-
-    reps, w = part_mod.representatives(part)
-    c = core_bwkm.seed_centroids(config.init, k_pp, reps, w, k)
-    distances = float(p["r"] * p["s"] * k + p["m"] * k + int(part.n_blocks) * k)
-
-    weighted_errors: list[float] = []
-    n_blocks: list[int] = []
-    boundary_sizes: list[int] = []
-    stop_reason = "max-iters"
-    it = 0
-    for it in range(1, config.max_iters + 1):
-        res = weighted_lloyd(
-            reps, w, c, max_iters=config.lloyd_max_iters,
-            epsilon=config.lloyd_epsilon, prune=config.prune,
-        )
-        c = res.centroids
-        distances += float(res.distances)
-        weighted_errors.append(float(res.error))
-        n_blocks.append(int(part.n_blocks))
-
-        eps = mis.misassignment(part, res.d1, res.d2)
-        f_size = int(jnp.sum(eps > 0))
-        boundary_sizes.append(f_size)
-
-        if checkpoint_dir is not None:
-            from repro.train import checkpoint as ckpt
-
-            ckpt.save(
-                checkpoint_dir, it,
-                {"centroids": c, "boxes": {"lo": part.lo, "hi": part.hi,
-                                           "active": part.active,
-                                           "n_blocks": part.n_blocks}},
-                extra={"distances": distances, "iteration": it,
-                       "health": health.as_dict()},
-            )
-
-        if f_size == 0:
-            stop_reason = "boundary-empty"
-            break
-        if config.distance_budget is not None and distances >= config.distance_budget:
-            stop_reason = "distance-budget"
-            break
-        free_rows = p["capacity"] - int(part.n_blocks)
-        if free_rows <= 0:
-            stop_reason = "capacity"
-            break
-
-        key, k_cut = jax.random.split(key)
-        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
-        part, bid = _dist_split(
-            part, x, bid, chosen,
-            recompute=lambda p, b, _round=it: _stats_round(p, b, _round),
-        )
-        reps, w = part_mod.representatives(part)
-
-    return core_bwkm.BWKMResult(
-        centroids=c,
-        partition=part,
-        iterations=it,
-        distances=distances,
-        weighted_errors=weighted_errors,
-        n_blocks=n_blocks,
-        boundary_sizes=boundary_sizes,
-        stop_reason=stop_reason,
-        trace=[],
-        health=health,
-    )
-
-
-def fit(
-    key: jax.Array,
-    x: jax.Array,
-    config: core_bwkm.BWKMConfig,
-    *,
-    checkpoint_dir: str | None = None,
-) -> core_bwkm.BWKMResult:
-    """Deprecated alias of :func:`fit_distributed` — use ``repro.BWKM``.
-
-    Warns once per process (``repro._warnings``).
-    """
-    from repro import _warnings
-
-    _warnings.warn_once(
-        "distributed.dist_bwkm.fit",
-        "distributed.dist_bwkm.fit is deprecated; use repro.BWKM(...) "
-        "(engine='distributed') or fit_distributed",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    return fit_distributed(key, x, config, checkpoint_dir=checkpoint_dir)
-
-
-def _dist_split(part: Partition, x, bid, chosen, *, recompute=None):
-    """``split_blocks`` with distributed routing + stats: the shared
-    ``split_plan`` is resolved once (replicated), routing and statistics run
-    per shard. ``recompute`` lets the driver substitute the fault-aware
-    stats round (drop-and-reweight) for the plain recompute."""
-    plan = part_mod.split_plan(part, chosen)
-    new_bid = dist_route_points(x, bid, plan.fits, plan.axis, plan.mid, plan.right_row)
-    part = part_mod.apply_split_plan(part, plan)
-    if recompute is None:
-        part = dist_recompute_stats(part, x, new_bid)
-    else:
-        part = recompute(part, new_bid)
-    return part, new_bid
-
-
-def _route_into_boxes(x: jax.Array, part: Partition) -> jax.Array:
-    """The shared ``core.partition.route_into_boxes`` clipped-L∞ rule, run
-    sharded: each shard routes its local rows against the replicated boxes."""
-    mesh = sh.current_mesh()
-
-    def body(x_loc):
-        return part_mod.route_into_boxes(x_loc, part.lo, part.hi, part.active)
-
-    if mesh is None:
-        return body(x)
-    n, d = x.shape
-    row_spec = sh.logical_to_spec(("batch", None), (n, d))
-    return sh.shard_map(
-        body, mesh=mesh, in_specs=(row_spec,),
-        out_specs=sh.logical_to_spec(("batch",), (n,)), check_vma=False,
-    )(x)
+    return engine_driver.fit_plane(key, plane, config)

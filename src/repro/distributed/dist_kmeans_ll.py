@@ -1,17 +1,18 @@
 """Distributed k-means|| over mesh-sharded points (ADR 0005; DESIGN §12).
 
 The oversampling loop of ``core.kmeans_ll`` distributes along the same
-lines as the pruned distributed Lloyd (``dist_bwkm.dist_lloyd``): the
-per-point min-d² state lives sharded alongside the points across rounds,
-each round's fold runs the ``min_sqdist_update`` kernel per shard inside a
-``shard_map`` with the cost ``φ`` psum'd over the data axes, and the
-round's candidate batch — a top-k over the global Bernoulli draws — is
-gathered to every shard (the candidates are O(ℓ) rows, so the all-gather
-is O(ℓ·d) bytes/round; points never leave their shard). The Bernoulli
-draw itself and the final weighted K-means++ reduction run on replicated
-values, so every shard computes identical candidates and seeds by
-construction — the same replicated-compute convention the BWKM driver
-uses for representatives.
+lines as the pruned distributed Lloyd (``dist_bwkm.dist_lloyd``) and is the
+shared :func:`repro.engine.driver.plane_kmeans_parallel` over
+:class:`repro.engine.sharded.ShardedLLSession`: the per-point min-d² state
+lives sharded alongside the points across rounds, each round's fold runs
+the ``min_sqdist_update`` kernel per shard inside a ``shard_map`` with the
+cost ``φ`` psum'd over the data axes, and the round's candidate batch — a
+top-k over the global Bernoulli draws — is gathered to every shard (the
+candidates are O(ℓ) rows, so the all-gather is O(ℓ·d) bytes/round; points
+never leave their shard). The Bernoulli draw itself and the final weighted
+K-means++ reduction run on replicated values, so every shard computes
+identical candidates and seeds by construction — the same
+replicated-compute convention the BWKM driver uses for representatives.
 
 Without a mesh this degrades to exactly the in-core
 ``kmeans_parallel`` (same keys, same draws, same result).
@@ -19,40 +20,16 @@ Without a mesh this degrades to exactly the in-core
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.core import kmeans_ll as core_ll
-from repro.core import kmeanspp
 from repro.distributed import sharding as sh
+from repro.engine import driver as engine_driver
+from repro.engine.sharded import ShardedLLSession
 from repro.kernels import ops
 
 __all__ = ["dist_kmeans_parallel"]
-
-_BIG = 3.0e38
-
-
-def _fold_body(x_loc, w_loc, m_loc, cand, cvalid, *, impl):
-    """Per-shard k-means|| fold: the same ``min_sqdist_update`` pass the
-    in-core loop runs, with cost and distance count psum'd over the data
-    axes. min-d² stays shard-local."""
-    out = ops.min_sqdist_update(x_loc, w_loc, cand, cvalid, m_loc, impl=impl)
-    axes = sh.batch_axes()
-    return (
-        out.mind2,
-        jax.lax.psum(out.cost, axes),
-        jax.lax.psum(out.n_dist, axes),
-    )
-
-
-def _weight_body(x_loc, w_loc, cand, *, impl):
-    """Candidate-weighting pass: per-shard nearest-candidate statistics,
-    psum'd counts — the weights the final K-means++ reduction consumes."""
-    au = ops.assign_update(x_loc, w_loc, cand, impl=impl)
-    return jax.lax.psum(au.counts, sh.batch_axes())
 
 
 def dist_kmeans_parallel(
@@ -74,7 +51,7 @@ def dist_kmeans_parallel(
     mesh, where this simply delegates).
     """
     mesh = sh.current_mesh()
-    n, d = x.shape
+    n = x.shape[0]
     if w is None:
         w = jnp.ones((n,), jnp.float32)
     if mesh is None:
@@ -82,55 +59,11 @@ def dist_kmeans_parallel(
             key, x, w, k, oversampling=oversampling, rounds=rounds, impl=impl
         )
 
-    l = int(oversampling) if oversampling is not None else core_ll.default_oversampling(k)
-    r = int(rounds) if rounds is not None else 5
-    if l < 1 or r < 1:
-        raise ValueError(f"oversampling and rounds must be >= 1, got {l}, {r}")
-    impl = ops.resolve_impl(impl)
-    cap_round = max(8, -(-2 * l // 8) * 8)
-
-    row_spec = sh.logical_to_spec(("batch", None), (n, d))
-    vec_spec = sh.logical_to_spec(("batch",), (n,))
-    fold = sh.shard_map(
-        partial(_fold_body, impl=impl),
-        mesh=mesh,
-        in_specs=(row_spec, vec_spec, vec_spec, P(None, None), P(None)),
-        out_specs=(vec_spec, P(), P()),
-        check_vma=False,
+    l, r, cap_round = engine_driver.resolve_ll_params(  # noqa: E741
+        k, oversampling, rounds
     )
-    weigh = sh.shard_map(
-        partial(_weight_body, impl=impl),
-        mesh=mesh,
-        in_specs=(row_spec, vec_spec, P(None, None)),
-        out_specs=P(None),
-        check_vma=False,
+    sess = ShardedLLSession(
+        key, x, w, k=k, l=l, rounds=r, cap_round=cap_round,
+        impl=ops.resolve_impl(impl), mesh=mesh,
     )
-
-    w = w.astype(jnp.float32)
-    logw = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
-    keys = jax.random.split(key, r + 2)
-
-    cap_total = 1 + r * cap_round
-    cand = jnp.full((cap_total, d), core_ll._FAR, x.dtype)
-    cvalid = jnp.zeros((cap_total,), jnp.float32).at[0].set(1.0)
-    cand = cand.at[0].set(x[jax.random.categorical(keys[0], logw)])
-
-    mind2 = jnp.full((n,), _BIG, jnp.float32)
-    mind2, phi, _ = fold(x, w, mind2, cand[:1], cvalid[:1])
-
-    for rd in range(r):
-        # replicated Bernoulli draw + global top-k: every shard computes the
-        # identical candidate batch, gathered to all shards by x[idx]
-        p = jnp.minimum(1.0, l * w * mind2 / jnp.maximum(phi, 1e-30))
-        u = jax.random.uniform(keys[rd + 1], (n,))
-        accept = (u < p) & (w > 0)
-        neg, idx = jax.lax.top_k(-jnp.where(accept, u, jnp.inf), cap_round)
-        newv = jnp.isfinite(neg).astype(jnp.float32)
-        newc = jnp.where(newv[:, None] > 0, x[idx], core_ll._FAR)
-        mind2, phi, _ = fold(x, w, mind2, newc, newv)
-        start = 1 + rd * cap_round
-        cand = cand.at[start : start + cap_round].set(newc)
-        cvalid = cvalid.at[start : start + cap_round].set(newv)
-
-    counts = weigh(x, w, cand)
-    return kmeanspp.weighted_kmeanspp(keys[-1], cand, counts, k)
+    return engine_driver.plane_kmeans_parallel(sess, rounds=r)["centroids"]

@@ -1,0 +1,39 @@
+"""Execution planes: one BWKM driver, three data planes (ADR 0010).
+
+The paper's algorithm is ONE loop — fold weighted block statistics, run
+weighted Lloyd on the representatives, split the boundary blocks — and
+everything engine-specific is *where the points live* and therefore how a
+data pass is executed. This package factors that out:
+
+  * :mod:`repro.engine.plane`   — the ``DataPlane`` protocol: the ~5 data
+    primitives every engine implements in its own dialect.
+  * :mod:`repro.engine.driver`  — the BWKM outer loop, the k-means||
+    seeding loop, and the full-data pruned Lloyd loop, each written ONCE
+    over the protocol.
+  * :mod:`repro.engine.incore`  — resident-array plane.
+  * :mod:`repro.engine.streaming` — chunked out-of-core plane
+    (``ChunkSource``/``ResilientChunkSource``).
+  * :mod:`repro.engine.sharded` — mesh-sharded plane (sanitizing
+    ``shard_map`` stats + drop-and-reweight).
+
+Layering (enforced by ``tools/check_layering.py``): this package sits
+between the kernel/core primitives and the per-engine facades — it imports
+``repro.core`` / ``repro.kernels`` / ``repro.data`` /
+``repro.distributed.sharding`` / ``repro.health`` only, and the
+``core.bwkm`` / ``streaming`` / ``distributed`` entry points are thin
+constructors over it.
+"""
+
+from repro.engine.driver import fit_plane, plane_kmeans_parallel, plane_lloyd
+from repro.engine.incore import InCorePlane
+from repro.engine.sharded import ShardedPlane
+from repro.engine.streaming import StreamingPlane
+
+__all__ = [
+    "InCorePlane",
+    "ShardedPlane",
+    "StreamingPlane",
+    "fit_plane",
+    "plane_kmeans_parallel",
+    "plane_lloyd",
+]

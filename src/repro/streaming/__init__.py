@@ -17,7 +17,6 @@ from repro.streaming.stream_bwkm import (
     StreamBWKMResult,
     StreamingLloydResult,
     StreamStats,
-    fit,  # deprecated alias; fit_streaming is the canonical entry point
     fit_streaming,
     streaming_error,
     streaming_lloyd,
@@ -25,7 +24,6 @@ from repro.streaming.stream_bwkm import (
 )
 
 __all__ = [
-    "fit",
     "fit_streaming",
     "kmeans_parallel_streaming",
     "StreamKMeansLLResult",

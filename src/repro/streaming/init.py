@@ -8,64 +8,19 @@ each split. Out of core we invert the order: draw one uniform sample in a
 single pass (vectorised reservoir), run Algorithm 2 entirely on that
 resident sample, and only then route the full dataset through the resulting
 spatial partition chunk-by-chunk. This is the same sample→build→broadcast
-scheme the distributed driver uses (``dist_bwkm.fit``), with the broadcast
-replaced by a streaming pass.
+scheme the sharded plane uses, with the broadcast replaced by a streaming
+pass.
+
+The implementation moved to :mod:`repro.engine.streaming` (the plane owns
+its initial stats fold); this module re-exports it for callers that reach
+for the streaming layer directly.
 """
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core import init_partition
-from repro.core.partition import Partition
-from repro.data.chunks import ChunkSource
+from repro.engine.streaming import (  # noqa: F401
+    default_init_sample_size,
+    streaming_initial_partition,
+)
 
 __all__ = ["streaming_initial_partition", "default_init_sample_size"]
-
-
-def default_init_sample_size(n: int, p: dict) -> int:
-    """Sample size for the init pass: enough for every Alg-3/4 subsample to
-    be a genuine subsample (matches the distributed driver's choice)."""
-    return min(n, max(p["s"] * p["r"] * 4, 4 * p["m"]))
-
-
-def streaming_initial_partition(
-    key: jax.Array,
-    source: ChunkSource,
-    k: int,
-    *,
-    m: int,
-    m_prime: int,
-    s: int,
-    r: int,
-    capacity: int,
-    sample_size: int,
-    init: str = "kmeans++",
-) -> Partition:
-    """Algorithm 2 over a one-pass uniform sample of ``source``.
-
-    ``init`` names the strategy in the ``repro.api.inits`` registry whose
-    ``sample`` hook draws the first-pass sample (the default strategies all
-    use the vectorised reservoir).
-
-    The returned partition's boxes/active rows describe the spatial
-    partition; its statistics and ``block_id`` reflect only the sample. The
-    caller must re-route the full stream through the boxes and replace the
-    statistics (``stream_bwkm._routing_pass``) before using them.
-    """
-    from repro.api.inits import resolve_init
-
-    key, k_seed = jax.random.split(key)
-    seed = int(jax.random.randint(k_seed, (), 0, 2**31 - 1))
-    sample = resolve_init(init).sample(source, sample_size, seed)
-    return init_partition.build_initial_partition(
-        key,
-        jnp.asarray(sample),
-        k,
-        m=m,
-        m_prime=m_prime,
-        s=min(s, sample.shape[0]),
-        r=r,
-        capacity=capacity,
-    )

@@ -4,7 +4,9 @@ The in-core oversampling loop (``core.kmeans_ll``) holds the per-point
 min-d² state resident; out of core the same state lives on the host as one
 f32 array per chunk (4 bytes/point — the same host-state pattern as the
 streaming Lloyd bounds) and is re-fed to the jitted chunk program each
-pass. Pass structure:
+pass. The loop itself is the shared
+:func:`repro.engine.driver.plane_kmeans_parallel` over
+:class:`repro.engine.streaming.StreamLLSession`; pass structure:
 
   * pass 0      — fold the (reservoir-drawn) first seed into every chunk's
                   min-d², accumulating the exact cost ``φ₀``;
@@ -36,18 +38,13 @@ from __future__ import annotations
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.core import kmeans_ll as core_ll
-from repro.core import kmeanspp
-from repro.data import chunks as ck
-from repro.data.chunks import ChunkSource, padded_device_chunks, reservoir_sample
+from repro.data.chunks import ChunkSource
+from repro.engine import driver as engine_driver
+from repro.engine.streaming import StreamLLSession
 from repro.kernels import ops
 
 __all__ = ["StreamKMeansLLResult", "kmeans_parallel_streaming"]
-
-_BIG = 3.0e38
 
 
 class StreamKMeansLLResult(NamedTuple):
@@ -56,39 +53,6 @@ class StreamKMeansLLResult(NamedTuple):
     passes: int  # sequential device data passes (rounds + 1)
     distances: float  # distance evaluations (paper's unit)
     normalisers: tuple = ()  # φ used by each selection round (exact, audit)
-
-
-def _pad_batch(cands: np.ndarray, cap: int, d: int) -> tuple[jax.Array, jax.Array]:
-    """Pack a ragged candidate batch into the static ``[cap, d]`` shape the
-    chunk program compiles once for, unfilled rows parked at the far
-    sentinel with validity 0 (the in-core kernel contract)."""
-    batch = np.full((cap, d), core_ll._FAR, np.float32)
-    valid = np.zeros((cap,), np.float32)
-    m = min(len(cands), cap)
-    if m:
-        batch[:m] = cands[:m]
-        valid[:m] = 1.0
-    return jnp.asarray(batch), jnp.asarray(valid)
-
-
-def _gather_rows(
-    source: ChunkSource, wanted: dict[int, np.ndarray]
-) -> dict[int, np.ndarray]:
-    """Fetch ``{chunk_index: rows[idx]}`` from the source. Backends with
-    random access pay only for the touched chunks; iterator-only sources
-    fall back to ONE host scan for all of them (never a per-chunk rescan)."""
-    if not wanted:
-        return {}
-    if getattr(source, "chunk_at", None) is not None:
-        return {
-            i: np.asarray(source.chunk_at(i), np.float32)[idx]
-            for i, idx in wanted.items()
-        }
-    out: dict[int, np.ndarray] = {}
-    for i, chunk in enumerate(source.chunks()):
-        if i in wanted:
-            out[i] = np.asarray(chunk, np.float32)[wanted[i]]
-    return out
 
 
 def kmeans_parallel_streaming(
@@ -109,98 +73,18 @@ def kmeans_parallel_streaming(
     memory: 4 bytes/point of min-d² state plus the O(ℓ·rounds) candidate
     set; device memory: one padded chunk at a time.
     """
-    n, d = source.n_points, source.dim
-    l = int(oversampling) if oversampling is not None else core_ll.default_oversampling(k)
-    r = int(rounds) if rounds is not None else 5
-    if l < 1 or r < 1:
-        raise ValueError(f"oversampling and rounds must be >= 1, got {l}, {r}")
-    impl = ops.resolve_impl(impl)
-    cap_round = max(8, -(-2 * l // 8) * 8)
-    cs = source.chunk_size
-
-    key_seed, key_pp = jax.random.split(jax.random.fold_in(key, 0), 2)
-    seed_int = int(jax.random.randint(key_seed, (), 0, 2**31 - 1))
-    first = np.asarray(reservoir_sample(source, 1, seed_int), np.float32)
-
-    cands: list[np.ndarray] = [first]
-    new_cands = first
-    mind2: list[np.ndarray] = []
-    phi = float("inf")
-    normalisers: list[float] = []
-    distances = 0.0
-    passes = 0
-
-    def fold(batch_cands: np.ndarray, first_pass: bool) -> None:
-        """One device pass: fold ``batch_cands`` into every chunk's min-d²,
-        leaving ``phi`` the exact cost of the full current candidate set."""
-        nonlocal phi, distances, passes
-        batch, bvalid = _pad_batch(batch_cands, cap_round, d)
-        phi_acc = 0.0
-        for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
-            if first_pass:
-                mind2.append(np.full((nv,), _BIG, np.float32))
-            wv = (jnp.arange(cs) < nv).astype(jnp.float32)
-            m_in = np.zeros((cs,), np.float32)
-            m_in[:nv] = mind2[i]
-            out = ops.min_sqdist_update_chunk(
-                x_dev, wv, batch, bvalid, jnp.asarray(m_in),
-                chunk_size=cs, impl=impl,
-            )
-            mind2[i] = np.asarray(out.mind2[:nv], np.float32)
-            phi_acc += float(out.cost)
-            distances += float(out.n_dist)
-        phi = phi_acc
-        passes += 1
-
-    fold(first, first_pass=True)  # pass 0: φ₀ exact
-
-    for rnd in range(1, r + 1):
-        if rnd > 1 and len(new_cands):
-            fold(new_cands, first_pass=False)  # φ_{rnd−1} exact before drawing
-        normalisers.append(phi)
-        # Bernoulli selection on the host against the resident min-d² state;
-        # RNG stream unchanged from the lagging implementation (round rnd
-        # drew under fold_in(key, rnd + 1), chunk i under fold_in(·, i)).
-        key_round = jax.random.fold_in(key, rnd + 1)
-        wanted: dict[int, np.ndarray] = {}
-        wanted_u: dict[int, np.ndarray] = {}
-        for i, m_i in enumerate(mind2):
-            u = np.asarray(
-                jax.random.uniform(jax.random.fold_in(key_round, i), (m_i.shape[0],))
-            )
-            prob = np.minimum(1.0, l * m_i / max(phi, 1e-30))
-            idx = np.flatnonzero(u < prob)
-            if idx.size:
-                wanted[i] = idx
-                wanted_u[i] = u[idx]
-        rows = _gather_rows(source, wanted)
-        if wanted:
-            sel = np.concatenate([rows[i] for i in sorted(wanted)])
-            sel_u = np.concatenate([wanted_u[i] for i in sorted(wanted)])
-            if len(sel) > cap_round:  # tail event: E[draws] <= l
-                sel = sel[np.argsort(sel_u)[:cap_round]]
-            new_cands = sel
-            cands.append(sel)
-        else:
-            new_cands = np.zeros((0, d), np.float32)
-
-    # weighting pass: nearest-candidate assignment over the full candidate
-    # set (this fold subsumes the final round's candidates)
-    cand_all = jnp.asarray(np.concatenate(cands))
-    weights = jnp.zeros((cand_all.shape[0],), jnp.float32)
-    for x_dev, nv in padded_device_chunks(source):
-        wv = (jnp.arange(cs) < nv).astype(jnp.float32)
-        au = ops.assign_update_chunk(x_dev, wv, cand_all, chunk_size=cs, impl=impl)
-        weights = weights + au.counts
-        distances += float(au.n_dist)
-    passes += 1
-
-    distances += float(cand_all.shape[0]) * max(k - 1, 1)
-    c = kmeanspp.weighted_kmeanspp(key_pp, cand_all, weights, k)
+    l, r, cap_round = engine_driver.resolve_ll_params(  # noqa: E741
+        k, oversampling, rounds
+    )
+    sess = StreamLLSession(
+        key, source, k=k, l=l, rounds=r, cap_round=cap_round,
+        impl=ops.resolve_impl(impl),
+    )
+    out = engine_driver.plane_kmeans_parallel(sess, rounds=r)
     return StreamKMeansLLResult(
-        centroids=c,
-        n_candidates=int(cand_all.shape[0]),
-        passes=passes,
-        distances=distances,
-        normalisers=tuple(normalisers),
+        centroids=out["centroids"],
+        n_candidates=out["n_candidates"],
+        passes=out["passes"],
+        distances=out["distances"],
+        normalisers=out["normalisers"],
     )

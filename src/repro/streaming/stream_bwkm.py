@@ -1,9 +1,11 @@
-"""Out-of-core streaming BWKM driver (paper Algorithm 5; DESIGN.md §6).
+"""Out-of-core streaming BWKM entry point (paper Algorithm 5; DESIGN.md §6).
 
-``fit`` runs the same weighted Lloyd + ε-boundary-split loop as
-``core.bwkm.fit`` but never materialises the dataset: points arrive as
-fixed-size chunks from a :class:`repro.data.ChunkSource`, and everything the
-algorithm needs about them is folded into per-block sufficient statistics
+:func:`fit_streaming` runs the SAME weighted Lloyd + ε-boundary-split loop
+as ``core.bwkm.fit_incore`` — literally the same function,
+:func:`repro.engine.driver.fit_plane` — over the chunked
+:class:`repro.engine.streaming.StreamingPlane`: points arrive as fixed-size
+chunks from a :class:`repro.data.ChunkSource`, and everything the algorithm
+needs about them is folded into per-block sufficient statistics
 ``(Σx, |B|, min x, max x)`` (``core.partition.BlockStats``) chunk by chunk.
 
 Memory budget per device: one padded chunk ``[chunk_size, d]`` (double
@@ -20,175 +22,43 @@ Pass structure per outer iteration:
     repaired against the split plan (gather + compare) and its block
     statistics are re-accumulated in the same jitted program.
 
-All chunk programs have static shapes (chunks are padded, validity is a
-traced row count), so a full pass reuses one compiled executable, and the
-per-chunk assignment work dispatches through ``kernels.ops`` — the Pallas
-``assign_top2`` kernel on TPU — exactly as the in-core path does.
+The chunk programs live in :mod:`repro.engine.streaming`; this module keeps
+the entry points and the full-stream Lloyd/error evaluators.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from typing import NamedTuple
 
-from repro.core import bounds, bwkm as core_bwkm, misassignment as mis
+from repro.core import bwkm as core_bwkm
 from repro.core import lloyd as lloyd_mod
-from repro.core import partition as part_mod
-from repro.core.lloyd import weighted_lloyd
-from repro.core.partition import BlockStats, Partition
 from repro.data.chunks import ChunkSource, padded_device_chunks
-from repro.health import RunHealth
+from repro.engine import driver as engine_driver
+from repro.engine import streaming as engine_streaming
+from repro.engine.streaming import (  # noqa: F401  (re-exported: tests/benchmarks)
+    StreamBWKMResult,
+    StreamStats,
+    StreamingPlane,
+    _chunk_assign_stats,
+    _routing_pass,
+    _split_pass,
+    _with_stats,
+)
+from repro.engine.plane import global_extent as _global_extent  # noqa: F401
 from repro.kernels import ops
-from repro.streaming import init as stream_init
 
 __all__ = [
+    "StreamBWKMResult",
     "StreamStats",
     "StreamingLloydResult",
-    "fit",
     "fit_streaming",
     "streaming_error",
     "streaming_lloyd",
     "streaming_lloyd_step",
 ]
-
-_BIG = 3.0e38
-
-
-@dataclasses.dataclass
-class StreamStats:
-    """Out-of-core accounting: how much data moved to reach the result."""
-
-    n_chunks: int
-    chunk_size: int
-    passes: int = 0  # full-dataset streaming passes
-    points_streamed: int = 0  # Σ chunk rows fed to the device
-
-
-# ----------------------------------------------------------- chunk programs
-@partial(jax.jit, static_argnames=("m",))
-def _box_route_stats(x, nv, lo, hi, active, *, m):
-    """Route one padded chunk into the partition's boxes (the shared
-    ``core.partition.route_into_boxes`` rule — containment for interior
-    points, nearest box for tails) and fold its block statistics.
-
-    ``lo/hi/active`` are sliced by the caller to the live row prefix (block
-    rows are allocated densely from 0), so the ``[cs, m_live]`` distance
-    matrix scales with actual blocks, not the 64·m capacity; only the
-    ``[m, ·]`` output statistics use full capacity ``m``.
-    """
-    valid = jnp.arange(x.shape[0]) < nv
-    bid = part_mod.route_into_boxes(x, lo, hi, active)
-    return bid, part_mod.block_stats(x, bid, m, valid=valid)
-
-
-@partial(jax.jit, static_argnames=("m",))
-def _split_route_stats(x, bid, nv, plan, *, m):
-    """Repair one chunk's memberships against a split plan and fold stats."""
-    valid = jnp.arange(x.shape[0]) < nv
-    new_bid = part_mod.route_split(x, bid, plan)
-    return new_bid, part_mod.block_stats(x, new_bid, m, valid=valid)
-
-
-_combine = jax.jit(part_mod.combine_block_stats)
-
-
-@partial(jax.jit, static_argnames=("impl",))
-def _chunk_assign_stats(x, nv, c, *, impl):
-    """Per-chunk Lloyd sufficient statistics over the full dataset, in ONE
-    fused pass through ``kernels.ops.assign_update_chunk`` — the same shared
-    hot path the in-core Lloyd and the distributed shard body use. The
-    validity prefix doubles as the weight vector, so padding rows are inert
-    in sums/counts/err by the kernel's zero-weight contract; ``x`` is
-    already padded to the static chunk shape, so the pad inside is a no-op."""
-    wv = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
-    fu = ops.assign_update_chunk(x, wv, c, chunk_size=x.shape[0], impl=impl)
-    return fu.sums, fu.counts, fu.err
-
-
-# ------------------------------------------------------------ data passes
-def _pad_bid(bid: np.ndarray, chunk_size: int) -> np.ndarray:
-    if bid.shape[0] == chunk_size:
-        return bid
-    out = np.zeros((chunk_size,), np.int32)
-    out[: bid.shape[0]] = bid
-    return out
-
-
-def _routing_pass(
-    source: ChunkSource, part: Partition, stats: StreamStats
-) -> tuple[Partition, list[np.ndarray]]:
-    """Stream the dataset once: route every chunk into the current boxes,
-    record memberships on the host, accumulate tight block statistics."""
-    m, d = part.capacity, source.dim
-    # Live rows are the dense prefix [0, n_blocks); n_blocks is host-known
-    # before the pass. Routing against the prefix (padded up to a multiple of
-    # 128 for shape stability) keeps the per-chunk distance matrix at
-    # [cs, ~n_blocks] instead of [cs, 64·m] capacity.
-    m_live = min(m, max(128, -(-int(part.n_blocks) // 128) * 128))
-    acc = part_mod.empty_block_stats(m, d)
-    bids: list[np.ndarray] = []
-    for x_dev, nv in padded_device_chunks(source):
-        bid, st = _box_route_stats(
-            x_dev, nv,
-            part.lo[:m_live], part.hi[:m_live], part.active[:m_live], m=m,
-        )
-        acc = _combine(acc, st)
-        bids.append(np.asarray(bid[:nv], np.int32))
-        stats.points_streamed += nv
-    stats.passes += 1
-    return _with_stats(part, acc), bids
-
-
-def _split_pass(
-    source: ChunkSource,
-    bids: list[np.ndarray],
-    part: Partition,
-    plan: part_mod.SplitPlan,
-    stats: StreamStats,
-) -> tuple[Partition, list[np.ndarray]]:
-    """Stream the dataset once to execute a split round: repair memberships
-    chunk-by-chunk and re-tighten every block's statistics."""
-    m, d = part.capacity, source.dim
-    acc = part_mod.empty_block_stats(m, d)
-    new_bids: list[np.ndarray] = []
-    for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
-        bid_dev = jnp.asarray(_pad_bid(bids[i], source.chunk_size))
-        nb, st = _split_route_stats(x_dev, bid_dev, nv, plan, m=m)
-        acc = _combine(acc, st)
-        new_bids.append(np.asarray(nb[:nv], np.int32))
-        stats.points_streamed += nv
-    stats.passes += 1
-    part = part_mod.apply_split_plan(part, plan)
-    return _with_stats(part, acc), new_bids
-
-
-def _with_stats(part: Partition, st: BlockStats) -> Partition:
-    # block_id stays empty: full-length membership lives on the host, not in
-    # the pytree (the whole point of the streaming driver).
-    return part._replace(
-        psum=st.psum, count=st.count, lo=st.lo, hi=st.hi,
-        block_id=jnp.zeros((0,), jnp.int32),
-    )
-
-
-def _global_extent(part: Partition) -> float:
-    """‖max x − min x‖ over the whole stream, from accumulated block boxes."""
-    occ = (part.count > 0) & part.active
-    lo = jnp.min(jnp.where(occ[:, None], part.lo, _BIG), axis=0)
-    hi = jnp.max(jnp.where(occ[:, None], part.hi, -_BIG), axis=0)
-    return float(jnp.linalg.norm(jnp.maximum(hi - lo, 0.0)))
-
-
-# ------------------------------------------------------------------ driver
-@dataclasses.dataclass
-class StreamBWKMResult(core_bwkm.BWKMResult):
-    stream: StreamStats | None = None
 
 
 def fit_streaming(
@@ -198,8 +68,8 @@ def fit_streaming(
     *,
     trace_centroids: bool = False,
 ) -> StreamBWKMResult:
-    """Algorithm 5 over a chunked stream. Mirrors ``core.bwkm.fit_incore``
-    step for step; only the dataset passes differ (see module docstring).
+    """Algorithm 5 over a chunked stream — the shared engine driver over the
+    streaming plane; only the dataset passes differ from in-core.
 
     This is the streaming engine behind the ``repro.BWKM`` facade. All
     knobs — including the first-pass sample size (``init_sample_size``) and
@@ -209,144 +79,9 @@ def fit_streaming(
     The returned ``partition.block_id`` is empty — full-length memberships
     are internal host state. ``result.stream`` records pass counts.
     """
-    n, d = source.n_points, source.dim
-    p = config.resolve(n, d)
-    k = config.k
-    stats = StreamStats(n_chunks=source.n_chunks, chunk_size=source.chunk_size)
-
-    key, k_init, k_pp = jax.random.split(key, 3)
-    s_init = config.init_sample_size or stream_init.default_init_sample_size(n, p)
-    part = stream_init.streaming_initial_partition(
-        k_init, source, k,
-        m=p["m"], m_prime=p["m_prime"], s=p["s"], r=p["r"],
-        capacity=p["capacity"], sample_size=s_init, init=config.init,
+    return engine_driver.fit_plane(
+        key, StreamingPlane(source), config, trace_centroids=trace_centroids
     )
-    stats.passes += 1  # the reservoir-sample pass
-    stats.points_streamed += n
-    part, bids = _routing_pass(source, part, stats)
-    # Init cost: same units the in-core driver charges (Thm A.3 dominant term).
-    distances = float(p["r"] * p["s"] * k + p["m"] * k)
-
-    reps, w = part_mod.representatives(part)
-    c = core_bwkm.seed_centroids(config.init, k_pp, reps, w, k)
-    distances += float(int(part.n_blocks)) * k
-
-    weighted_errors: list[float] = []
-    n_blocks: list[int] = []
-    boundary_sizes: list[int] = []
-    trace: list[dict] = []
-    stop_reason = "max-iters"
-
-    displacement_eps_w = None
-    if config.displacement_epsilon is not None:
-        displacement_eps_w = bounds.displacement_threshold(
-            _global_extent(part), n, config.displacement_epsilon
-        )
-
-    it = 0
-    for it in range(1, config.max_iters + 1):
-        res = weighted_lloyd(
-            reps, w, c,
-            max_iters=config.lloyd_max_iters, epsilon=config.lloyd_epsilon,
-            prune=config.prune,
-        )
-        c = res.centroids
-        distances += float(res.distances)
-        weighted_errors.append(float(res.error))
-        n_blocks.append(int(part.n_blocks))
-
-        eps = mis.misassignment(part, res.d1, res.d2)
-        f_size = int(jnp.sum(eps > 0))
-        boundary_sizes.append(f_size)
-        if trace_centroids:
-            trace.append(
-                {
-                    "iteration": it,
-                    "distances": distances,
-                    "centroids": jax.device_get(c),
-                    "n_blocks": int(part.n_blocks),
-                    "boundary": f_size,
-                    "passes": stats.passes,
-                }
-            )
-
-        # --- stopping criteria (Section 2.4.2), as in core.bwkm.fit ---
-        if f_size == 0:
-            stop_reason = "boundary-empty"
-            break
-        if config.distance_budget is not None and distances >= config.distance_budget:
-            stop_reason = "distance-budget"
-            break
-        if (
-            displacement_eps_w is not None
-            and it > 1
-            and float(res.max_shift) <= displacement_eps_w
-        ):
-            stop_reason = "displacement"
-            break
-        if config.gap_bound_threshold is not None:
-            gap = float(bounds.thm2_gap_bound(part, eps, res.d1))
-            if gap <= config.gap_bound_threshold:
-                stop_reason = "gap-bound"
-                break
-        free_rows = p["capacity"] - int(part.n_blocks)
-        if free_rows <= 0:
-            stop_reason = "capacity"
-            break
-
-        # --- Step 3: sample |F| blocks ∝ ε, split via one streaming pass ---
-        key, k_cut = jax.random.split(key)
-        chosen = mis.sample_boundary(k_cut, eps, min(f_size, free_rows))
-        plan = part_mod.split_plan(part, chosen)
-        part, bids = _split_pass(source, bids, part, plan, stats)
-        reps, w = part_mod.representatives(part)
-
-    # A ResilientChunkSource (repro.data.resilient) carries the fault ledger
-    # for the whole fit — retries, skipped chunks, quarantined rows; a bare
-    # source means a clean run by construction (any fault would have raised).
-    health = getattr(source, "health", None)
-    return StreamBWKMResult(
-        centroids=c,
-        partition=part,
-        iterations=it,
-        distances=distances,
-        weighted_errors=weighted_errors,
-        n_blocks=n_blocks,
-        boundary_sizes=boundary_sizes,
-        stop_reason=stop_reason,
-        trace=trace,
-        stream=stats,
-        health=health if isinstance(health, RunHealth) else RunHealth(),
-    )
-
-
-def fit(
-    key: jax.Array,
-    source: ChunkSource,
-    config: core_bwkm.BWKMConfig,
-    *,
-    init_sample_size: int | None = None,
-    trace_centroids: bool = False,
-) -> StreamBWKMResult:
-    """Deprecated alias of :func:`fit_streaming` — use ``repro.BWKM``.
-
-    The ``init_sample_size`` keyword side channel is deprecated too: set
-    ``BWKMConfig.init_sample_size`` instead (it still wins here for
-    backward compatibility). Warns once per process (``repro._warnings``).
-    """
-    from repro import _warnings
-
-    _warnings.warn_once(
-        "streaming.stream_bwkm.fit",
-        "streaming.stream_bwkm.fit is deprecated; use repro.BWKM(...) "
-        "(engine='streaming') or fit_streaming with "
-        "BWKMConfig(init_sample_size=...)",
-        DeprecationWarning,
-        stacklevel=2,
-    )
-    if init_sample_size is not None:
-        config = dataclasses.replace(config, init_sample_size=init_sample_size)
-    return fit_streaming(key, source, config, trace_centroids=trace_centroids)
 
 
 # ------------------------------------------------- full-stream evaluation
@@ -379,42 +114,6 @@ def streaming_error(source: ChunkSource, c: jax.Array) -> float:
     return err
 
 
-# --------------------------------------- pruned full-stream Lloyd (ADR 0004)
-@partial(jax.jit, static_argnames=("impl",))
-def _chunk_dense_full(x, nv, c, *, impl):
-    """Initial dense chunk pass for :func:`streaming_lloyd`: per-row top-2
-    (seeding the drift bounds) + the fold statistics + Σ w‖x‖² for the
-    algebraic error identity."""
-    wv = (jnp.arange(x.shape[0]) < nv).astype(jnp.float32)
-    fu = ops.assign_update(x, wv, c, impl=impl)
-    w2 = jnp.sum(wv * jnp.sum(x.astype(jnp.float32) ** 2, axis=-1))
-    ub = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
-    lb = jnp.sqrt(jnp.maximum(fu.d2, 0.0))
-    return fu.assign, ub, lb, fu.sums, fu.counts, fu.err, fu.n_dist, w2
-
-
-@partial(jax.jit, static_argnames=("impl", "prune"))
-def _chunk_pruned_stats(x, nv, c_new, assign, ub, lb, drift, *, impl, prune):
-    """One pruned Lloyd chunk fold: update this chunk's carried bounds from
-    the centroid drift, rescan only the rows the bounds can't settle, and
-    return the chunk's full statistics under the composed assignment —
-    exactly the in-core ``pruned_body`` with the bound state living on the
-    host between passes instead of in the ``while_loop`` carry."""
-    valid = jnp.arange(x.shape[0]) < nv
-    wv = valid.astype(jnp.float32)
-    if prune:
-        ub, lb = lloyd_mod.drift_bound_update(ub, lb, assign, drift)
-        active = (ub >= lb) & valid
-        fu = ops.assign_update_pruned(x, wv, c_new, assign, active, impl=impl)
-        ub = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d1, 0.0)), ub)
-        lb = jnp.where(active, jnp.sqrt(jnp.maximum(fu.d2, 0.0)), lb)
-        return fu.assign, ub, lb, fu.sums, fu.counts, fu.n_dist
-    fu = ops.assign_update(x, wv, c_new, impl=impl)
-    ub = jnp.sqrt(jnp.maximum(fu.d1, 0.0))
-    lb = jnp.sqrt(jnp.maximum(fu.d2, 0.0))
-    return fu.assign, ub, lb, fu.sums, fu.counts, fu.n_dist
-
-
 class StreamingLloydResult(NamedTuple):
     centroids: jax.Array  # [K, d]
     error: float  # exact weighted error at the final centroids
@@ -434,73 +133,31 @@ def streaming_lloyd(
 ) -> StreamingLloydResult:
     """Full-stream Lloyd with drift-bound pruning carried ACROSS chunk folds.
 
-    The in-core pruned loop keeps (assignment, upper bound, lower bound)
-    per row in the ``while_loop`` carry; out-of-core the same state lives
-    on the host as one compact f32/i32 array per chunk (12 bytes/point) and
-    is re-fed to the jitted chunk program each pass. Drift is computed once
-    per iteration from the folded statistics, so after the first pass most
-    chunks rescan only their boundary rows — the paper's
-    distance-computation metric drops exactly as in-core, while the chunk
-    pipeline (static shapes, one compiled program per pass) is unchanged.
+    The shared :func:`repro.engine.driver.plane_lloyd` loop over the
+    streaming session: the in-core pruned loop keeps (assignment, upper
+    bound, lower bound) per row in the ``while_loop`` carry; out-of-core
+    the same state lives on the host as one compact f32/i32 array per chunk
+    (12 bytes/point) and is re-fed to the jitted chunk program each pass.
+    Drift is computed once per iteration from the folded statistics, so
+    after the first pass most chunks rescan only their boundary rows — the
+    paper's distance-computation metric drops exactly as in-core, while the
+    chunk pipeline (static shapes, one compiled program per pass) is
+    unchanged.
 
     Stops on the Eq.-2 relative error change (the error is exact via the
     ``core.lloyd.stats_error`` identity). Returns kernel-reported distance
     counts and the per-iteration active fraction for the benchmarks.
     """
-    impl = ops.resolve_impl(impl)
-    prune = lloyd_mod.resolve_prune(prune)
-    k = c.shape[0]
-
-    # --- seeding pass: dense, records per-chunk bound state on the host
-    assigns: list[np.ndarray] = []
-    ubs: list[np.ndarray] = []
-    lbs: list[np.ndarray] = []
-    sums = jnp.zeros((k, c.shape[1]), jnp.float32)
-    counts = jnp.zeros((k,), jnp.float32)
-    err = jnp.zeros((), jnp.float32)
-    w2sum = jnp.zeros((), jnp.float32)
-    distances = 0.0
-    for x_dev, nv in padded_device_chunks(source):
-        a_, ub_, lb_, s_, n_, e_, nd_, w2_ = _chunk_dense_full(
-            x_dev, nv, c, impl=impl
-        )
-        assigns.append(np.asarray(a_, np.int32))
-        ubs.append(np.asarray(ub_, np.float32))
-        lbs.append(np.asarray(lb_, np.float32))
-        sums, counts, err, w2sum = sums + s_, counts + n_, err + e_, w2sum + w2_
-        distances += float(nd_)
-
-    prev_err, err = jnp.inf, err
-    active_fractions: list[float] = []
-    it = 0
-    while it < max_iters and abs(float(prev_err) - float(err)) > (
-        epsilon * max(float(err), 1e-30)
-    ):
-        c_new = lloyd_mod._next_centroids(sums, counts, c)
-        drift = jnp.linalg.norm(c_new - c, axis=-1)
-        sums = jnp.zeros_like(sums)
-        counts = jnp.zeros_like(counts)
-        n_dist_iter = 0.0
-        for i, (x_dev, nv) in enumerate(padded_device_chunks(source)):
-            a_, ub_, lb_, s_, n_, nd_ = _chunk_pruned_stats(
-                x_dev, nv, c_new,
-                jnp.asarray(assigns[i]), jnp.asarray(ubs[i]), jnp.asarray(lbs[i]),
-                drift, impl=impl, prune=prune,
-            )
-            assigns[i] = np.asarray(a_, np.int32)
-            ubs[i] = np.asarray(ub_, np.float32)
-            lbs[i] = np.asarray(lb_, np.float32)
-            sums, counts = sums + s_, counts + n_
-            n_dist_iter += float(nd_)
-        c = c_new
-        prev_err, err = err, lloyd_mod.stats_error(w2sum, c_new, sums, counts)
-        distances += n_dist_iter
-        active_fractions.append(n_dist_iter / max(k * source.n_points, 1))
-        it += 1
-
+    sess = engine_streaming.StreamingLloydSession(
+        source, c.shape[0],
+        impl=ops.resolve_impl(impl), prune=lloyd_mod.resolve_prune(prune),
+    )
+    c, err, it, distances, active_fractions = engine_driver.plane_lloyd(
+        sess, c, max_iters=max_iters, epsilon=epsilon
+    )
     return StreamingLloydResult(
         centroids=c,
-        error=float(err),
+        error=err,
         iters=it,
         distances=distances,
         active_fractions=active_fractions,

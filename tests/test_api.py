@@ -5,10 +5,10 @@
 * engine auto-selection by data type (array / path / glob / ChunkSource);
 * out-of-core ``predict``/``score``/``transform`` through the chunked kernel;
 * init-strategy registry wired through ``BWKMConfig.init``;
-* the deprecated entry points still work and warn;
-* the engine × init × kernel-impl equivalence matrix (ISSUE 3): all three
-  engines agree under the fused Pallas path (interpret mode) too, not just
-  under the default jnp oracle.
+* the PR-2 deprecation shims are gone (ISSUE 10) and the once-per-process
+  warning helper they used still honours its contract;
+* a single cross-engine smoke check (the full engine × init × kernel-impl
+  matrix lives in tests/test_engine_equivalence.py).
 """
 
 import os
@@ -20,8 +20,7 @@ import numpy as np
 import pytest
 
 import repro
-from repro.api.result import FitResult, TupleFitResult
-from repro.kernels import ops as kops
+from repro.api.result import FitResult
 from repro.core import baselines, bwkm
 from repro.data import chunks as ck
 from repro.distributed import dist_bwkm
@@ -194,124 +193,70 @@ def test_config_level_init_sample_size():
     assert m.result_.stop_reason
 
 
-# --------------------------------------------------------- deprecation shims
-def test_deprecated_fit_entry_points_still_work_and_warn():
-    from repro import _warnings
+# ----------------------------------------------- deprecation shims: removed
+def test_pr2_deprecation_shims_are_gone():
+    """ISSUE 10 satellite: the one-release migration window for the legacy
+    ``fit()`` entry points and the ``TupleFitResult`` tuple shim is over —
+    the names must no longer exist, and the modern entry points must NOT
+    emit DeprecationWarnings."""
+    import repro.api.result as api_result
 
-    _warnings.reset()  # the shims warn once per process; make them fresh
+    assert not hasattr(bwkm, "fit")
+    assert not hasattr(stream_bwkm, "fit")
+    assert not hasattr(dist_bwkm, "fit")
+    assert "fit" not in bwkm.__all__
+    assert "fit" not in dist_bwkm.__all__
+    assert not hasattr(api_result, "TupleFitResult")
+
     x = jnp.asarray(_points(seed=6, n=1200))
     cfg = bwkm.BWKMConfig(k=3, max_iters=2)
-    with pytest.warns(DeprecationWarning, match="core.bwkm.fit is deprecated"):
-        res = bwkm.fit(jax.random.PRNGKey(0), x, cfg)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        res = bwkm.fit_incore(jax.random.PRNGKey(0), x, cfg)
     assert res.centroids.shape == (3, 3)
-
-    src = ck.ArrayChunkSource(np.asarray(x), 512)
-    with pytest.warns(DeprecationWarning, match="stream_bwkm.fit is deprecated"):
-        res = stream_bwkm.fit(jax.random.PRNGKey(0), src, cfg, init_sample_size=256)
-    assert res.stream.passes >= 2
-
-    with pytest.warns(DeprecationWarning, match="dist_bwkm.fit is deprecated"):
-        res = dist_bwkm.fit(jax.random.PRNGKey(0), x, cfg)
-    assert res.centroids.shape == (3, 3)
+    assert not [w for w in caught if issubclass(w.category, DeprecationWarning)]
 
 
-def test_deprecated_fit_shims_warn_once_per_process():
-    """ISSUE 4 satellite: a repeated-fit loop over a shim emits ONE warning
-    (per process), with the stacklevel pointing at the caller, regardless of
-    the active warning filter."""
+def test_warn_once_helper_contract():
+    """The once-per-process helper the shims used survives (seed_centroids
+    and the facade still warn through it): ONE emission per key regardless
+    of the active filter, stacklevel pointing at the caller, reset re-arms."""
     from repro import _warnings
 
-    x = jnp.asarray(_points(seed=6, n=600))
-    cfg = bwkm.BWKMConfig(k=3, max_iters=1)
-    _warnings.reset("core.bwkm.fit")
+    key = "test_api.warn_once_contract"
+
+    def shim():  # stands in for a deprecated entry point
+        _warnings.warn_once(key, "test_api warn-once probe", stacklevel=2)
+
+    _warnings.reset(key)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")  # the filter that exposes per-call spam
         for _ in range(3):
-            bwkm.fit(jax.random.PRNGKey(0), x, cfg)
+            shim()
     dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
-           and "core.bwkm.fit" in str(w.message)]
+           and "warn-once probe" in str(w.message)]
     assert len(dep) == 1, [str(w.message) for w in caught]
-    # stacklevel: the warning is attributed to THIS file, not the shim/helper
+    # stacklevel: the warning is attributed to shim()'s caller — THIS file
     assert dep[0].filename == __file__
 
-    # reset() re-arms it (the hook this very test relies on)
-    _warnings.reset("core.bwkm.fit")
+    # reset() re-arms it (the hook tests rely on)
+    _warnings.reset(key)
     with warnings.catch_warnings(record=True) as caught:
         warnings.simplefilter("always")
-        bwkm.fit(jax.random.PRNGKey(0), x, cfg)
+        shim()
     assert sum(
-        "core.bwkm.fit" in str(w.message) for w in caught
+        "warn-once probe" in str(w.message) for w in caught
         if issubclass(w.category, DeprecationWarning)
     ) == 1
 
 
-def test_baselines_return_unified_schema_with_tuple_shim():
+def test_baselines_return_unified_schema():
     x = jnp.asarray(_points(seed=7, n=1500))
     res = baselines.kmeanspp_kmeans(jax.random.PRNGKey(0), x, 3, max_iters=5)
-    assert isinstance(res, TupleFitResult)
+    assert isinstance(res, FitResult)
     assert res.engine == "baseline:kmeans++"
     assert res.stop_reason in ("converged", "max-iters")
     assert res.iterations >= 1
-
-    with pytest.warns(DeprecationWarning, match="tuple access"):
-        c, d = res
-    assert c is res.centroids and d == res.distances
-    with pytest.warns(DeprecationWarning, match="tuple access"):
-        assert res[0] is res.centroids
-
-
-# ---------------------------------------- engine × init × kernel-impl matrix
-@pytest.fixture
-def _restore_kernel_impl():
-    yield
-    kops.set_default_impl("auto")
-
-
-@pytest.mark.parametrize("impl", ["ref", "pallas"])
-@pytest.mark.parametrize("init", ["kmeans++", "forgy", "kmeans||"])
-def test_engine_matrix_agrees_under_every_kernel_impl(
-    impl, init, _restore_kernel_impl
-):
-    """ISSUE 3 satellite: fit_incore/fit_streaming/fit_distributed agreement
-    must hold under the fused Pallas kernel (interpret mode on CPU) exactly
-    as under the jnp oracle — same well-separated optimum for every cell of
-    the engine × init × impl matrix. ``weighted_lloyd``/the chunk programs
-    key their jit caches on the resolved impl, so flipping the session
-    default here exercises real retraces, not stale compilations.
-
-    Data seed chosen so every cell converges to the shared optimum: with
-    random-row inits (forgy) BWKM is seed-dependent on unlucky draws even on
-    well-separated data (k-means local minima — see the verify notes).
-
-    ISSUE 4 acceptance rides the same matrix: every cell is fitted with the
-    drift-bound pruned Lloyd ON and OFF, and the two fits must agree —
-    same predicted assignments, centroids within 1e-5 — because pruning
-    may change cost, never results (ADR 0004)."""
-    x = _points(seed=13, n=1500)
-    kops.set_default_impl(impl)
-    errors = {}
-    for engine in ENGINES:
-        fits = {}
-        for prune in (True, False):
-            m = repro.BWKM(
-                k=4, engine=engine, init=init, max_iters=4, chunk_size=512,
-                seed=0, prune=prune,
-            ).fit(x)
-            assert m.result_.stop_reason
-            fits[prune] = m
-        np.testing.assert_allclose(
-            np.asarray(fits[True].centroids_),
-            np.asarray(fits[False].centroids_),
-            rtol=0, atol=1e-5, err_msg=f"{impl}/{init}/{engine}",
-        )
-        np.testing.assert_array_equal(
-            fits[True].predict(x), fits[False].predict(x)
-        )
-        assert fits[True].result_.distances <= fits[False].result_.distances * 1.5
-        errors[engine] = error_f64(x, fits[True].centroids_)
-    base = errors["incore"]
-    for engine, err in errors.items():
-        assert abs(err - base) / base < 1e-3, (impl, init, errors)
 
 
 # -------------------------------------------------------------- constructor

@@ -24,6 +24,9 @@ SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 
 
 def test_dist_bwkm_trivial_mesh_matches_quality():
+    """The single cross-plane smoke kept here — the full engine-equivalence
+    matrix (init × prune × impl × faults) lives in
+    tests/test_engine_equivalence.py."""
     x = gmm(jax.random.PRNGKey(0), 8000, 4, 5)
     with sh.use_mesh(make_smoke_mesh()):
         xs = dist_bwkm.shard_points(x)
@@ -118,9 +121,7 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
                                     epsilon=1e-5, prune=False)
     cdiff = float(jnp.abs(ll_p.centroids - ll_d.centroids).max())
     e = float(metrics.kmeans_error(x, res.centroids))
-    res_core = bwkm.fit_incore(jax.random.PRNGKey(1), x, bwkm.BWKMConfig(k=5, max_iters=15))
-    e_core = float(metrics.kmeans_error(x, res_core.centroids))
-    print(json.dumps({"e_dist": e, "e_core": e_core,
+    print(json.dumps({"e_dist": e,
                       "stop": res.stop_reason, "err_step": float(err),
                       "lloyd_cdiff": cdiff, "lloyd_iters": [ll_p.iters, ll_d.iters],
                       "lloyd_dist": [ll_p.distances, ll_d.distances],
@@ -133,7 +134,9 @@ _MULTIDEV_SCRIPT = textwrap.dedent(
 
 def test_dist_bwkm_on_8_fake_devices():
     """Real sharded execution: points over (pod,data), features over model,
-    psum-combined stats; quality must match the single-host run."""
+    psum-combined stats. Cross-plane agreement on 8 fake devices moved to
+    test_engine_equivalence.py; this pins the sharded internals (ADR 0004
+    pruned ≡ dense, ADR 0005 k-means|| on real shards)."""
     r = subprocess.run(
         [sys.executable, "-c", _MULTIDEV_SCRIPT],
         capture_output=True, text=True,
@@ -142,17 +145,15 @@ def test_dist_bwkm_on_8_fake_devices():
     )
     assert r.returncode == 0, r.stderr[-3000:]
     out = json.loads(r.stdout.strip().splitlines()[-1])
-    rel = abs(out["e_dist"] - out["e_core"]) / min(out["e_dist"], out["e_core"])
-    assert rel < 0.05, out
     assert out["stop"] in ("boundary-empty", "max-iters")
     assert out["lloyd_cdiff"] <= 1e-5, out  # pruned ≡ dense on 8 shards
     assert out["lloyd_dist"][0] < out["lloyd_dist"][1], out  # real saving
     # k-means|| on 8 fake devices: the fit converges and the standalone
-    # seeding is sane (ADR 0005 acceptance)
+    # seeding is sane (ADR 0005 acceptance); the two inits share one optimum
     assert out["kmeans_ll_stop"] in ("boundary-empty", "max-iters")
-    rel_ll = abs(out["e_kmeans_ll_fit"] - out["e_core"]) / out["e_core"]
+    rel_ll = abs(out["e_kmeans_ll_fit"] - out["e_dist"]) / out["e_dist"]
     assert rel_ll < 0.05, out
-    assert out["e_kmeans_ll_seed"] < 10 * out["e_core"], out
+    assert out["e_kmeans_ll_seed"] < 10 * out["e_dist"], out
 
 
 def test_checkpoint_roundtrip_and_elastic_restore(tmp_path):

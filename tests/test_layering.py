@@ -1,0 +1,54 @@
+"""Import-layering contract (ADR 0010): the engine package sits below the
+facades, and core never reaches sideways into an engine. The checker is
+``tools/check_layering.py`` (also a CI lint step); these tests keep the
+tree clean AND keep the checker itself honest."""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_layering  # noqa: E402
+
+
+def test_tree_has_no_layering_violations():
+    assert check_layering.check_tree(REPO / "src") == []
+
+
+def test_engine_importing_api_is_flagged():
+    tree = ast.parse("from repro.api.result import FitResult\n")
+    vio = check_layering.check_module("repro.engine.driver", tree)
+    assert len(vio) == 1 and vio[0][1].startswith("repro.api.result")
+
+
+def test_engine_importing_streaming_facade_is_flagged():
+    tree = ast.parse("from repro.streaming import stream_bwkm\n")
+    assert check_layering.check_module("repro.engine.streaming", tree)
+
+
+def test_engine_may_import_sharding_but_not_dist_entry_points():
+    ok = ast.parse("from repro.distributed import sharding as sh\n")
+    assert check_layering.check_module("repro.engine.sharded", ok) == []
+    bad = ast.parse("from repro.distributed import dist_bwkm\n")
+    assert check_layering.check_module("repro.engine.sharded", bad)
+
+
+def test_core_importing_engine_at_module_level_is_flagged():
+    tree = ast.parse("from repro.engine import driver\n")
+    assert check_layering.check_module("repro.core.bwkm", tree)
+
+
+def test_core_api_result_exception_and_lazy_imports_pass():
+    # the one sanctioned core -> api reference (result.py imports nothing
+    # from repro), and the lazy-import escape hatch inside a function body
+    tree = ast.parse(
+        "from repro.api.result import FitResult\n"
+        "def fit():\n"
+        "    from repro.engine import driver\n"
+        "    return driver\n"
+    )
+    assert check_layering.check_module("repro.core.baselines", tree) == []
